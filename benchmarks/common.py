@@ -1,0 +1,75 @@
+"""Shared benchmark utilities: timing, CSV emission, tiny-train harness."""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+
+def emit(bench: str, name: str, us_per_call, derived: str = "") -> None:
+    us = "" if us_per_call is None else f"{us_per_call:.2f}"
+    print(f"{bench},{name},{us},{derived}", flush=True)
+
+
+def median_time_us(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall time of a jitted call (paper §3.1 methodology: median to
+    kill outliers; fewer iters than the paper's 1000 — CPU container)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def tiny_train(cfg, steps: int, *, seed: int = 0, lr: float = 2e-3,
+               global_batch: int = 8, seq_len: int = 64):
+    """Train a smoke-scale model; returns (model, state, losses)."""
+    from repro.configs.base import TrainConfig
+    from repro.data import SyntheticLM
+    from repro.models import build_model
+    from repro.train import train_loop
+
+    model = build_model(cfg)
+    tcfg = TrainConfig(total_steps=steps, warmup_steps=max(2, steps // 20),
+                       learning_rate=lr, checkpoint_every=10**9, seed=seed)
+    data = SyntheticLM(cfg, global_batch=global_batch, seq_len=seq_len, seed=seed)
+    state, rep = train_loop(model, tcfg, data, ckpt_dir=None, log_every=10**9,
+                            log_fn=lambda *a: None)
+    return model, state, rep.losses
+
+
+def with_slope(cfg, **kw):
+    return cfg.replace(slope=dataclasses.replace(cfg.slope, **kw))
+
+
+def dryrun_cell(arch: str, shape: str, mesh: str = "single",
+                variant: str = "base", *, reuse: bool = True) -> dict:
+    """Run one dry-run cell in a subprocess (the 512-device XLA flag must be
+    set before jax initializes) and return its JSON artifact."""
+    import json
+    import os
+    import subprocess
+
+    out = os.path.join("experiments", "dryrun")
+    fname = os.path.join(out, f"{arch}__{shape}__{mesh}__{variant}.json")
+    if not (reuse and os.path.exists(fname)):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src"
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+             "--shape", shape, "--mesh", mesh, "--variant", variant],
+            capture_output=True, text=True, env=env, timeout=1800)
+        if r.returncode != 0:
+            raise RuntimeError(f"dryrun failed for {arch}/{shape}/{mesh}/{variant}:"
+                               f"\n{r.stdout}\n{r.stderr}")
+    with open(fname) as f:
+        return json.load(f)

@@ -1,0 +1,118 @@
+"""§Perf hillclimbing driver: run the chosen cells through variants, log
+hypothesis → change → before → after per EXPERIMENTS.md §Perf.
+
+Cells (picked from the baseline §Roofline table):
+  1. qwen2-72b × train_4k   — worst roofline fraction + doesn't fit HBM;
+     the paper's core training-speed target.
+  2. moonshot-v1-16b-a3b × train_4k — most collective-bound (EP dispatch).
+  3. qwen2-72b × decode_32k — most representative of the paper's inference
+     claim (bandwidth-bound serving, compressed weights).
+
+Each iteration is a REAL re-lower + re-compile + re-analysis (subprocess
+dry-run); the flash-attention adjustment additionally lowers the attention
+block standalone to measure the score-tensor traffic that the Pallas kernel
+(kernels/flash_attention.py, validated in interpret mode) keeps in VMEM.
+"""
+from __future__ import annotations
+
+import json
+
+from .common import dryrun_cell, emit
+
+
+def _terms(d):
+    r = d["roofline"]
+    return r["compute_s"], r["memory_s"], r["collective_s"], r["bottleneck"]
+
+
+def _fmt(d):
+    c, m, coll, b = _terms(d)
+    mem = d.get("memory_analysis", {})
+    gb = ((mem.get("argument_size_in_bytes") or 0)
+          + (mem.get("temp_size_in_bytes") or 0)) / 1e9
+    return f"c={c:.3f}s m={m:.3f}s coll={coll:.3f}s dom={b} hbm={gb:.1f}GB"
+
+
+def attention_flash_delta(arch: str, shape: str) -> dict:
+    """Per-device HBM bytes the flash kernel removes from one attention call:
+    lower the model's chunked attention standalone at per-device shapes and
+    compare with the kernel's ideal q+k+v+o traffic."""
+    import subprocess
+    import sys
+    import os
+
+    code = f"""
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, json
+from repro.models.attention import chunked_attention
+from repro.roofline.hlo_parse import analyze_hlo
+from repro.configs import get_config
+from repro.configs.base import shape_by_name
+
+cfg = get_config("{arch}")
+shp = shape_by_name("{shape}")
+dp, tp = 16, 16
+b = max(shp.global_batch // dp, 1)
+s = shp.seq_len
+kvh = cfg.num_kv_heads
+grp = max(cfg.num_heads // tp, 1) // max(kvh // kvh, 1)
+grp = max(cfg.num_heads // cfg.num_kv_heads, 1)
+kvh_loc = max(cfg.num_kv_heads, 1)
+dh = cfg.resolved_head_dim
+# per-device q heads = num_heads/tp; keep kvh, shrink grp accordingly
+grp_loc = max(cfg.num_heads // tp // kvh_loc, 1)
+q = jax.ShapeDtypeStruct((b, s, kvh_loc, grp_loc, dh), jnp.bfloat16)
+k = jax.ShapeDtypeStruct((b, s, kvh_loc, dh), jnp.bfloat16)
+v = jax.ShapeDtypeStruct((b, s, kvh_loc, dh), jnp.bfloat16)
+pos = jax.ShapeDtypeStruct((s,), jnp.int32)
+f = jax.jit(lambda q,k,v,p: chunked_attention(q,k,v,p,p, causal=True,
+            window=cfg.window if cfg.attention=="swa" else 0))
+cost = analyze_hlo(f.lower(q,k,v,pos).compile().as_text())
+elems = lambda sh: 1 if not sh.shape else __import__("math").prod(sh.shape)
+ideal = 2 * (elems(q) + elems(k) + elems(v) + elems(q))  # bf16 q,k,v,o
+print(json.dumps(dict(xla_bytes=cost.bytes_accessed, ideal_bytes=ideal,
+                      flops=cost.flops)))
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=1200)
+    if r.returncode != 0:
+        raise RuntimeError(r.stdout + r.stderr)
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def main(fast: bool = True):
+    # --- Cell 1+2: training hillclimb -------------------------------------
+    for arch in (["qwen2-72b"] if fast else ["qwen2-72b", "moonshot-v1-16b-a3b"]):
+        base = dryrun_cell(arch, "train_4k", "single", "base")
+        emit("perf", f"{arch}/train_4k/base", None, _fmt(base))
+        z1 = dryrun_cell(arch, "train_4k", "single", "zero1")
+        emit("perf", f"{arch}/train_4k/zero1", None, _fmt(z1))
+        z1mb = dryrun_cell(arch, "train_4k", "single", "zero1+mb4")
+        emit("perf", f"{arch}/train_4k/zero1+mb4", None, _fmt(z1mb))
+        za = dryrun_cell(arch, "train_4k", "single", "zero1+attn")
+        emit("perf", f"{arch}/train_4k/zero1+attn", None, _fmt(za))
+        if not fast:
+            zs = dryrun_cell(arch, "train_4k", "single", "zero1+attn+sp")
+            emit("perf", f"{arch}/train_4k/zero1+attn+sp (refuted)", None, _fmt(zs))
+
+    # --- Cell 3: decode hillclimb ------------------------------------------
+    d_base = dryrun_cell("qwen2-72b", "decode_32k", "single", "base")
+    emit("perf", "qwen2-72b/decode_32k/base(seq-sharded-kv)", None, _fmt(d_base))
+    d_heads = dryrun_cell("qwen2-72b", "decode_32k", "single", "kvheads")
+    emit("perf", "qwen2-72b/decode_32k/kvheads", None, _fmt(d_heads))
+    d_dense = dryrun_cell("qwen2-72b", "decode_32k", "single", "dense")
+    emit("perf", "qwen2-72b/decode_32k/dense-weights", None, _fmt(d_dense))
+
+    # --- flash-attention adjustment (prefill/train attention traffic) ------
+    if not fast:
+        fa = attention_flash_delta("qwen2-72b", "prefill_32k")
+        emit("perf", "flash_adjustment/qwen2-72b/prefill_32k", None,
+             f"xla_attn_bytes={fa['xla_bytes']:.3e} "
+             f"kernel_ideal_bytes={fa['ideal_bytes']:.3e} "
+             f"reduction={fa['xla_bytes']/max(fa['ideal_bytes'],1):.1f}x per layer")
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,62 @@
+"""§Roofline table: aggregate every dry-run artifact into the per-(arch ×
+shape × mesh) three-term table (EXPERIMENTS.md §Roofline reads this)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+DRYRUN_DIR = os.path.join("experiments", "dryrun")
+
+
+def load_cells(variant: str = "base"):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{variant}.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def row(d: dict) -> str:
+    r = d["roofline"]
+    mem = d.get("memory_analysis", {})
+    args_gb = (mem.get("argument_size_in_bytes") or 0) / 1e9
+    temp_gb = (mem.get("temp_size_in_bytes") or 0) / 1e9
+    fits = (args_gb + temp_gb) <= 16.0
+    return (f"compute={r['compute_s']:.4g}s memory={r['memory_s']:.4g}s "
+            f"collective={r['collective_s']:.4g}s bottleneck={r['bottleneck']} "
+            f"model/hlo_flops={r['useful_flop_ratio']:.3f} "
+            f"hbm={args_gb + temp_gb:.1f}GB fits16GB={fits}")
+
+
+def main(fast: bool = True, variant: str = "base"):
+    cells = load_cells(variant)
+    for d in cells:
+        emit("roofline", f"{d['arch']}/{d['shape']}/{d['mesh']}", None, row(d))
+    if not cells:
+        emit("roofline", "NO_ARTIFACTS", None,
+             "run `python -m repro.launch.dryrun --all` first")
+
+
+def markdown_table(variant: str = "base", mesh: str = "single") -> str:
+    lines = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+             "bottleneck | MODEL/HLO | HBM GB | fits |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for d in load_cells(variant):
+        if d["mesh"] != mesh:
+            continue
+        r = d["roofline"]
+        mem = d.get("memory_analysis", {})
+        gb = ((mem.get("argument_size_in_bytes") or 0)
+              + (mem.get("temp_size_in_bytes") or 0)) / 1e9
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {r['compute_s']:.4g} | "
+            f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | {r['bottleneck']} | "
+            f"{r['useful_flop_ratio']:.3f} | {gb:.1f} | {'✅' if gb <= 16 else '❌'} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    main(fast=False)

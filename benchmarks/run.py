@@ -1,0 +1,60 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``bench,name,us_per_call,derived`` CSV rows. ``--full`` runs the
+longer configurations (more steps, more archs); default is the fast pass
+used by CI / bench_output.txt.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names (e.g. table2,fig2)")
+    args = ap.parse_args()
+    fast = not args.full
+
+    from . import (appj_prune_target, fig2_convergence, lemma21_density,
+                   perf_iterations, roofline_table, table2_speedup,
+                   table3_memory, table45_adapters, table6_mixed_sparsity)
+
+    benches = {
+        "lemma21": lemma21_density.main,
+        "table3": table3_memory.main,
+        "table2": table2_speedup.main,
+        "fig2": fig2_convergence.main,
+        "table45": table45_adapters.main,
+        "table6": table6_mixed_sparsity.main,
+        "appj": appj_prune_target.main,
+        "roofline": roofline_table.main,
+        "perf": perf_iterations.main,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        benches = {k: v for k, v in benches.items() if k in keep}
+
+    print("bench,name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches.items():
+        t0 = time.time()
+        try:
+            fn(fast=fast)
+            print(f"{name},__status__,,ok ({time.time()-t0:.0f}s)", flush=True)
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},__status__,,FAILED: {type(e).__name__}: {e}", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

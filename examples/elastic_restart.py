@@ -1,0 +1,73 @@
+"""Fault-tolerance demo: crash mid-training, resume; then shrink the fleet
+and keep training on fewer devices (elastic restart).
+
+Runs itself in subprocesses with 8 fake devices:
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import os
+import subprocess
+import sys
+import tempfile
+
+CHILD = r"""
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_smoke_config
+from repro.configs.base import TrainConfig
+from repro.data import SyntheticLM
+from repro.ft import latest_step, restore_checkpoint, save_checkpoint
+from repro.models import build_model
+from repro.sharding.specs import param_specs, batch_specs, named_shardings
+from repro.train import init_train_state, make_train_step
+
+phase, ndev_used, ckpt = sys.argv[1], int(sys.argv[2]), sys.argv[3]
+cfg = get_smoke_config("gpt2-small")
+model = build_model(cfg)
+tcfg = TrainConfig(total_steps=40, warmup_steps=2, learning_rate=1e-3)
+data = SyntheticLM(cfg, global_batch=8, seq_len=32, seed=0)
+devs = jax.devices()[:ndev_used]
+mesh = jax.make_mesh((ndev_used // 2, 2), ("data", "model"), devices=devs)
+state = init_train_state(model, jax.random.PRNGKey(0))
+start = 0
+with mesh:
+    shardings = named_shardings(param_specs(state, mesh), mesh)
+    if latest_step(ckpt) is not None:
+        state, start = restore_checkpoint(ckpt, state, shardings=shardings)
+        print(f"[{phase}] resumed step {start} onto {ndev_used} devices")
+    else:
+        state = jax.device_put(state, shardings)
+    step_fn = jax.jit(make_train_step(model, tcfg),
+                      in_shardings=(shardings, None), out_shardings=(shardings, None))
+    for t in range(start, start + 10):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(t).items()}
+        state, m = step_fn(state, batch)
+    print(f"[{phase}] devices={ndev_used} steps {start}->{start+10} "
+          f"loss={float(m['loss']):.4f}")
+    save_checkpoint(ckpt, jax.device_get(state), step=start + 10)
+"""
+
+
+def run(phase, ndev, ckpt):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "-c", CHILD, phase, str(ndev), ckpt],
+                       env=env, capture_output=True, text=True, timeout=900)
+    print(r.stdout, end="")
+    if r.returncode != 0:
+        print(r.stderr)
+        raise SystemExit(1)
+
+
+def main():
+    with tempfile.TemporaryDirectory() as ckpt:
+        run("start:8dev", 8, ckpt)          # healthy fleet
+        run("resume:8dev", 8, ckpt)         # crash + same-size restart
+        run("elastic:4dev", 4, ckpt)        # half the fleet died → re-mesh
+        run("recovered:8dev", 8, ckpt)      # capacity restored
+    print("elastic restart demo OK")
+
+
+if __name__ == "__main__":
+    main()

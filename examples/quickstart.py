@@ -1,0 +1,54 @@
+"""Quickstart: pretrain a tiny SLoPe model, inspect the sparse math, serve it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.configs.base import TrainConfig
+from repro.core import expected_extra_sparsity
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.serve import ServeEngine
+from repro.train import train_loop
+
+
+def main():
+    # 1. A GPT2-family config with 2:4 SLoPe + rank-8 lazy adapters in the
+    #    final 20% of steps (the paper uses 1%; 20% shows the phase flip here).
+    cfg = get_smoke_config("gpt2-small")
+    cfg = cfg.replace(slope=dataclasses.replace(cfg.slope, adapter_rank=8,
+                                                lazy_fraction=0.2))
+    print(f"double-pruning 2:4 adds {expected_extra_sparsity(2, 4):.2%} extra "
+          "zeros in the backward pass (Lemma 2.1) — and still converges:")
+
+    model = build_model(cfg)
+    tcfg = TrainConfig(total_steps=60, warmup_steps=5, learning_rate=2e-3,
+                       checkpoint_every=10**9)
+    data = SyntheticLM(cfg, global_batch=8, seq_len=64, seed=0)
+    state, report = train_loop(model, tcfg, data, log_every=20)
+    print(f"loss {report.losses[0]:.3f} → {report.losses[-1]:.3f}; "
+          f"adapters added at step {report.phase2_at}")
+
+    # 2. The static-mask invariant: packed index metadata is bit-identical
+    #    before/after training (no mask search, ever — SLoPe's perf argument).
+    n_uint8 = sum(x.size for x in jax.tree_util.tree_leaves(state.params)
+                  if hasattr(x, "dtype") and x.dtype == jnp.uint8)
+    print(f"{n_uint8} bytes of static N:M metadata (indices + rc bitmaps)")
+
+    # 3. Serve the phase-2 model (sparse weights + low-rank adapters).
+    eng = ServeEngine(model, state.params, cache_len=128)
+    outs = eng.generate([[5, 6, 7], [9, 10, 11, 12]], max_new_tokens=8)
+    print("generations:", outs)
+
+
+if __name__ == "__main__":
+    main()

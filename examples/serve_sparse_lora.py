@@ -1,0 +1,60 @@
+"""Batched serving with the fused sparse+LoRA path (paper §2.4 / Eq. 11).
+
+Loads a phase-2 SLoPe model (sparse weights + low-rank adapters), serves a
+ragged batch of prompts with chunked prefill + per-request decode, and
+cross-checks the fused kernel math against the unfused reference.
+
+    PYTHONPATH=src python examples/serve_sparse_lora.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.sparse import compress
+from repro.core.slope_linear import init_slope_weights
+from repro.core.adapters import init_adapter, slope_lora_linear
+from repro.kernels import sparse_lora_matmul
+from repro.models import build_model
+from repro.serve import ServeEngine
+from repro.train import add_lazy_adapters, init_train_state
+
+
+def main():
+    # 1. Fused kernel == unfused math (what the TPU serving path executes).
+    key = jax.random.PRNGKey(0)
+    sw = init_slope_weights(key, 128, 256, 2, 4)
+    ad = init_adapter(jax.random.PRNGKey(1), 128, 256, 16)
+    ad = ad._replace(l=jax.random.normal(jax.random.PRNGKey(2), ad.l.shape) * 0.05)
+    x = jax.random.normal(jax.random.PRNGKey(3), (32, 256))
+    c = compress(sw.w, sw.mask_r.astype(bool), 2, 4)
+    y_fused = sparse_lora_matmul(x, c.values, c.indices, ad.l, ad.r, n=2, m=4,
+                                 backend="pallas_interpret")
+    y_ref = slope_lora_linear(sw, ad, x)
+    err = float(jnp.abs(y_fused - y_ref).max())
+    print(f"fused sparse+LoRA kernel vs reference: max |Δ| = {err:.2e}")
+
+    # 2. Serve a ragged batch from a phase-2 model.
+    cfg = get_smoke_config("gpt2-small")
+    cfg = cfg.replace(slope=dataclasses.replace(cfg.slope, adapter_rank=8))
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    state = add_lazy_adapters(model, state, jax.random.PRNGKey(7), 8)
+    eng = ServeEngine(model, state.params, cache_len=128, prefill_chunk=16)
+    prompts = [[5, 6, 7], [9, 10, 11, 12, 13, 14, 15, 16, 17], [3]]
+    outs = eng.generate(prompts, max_new_tokens=12)
+    for p, o in zip(prompts, outs):
+        print(f"prompt_len={len(p):2d} → {o}")
+    # ragged-batch correctness: each request independent of its neighbors
+    singles = [eng.generate([p], max_new_tokens=12)[0] for p in prompts]
+    print("batched == singles:", outs == singles)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro — production-grade JAX framework reproducing SLoPe (ICLR 2025):
+double-pruned N:M sparse + lazy low-rank adapter pretraining of LLMs."""
+
+__version__ = "1.0.0"

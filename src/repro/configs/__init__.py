@@ -1,0 +1,52 @@
+"""Architecture registry: ``get_config(name)`` / ``--arch <id>``.
+
+Every assigned architecture (plus the paper's own GPT2 configs) registers a
+full-size ``ModelConfig`` and a reduced ``smoke`` variant for CPU tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+from .base import InputShape, LM_SHAPES, ModelConfig, SlopeConfig, TrainConfig, shape_by_name
+
+_ARCHS = {
+    "xlstm-125m": "xlstm_125m",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "qwen2-72b": "qwen2_72b",
+    "minitron-8b": "minitron_8b",
+    "yi-6b": "yi_6b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "whisper-tiny": "whisper_tiny",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "gpt2-small": "gpt2_small",
+    "gpt2-large": "gpt2_large",
+}
+
+ARCH_NAMES = tuple(n for n in _ARCHS if not n.startswith("gpt2"))
+ALL_NAMES = tuple(_ARCHS)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCHS[name]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_ARCHS[name]}")
+    return mod.SMOKE
+
+
+def applicable_shapes(cfg: ModelConfig) -> list[InputShape]:
+    """Which of the assigned shapes run for this arch (skips per DESIGN.md)."""
+    out = []
+    for s in LM_SHAPES:
+        if s.name == "long_500k" and not cfg.subquadratic:
+            continue  # full-attention archs: 500k KV cache out of scope
+        if s.name == "long_500k" and cfg.is_encoder_decoder:
+            continue  # whisper decoder max positions ≪ 500k
+        out.append(s)
+    return out

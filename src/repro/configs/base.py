@@ -1,0 +1,125 @@
+"""Config dataclasses + input-shape registry for the assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class SlopeConfig:
+    """SLoPe sparsity settings (paper §2)."""
+
+    enabled: bool = True
+    n: int = 2
+    m: int = 4
+    representation: str = "compressed"     # "compressed" | "dense_masked" | "srste" | "dense"
+    mask_init: str = "random"              # "random" | "magnitude"
+    adapter_rank: int = 0                  # 0 → no low-rank adapters
+    lazy_fraction: float = 0.01            # adapters exist only in the final 1%
+    prune_attention: bool = True           # paper prunes attn + MLP
+    prune_mlp: bool = True
+    first_layer_dense: bool = True         # paper: first linear + heads stay dense
+    srste_decay: float = 6e-6
+    # Mixed N:M (paper Table 6): optional (n, m) for the last half of blocks.
+    tail_nm: tuple[int, int] | None = None
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One assigned architecture. Families: dense | moe | ssm | hybrid | vlm | audio."""
+
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                      # 0 → d_model // num_heads
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    # --- attention flavor ---
+    attention: str = "full"                # "full" | "swa"
+    window: int = 0                        # SWA / local-attention window
+    qkv_bias: bool = False
+    # --- layer pattern (cycled): "attn" | "recurrent" | "mlstm" | "slstm" ---
+    block_pattern: tuple[str, ...] = ("attn",)
+    # --- norms / activations / positions ---
+    norm: str = "rmsnorm"                  # "rmsnorm" | "layernorm"
+    act: str = "swiglu"                    # "swiglu" | "gelu"
+    pos: str = "rope"                      # "rope" | "learned" | "none"
+    rope_theta: float = 10000.0
+    # --- encoder-decoder (audio) ---
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq: int = 0                   # stub frontend emits this many frames
+    # --- VLM stub ---
+    num_image_tokens: int = 0
+    # --- recurrent (xLSTM / RG-LRU) ---
+    conv_width: int = 4                    # temporal conv in recurrent blocks
+    rglru_d_rnn: int = 0                   # 0 → d_model
+    # --- sparsity ---
+    slope: SlopeConfig = field(default_factory=SlopeConfig)
+    # --- numerics / runtime ---
+    dtype: str = "bfloat16"
+    remat: str = "full"                    # "none" | "full" | "dots"
+    scan_layers: bool = True
+    tie_embeddings: bool = False
+    # long-context capability (drives long_500k applicability)
+    subquadratic: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    """One cell of the assigned shape set."""
+
+    name: str
+    kind: str            # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+LM_SHAPES: tuple[InputShape, ...] = (
+    InputShape("train_4k", "train", 4_096, 256),
+    InputShape("prefill_32k", "prefill", 32_768, 32),
+    InputShape("decode_32k", "decode", 32_768, 128),
+    InputShape("long_500k", "decode", 524_288, 1),
+)
+
+
+def shape_by_name(name: str) -> InputShape:
+    for s in LM_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Training-run hyperparameters (paper Alg. 1 + standard LLM settings)."""
+
+    total_steps: int = 1000
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    microbatches: int = 1                  # gradient accumulation
+    seed: int = 0
+    # distributed-optimization tricks
+    grad_compression: str = "none"         # "none" | "int8_ef"
+    # fault tolerance
+    checkpoint_every: int = 200
+    keep_checkpoints: int = 3
+    straggler_slow_factor: float = 3.0     # watchdog threshold vs median step

@@ -1,0 +1,23 @@
+"""gpt2-large — the paper's 774M quality-evaluation model (§3.2)."""
+from .base import ModelConfig, SlopeConfig
+
+CONFIG = ModelConfig(
+    name="gpt2-large",
+    family="dense",
+    num_layers=36,
+    d_model=1280,
+    num_heads=20,
+    num_kv_heads=20,
+    d_ff=5120,
+    vocab_size=50304,
+    pos="learned",
+    norm="layernorm",
+    act="gelu",
+    subquadratic=False,
+    slope=SlopeConfig(),
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+    vocab_size=256, dtype="float32",
+)

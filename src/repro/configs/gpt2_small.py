@@ -1,0 +1,28 @@
+"""gpt2-small — the paper's own quality-evaluation model (§3.2).
+
+12L d_model=768 12H d_ff=3072 vocab=50304 (padded to %128), learned
+positions, layernorm, gelu — matching the FlashAttention GPT codebase the
+paper uses. Used by the Fig-2 / Table-4 convergence benchmarks.
+"""
+from .base import ModelConfig, SlopeConfig
+
+CONFIG = ModelConfig(
+    name="gpt2-small",
+    family="dense",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    d_ff=3072,
+    vocab_size=50304,
+    pos="learned",
+    norm="layernorm",
+    act="gelu",
+    subquadratic=False,
+    slope=SlopeConfig(),
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+    vocab_size=256, dtype="float32",
+)

@@ -1,0 +1,31 @@
+"""llava-next-mistral-7b [vlm] — anyres tiling (hf:llava-hf/llava-v1.6-mistral-7b-hf).
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000. The transformer
+BACKBONE only: the vision tower + anyres tile packing is a STUB —
+``input_specs()`` supplies precomputed patch embeddings (b, 576, d) that are
+prepended to the token embeddings (labels masked over image positions).
+"""
+from .base import ModelConfig, SlopeConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    num_image_tokens=576,
+    pos="rope",
+    norm="rmsnorm",
+    act="swiglu",
+    rope_theta=1_000_000.0,
+    subquadratic=False,
+    slope=SlopeConfig(),
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=256, num_image_tokens=8, dtype="float32",
+)

@@ -1,0 +1,28 @@
+"""minitron-8b [dense] — width-pruned Nemotron-4 (arXiv:2407.14679; hf).
+
+32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000. Nemotron uses a
+squared-ReLU 2-matrix MLP; we map it to the gelu 2-matrix MLP path (same
+GEMM shapes — noted in DESIGN.md hardware-adaptation table).
+"""
+from .base import ModelConfig, SlopeConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=256000,
+    pos="rope",
+    norm="layernorm",
+    act="gelu",
+    subquadratic=False,
+    slope=SlopeConfig(),
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=256, dtype="float32",
+)

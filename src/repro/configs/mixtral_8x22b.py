@@ -1,0 +1,34 @@
+"""mixtral-8x22b [moe] — 8 experts top-2, SWA (arXiv:2401.04088; hf).
+
+56L d_model=6144 48H (GQA kv=8) d_ff=16384 (per expert) vocab=32768.
+SWA window 4096 ⇒ rolling KV cache ⇒ subquadratic decode (long_500k runs).
+EP note: 8 experts don't divide the 16-way model axis → TP-within-expert
+(d_ff sharded); see sharding/specs.py.
+"""
+from .base import ModelConfig, SlopeConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=32768,
+    num_experts=8,
+    experts_per_token=2,
+    attention="swa",
+    window=4096,
+    pos="rope",
+    norm="rmsnorm",
+    act="swiglu",
+    subquadratic=True,
+    slope=SlopeConfig(),
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=96,
+    vocab_size=256, num_experts=4, experts_per_token=2, window=32,
+    dtype="float32",
+)

@@ -1,0 +1,31 @@
+"""moonshot-v1-16b-a3b [moe] — kimi/moonlight 64e top-6
+(hf:moonshotai/Moonlight-16B-A3B).
+
+48L d_model=2048 16H (kv=16, i.e. MHA) d_ff=1408 (per expert) vocab=163840.
+64 experts divide the 16-way model axis ⇒ full expert parallelism (EP).
+Moonlight's shared expert is omitted (noted in DESIGN.md).
+"""
+from .base import ModelConfig, SlopeConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=163840,
+    num_experts=64,
+    experts_per_token=6,
+    pos="rope",
+    norm="rmsnorm",
+    act="swiglu",
+    subquadratic=False,
+    slope=SlopeConfig(),
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=64,
+    vocab_size=256, num_experts=8, experts_per_token=2, dtype="float32",
+)

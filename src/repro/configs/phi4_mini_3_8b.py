@@ -1,0 +1,26 @@
+"""phi4-mini-3.8b [dense] — RoPE SwiGLU GQA (arXiv:2412.08905).
+
+32L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=200064.
+"""
+from .base import ModelConfig, SlopeConfig
+
+CONFIG = ModelConfig(
+    name="phi4-mini-3.8b",
+    family="dense",
+    num_layers=32,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=200064,
+    pos="rope",
+    norm="rmsnorm",
+    act="swiglu",
+    subquadratic=False,
+    slope=SlopeConfig(),
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=48, num_heads=3, num_kv_heads=1, d_ff=96,
+    vocab_size=256, dtype="float32",
+)

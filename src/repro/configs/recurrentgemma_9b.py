@@ -1,0 +1,35 @@
+"""recurrentgemma-9b [hybrid] — RG-LRU + local attention 1:2
+(arXiv:2402.19427; unverified).
+
+38L d_model=4096 16H (GQA kv=1, MQA) d_ff=12288 vocab=256000.
+Pattern (recurrent, recurrent, attn) cycled over 38 layers; attention layers
+use a 2048-token local window (rolling cache at decode). RG-LRU state is
+O(1) ⇒ subquadratic (long_500k runs).
+"""
+from .base import ModelConfig, SlopeConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256000,
+    block_pattern=("recurrent", "recurrent", "attn"),
+    attention="swa",
+    window=2048,
+    conv_width=4,
+    rglru_d_rnn=4096,
+    pos="rope",
+    norm="rmsnorm",
+    act="swiglu",
+    subquadratic=True,
+    slope=SlopeConfig(),
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=6, d_model=64, num_heads=2, num_kv_heads=1, d_ff=128,
+    vocab_size=256, window=16, rglru_d_rnn=64, dtype="float32",
+)

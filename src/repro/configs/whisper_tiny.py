@@ -1,0 +1,35 @@
+"""whisper-tiny [audio] — enc-dec with conv frontend stub (arXiv:2212.04356).
+
+4L decoder + 4L encoder, d_model=384 6H (kv=6) d_ff=1536 vocab=51865.
+The mel/conv frontend is a STUB: ``input_specs()`` provides post-conv frame
+embeddings (b, 1500, d). Decoder: learned positions, layernorm, gelu,
+self-attn + cross-attn (pattern "xattn"). long_500k is skipped (decoder
+positions ≪ 500k) per DESIGN.md; decode_32k lowers mechanically on the
+backbone as assigned.
+"""
+from .base import ModelConfig, SlopeConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    num_layers=4,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    block_pattern=("xattn",),
+    is_encoder_decoder=True,
+    encoder_layers=4,
+    encoder_seq=1500,
+    pos="learned",
+    norm="layernorm",
+    act="gelu",
+    subquadratic=False,
+    slope=SlopeConfig(),
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, encoder_layers=2, d_model=64, num_heads=2, num_kv_heads=2,
+    d_ff=128, vocab_size=256, encoder_seq=16, dtype="float32",
+)

@@ -1,0 +1,29 @@
+"""xlstm-125m [ssm] — sLSTM + mLSTM blocks (arXiv:2405.04517; unverified).
+
+12L d_model=768 4H d_ff=0 vocab=50304. Alternating (mLSTM, sLSTM) pattern
+(the paper's xLSTM[1:1] mixing); xLSTM blocks carry their own projections so
+d_ff=0 ⇒ no MLP sublayer. Fully recurrent ⇒ subquadratic (long_500k runs).
+"""
+from .base import ModelConfig, SlopeConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    block_pattern=("mlstm", "slstm"),
+    pos="none",
+    norm="rmsnorm",
+    act="swiglu",
+    subquadratic=True,
+    slope=SlopeConfig(),
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=4, d_model=64, num_heads=2, num_kv_heads=2, vocab_size=256,
+    dtype="float32",
+)

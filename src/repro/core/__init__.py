@@ -1,0 +1,31 @@
+"""SLoPe core: static N:M masks, double-pruned backward, lazy LoRA."""
+from .masks import (
+    nm_mask_from_scores,
+    random_nm_mask,
+    magnitude_nm_mask,
+    double_prune_mask,
+    expected_extra_sparsity,
+    density,
+    index_bits_per_group,
+)
+from .sparse import CompressedNM, compress, decompress, compressed_nbytes
+from .slope_linear import (
+    SlopeWeights,
+    init_slope_weights,
+    slope_matmul,
+    slope_linear,
+    srste_linear,
+    CompressedSlope,
+    init_compressed_slope,
+    compressed_slope_matmul,
+    compressed_from_dense_masked,
+)
+from .adapters import (
+    LowRankAdapter,
+    init_adapter,
+    adapter_apply,
+    slope_lora_linear,
+    lazy_start_step,
+    merged_dense,
+)
+from . import metrics

@@ -1,0 +1,72 @@
+"""Lazy low-rank adapters (paper §2.2).
+
+``W_dense ≈ W_sparse + L @ R`` with ``L ∈ R^{d_out×r}``, ``R ∈ R^{r×d_in}``.
+Adapters are introduced only for the final ``lazy_fraction`` (≈1%) of
+pretraining iterations; before that they do not exist in the training graph
+at all (the "lazy" part — phase-1 steps carry zero adapter cost).
+
+Inference fusion (paper Eq. 11, adapted): one wide matmul
+``[Y1|Y2] = X @ [W_s^T | R^T]`` followed by ``Y = Y1 + Y2 @ L^T`` — realized
+on TPU by the fused Pallas kernel in ``kernels/sparse_lora.py`` and by an
+XLA path here.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .slope_linear import SlopeWeights, slope_matmul
+
+__all__ = ["LowRankAdapter", "init_adapter", "adapter_apply", "slope_lora_linear",
+           "lazy_start_step", "merged_dense"]
+
+
+class LowRankAdapter(NamedTuple):
+    l: jax.Array  # (d_out, r)
+    r: jax.Array  # (r, d_in)
+
+
+def init_adapter(key: jax.Array, d_out: int, d_in: int, rank: int, *, dtype=jnp.float32) -> LowRankAdapter:
+    """LoRA-style init: R ~ N(0, 1/d_in), L = 0 → adapters start as identity
+    (no output perturbation at the phase-2 boundary)."""
+    r = (jax.random.normal(key, (rank, d_in)) / jnp.sqrt(d_in)).astype(dtype)
+    l = jnp.zeros((d_out, rank), dtype=dtype)
+    return LowRankAdapter(l, r)
+
+
+def adapter_apply(adapter: LowRankAdapter, x: jax.Array) -> jax.Array:
+    """``x @ (L R)^T = (x @ R^T) @ L^T`` — always the factored order."""
+    return (x @ adapter.r.T) @ adapter.l.T
+
+
+def slope_lora_linear(
+    params: SlopeWeights,
+    adapter: LowRankAdapter,
+    x: jax.Array,
+    *,
+    bias: jax.Array | None = None,
+) -> jax.Array:
+    """Phase-2 layer: sparse matmul + low-rank correction."""
+    y = slope_matmul(x, params.w, params.mask_r, params.mask_rc)
+    y = y + adapter_apply(adapter, x)
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def lazy_start_step(total_steps: int, lazy_fraction: float = 0.01) -> int:
+    """First step at which adapters are trained (final ``lazy_fraction``)."""
+    if not 0.0 <= lazy_fraction <= 1.0:
+        raise ValueError(f"lazy_fraction {lazy_fraction} outside [0, 1]")
+    return int(round(total_steps * (1.0 - lazy_fraction)))
+
+
+def merged_dense(params: SlopeWeights, adapter: LowRankAdapter | None) -> jax.Array:
+    """Materialize ``W_sparse + L R`` (reference/debug only — serving keeps
+    the factored form to preserve the memory savings)."""
+    w = params.w * params.mask_r
+    if adapter is not None:
+        w = w + adapter.l @ adapter.r
+    return w

@@ -1,0 +1,135 @@
+"""N:M sparsity masks — the heart of SLoPe's double-pruned formulation.
+
+Conventions (matching the paper, §2 / Fig. 1):
+  * Weights are ``W ∈ R^{d_out × d_in}``; the forward pass is ``Y = X @ W^T``.
+  * "Row-wise" N:M pruning (``W^R``) keeps at most N nonzeros in every group
+    of M *consecutive elements of a row*, i.e. groups lie along ``d_in`` —
+    the reduction dimension of the forward matmul.
+  * "Double" pruning (``W^{R,C}``) additionally imposes N:M along columns
+    (groups along ``d_out``) on the already row-pruned weight — the reduction
+    dimension of the input-gradient matmul ``∇X = ∇Y @ W^{R,C}``.
+
+Masks are *static*: chosen once at initialization (randomly, per the paper's
+convergence argument — Thm 2.2) and never updated. All functions are pure and
+jit-friendly, but in SLoPe they run exactly once at init.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "nm_mask_from_scores",
+    "random_nm_mask",
+    "magnitude_nm_mask",
+    "double_prune_mask",
+    "expected_extra_sparsity",
+    "density",
+    "index_bits_per_group",
+]
+
+
+def _check_nm(n: int, m: int) -> None:
+    if not (0 < n <= m):
+        raise ValueError(f"invalid N:M sparsity pattern {n}:{m}")
+
+
+def nm_mask_from_scores(scores: jax.Array, n: int, m: int, axis: int) -> jax.Array:
+    """Boolean mask keeping the top-``n`` scores in each group of ``m``
+    consecutive elements along ``axis``.
+
+    Ties are broken toward lower index (stable), matching a deterministic
+    hardware prune. The axis length must be divisible by ``m``.
+    """
+    _check_nm(n, m)
+    axis = axis % scores.ndim
+    size = scores.shape[axis]
+    if size % m != 0:
+        raise ValueError(f"axis size {size} not divisible by M={m}")
+    if n == m:
+        return jnp.ones(scores.shape, dtype=bool)
+    # Move the pruned axis last, reshape into groups of m.
+    perm = [i for i in range(scores.ndim) if i != axis] + [axis]
+    inv_perm = np.argsort(perm)
+    s = jnp.transpose(scores, perm)
+    lead = s.shape[:-1]
+    s = s.reshape(*lead, size // m, m)
+    # Rank within each group; keep ranks < n. argsort of -scores gives
+    # positions ordered best-first; a second argsort recovers per-element rank.
+    order = jnp.argsort(-s, axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    keep = ranks < n
+    keep = keep.reshape(*lead, size)
+    return jnp.transpose(keep, inv_perm)
+
+
+def random_nm_mask(key: jax.Array, shape: tuple[int, ...], n: int, m: int, axis: int) -> jax.Array:
+    """SLoPe's initialization-time mask: every element equally likely to
+    survive (paper §2.1 — at init the location of large weights is arbitrary,
+    and a uniform mask satisfies the Lemma 2.1 / Thm 2.2 assumptions)."""
+    scores = jax.random.uniform(key, shape)
+    return nm_mask_from_scores(scores, n, m, axis)
+
+
+def magnitude_nm_mask(w: jax.Array, n: int, m: int, axis: int) -> jax.Array:
+    """Magnitude-based N:M mask (used by the Wanda-style baseline and for
+    pruning from a dense checkpoint)."""
+    return nm_mask_from_scores(jnp.abs(w), n, m, axis)
+
+
+def double_prune_mask(
+    mask_r: jax.Array,
+    w: jax.Array | None,
+    n: int,
+    m: int,
+    *,
+    row_axis: int = 0,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Compute ``mask_{R,C}`` from a row-pruned mask.
+
+    Applies a second N:M prune along ``row_axis`` (the ``d_out`` axis, i.e.
+    within columns of ``W``) to elements that survived ``mask_r``. Survivors
+    are ranked by |w| when ``w`` is given, or randomly when ``w`` is None
+    (pure-random double prune at init). Already-pruned elements always lose:
+    their score is -inf.
+    """
+    if w is not None:
+        scores = jnp.where(mask_r, jnp.abs(w), -jnp.inf)
+    else:
+        if key is None:
+            raise ValueError("need `key` for random double-pruning when w is None")
+        scores = jnp.where(mask_r, jax.random.uniform(key, mask_r.shape), -1.0)
+    mask_c = nm_mask_from_scores(scores, n, m, row_axis)
+    return jnp.logical_and(mask_r, mask_c)
+
+
+def density(mask: jax.Array) -> jax.Array:
+    """Fraction of nonzero (True) entries."""
+    return jnp.mean(mask.astype(jnp.float32))
+
+
+def expected_extra_sparsity(n: int, m: int) -> float:
+    """Closed form of Lemma 2.1 / Eq. (8): expected density lost when a
+    row-wise N:M pruned random matrix is pruned again column-wise N:M.
+
+        D(A^R) - D(A^{R,C}) = sum_{j=N+1}^{M} C(M,j) s^j (1-s)^{M-j} (j-N)/M
+
+    with s = N/M. E.g. 1:2 → 0.125, 2:4 → 0.09375, 2:8 → ~0.0339.
+    """
+    _check_nm(n, m)
+    s = n / m
+    total = 0.0
+    for j in range(n + 1, m + 1):
+        total += math.comb(m, j) * (s**j) * ((1 - s) ** (m - j)) * (j - n) / m
+    return total
+
+
+def index_bits_per_group(n: int, m: int) -> int:
+    """Eq. (7): bits needed to store nonzero locations of one N:M group."""
+    _check_nm(n, m)
+    return math.ceil(math.log2(math.comb(m, n)))

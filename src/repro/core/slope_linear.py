@@ -1,0 +1,253 @@
+"""SLoPe's double-pruned sparse linear layer (paper Eqs. 4–6, Alg. 1).
+
+The training math, with static masks fixed at init:
+
+    FWD   : Y  = X @ (W ⊙ mask_R)^T            (row-wise N:M on d_in)
+    BWD-2 : ∇X = ∇Y @ (W ⊙ mask_RC)            (double-pruned — N:M on d_out too)
+    BWD-1 : ∇W = (∇Y^T @ X) ⊙ mask_R           (gradient masked to the support)
+
+Implemented as a ``jax.custom_vjp`` so the backward uses the *lossy*
+double-pruned weight exactly as Alg. 1 does (this is the part a plain
+``w * mask`` autodiff would get wrong — autodiff of the forward would use
+``mask_R`` in BWD-2, not ``mask_RC``).
+
+Also provides the baselines the paper compares against:
+  * ``srste_linear`` — Extended SR-STE (dynamic magnitude mask each step +
+    decay term on pruned weights, straight-through estimator).
+  * dense — just don't call these.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .masks import double_prune_mask, magnitude_nm_mask, random_nm_mask
+from .sparse import (
+    compress,
+    decompress_select,
+    group_compress_select,
+    index_bits,
+    pack_bools,
+    pack_indices,
+    unpack_bools,
+    unpack_indices,
+)
+
+__all__ = [
+    "SlopeWeights",
+    "init_slope_weights",
+    "slope_matmul",
+    "slope_linear",
+    "srste_linear",
+    "CompressedSlope",
+    "init_compressed_slope",
+    "compressed_slope_matmul",
+    "compressed_from_dense_masked",
+]
+
+
+class SlopeWeights(NamedTuple):
+    """Parameters + static masks of one SLoPe linear layer.
+
+    ``w`` is stored dense-with-mask in the training graph (XLA path); the
+    compressed representation used by the kernels/serving path is derived via
+    ``core.sparse.compress``. Masks are stored as the weight dtype for cheap
+    multiplies; they are constants (never differentiated, never updated).
+    """
+
+    w: jax.Array        # (d_out, d_in) dense storage; only mask_r support is live
+    mask_r: jax.Array   # (d_out, d_in) row-wise N:M mask (forward)
+    mask_rc: jax.Array  # (d_out, d_in) double-pruned mask (backward-2)
+
+
+def init_slope_weights(
+    key: jax.Array,
+    d_out: int,
+    d_in: int,
+    n: int,
+    m: int,
+    *,
+    dtype=jnp.float32,
+    scale: float | None = None,
+) -> SlopeWeights:
+    """Random init + random static N:M mask (paper §2.1) + double-pruned mask.
+
+    The double prune ranks survivors by |w| (equivalently random at init);
+    using |w| keeps the highest-magnitude path live in BWD-2.
+    """
+    kw, km = jax.random.split(key)
+    if scale is None:
+        scale = (2.0 / (d_in + d_out)) ** 0.5
+    w = (jax.random.normal(kw, (d_out, d_in)) * scale).astype(dtype)
+    mask_r = random_nm_mask(km, (d_out, d_in), n, m, axis=1)
+    mask_rc = double_prune_mask(mask_r, w, n, m, row_axis=0)
+    return SlopeWeights(w * mask_r, mask_r.astype(dtype), mask_rc.astype(dtype))
+
+
+@jax.custom_vjp
+def slope_matmul(x: jax.Array, w: jax.Array, mask_r: jax.Array, mask_rc: jax.Array) -> jax.Array:
+    """``x @ (w*mask_r)^T`` with the double-pruned backward of Eqs. 5–6.
+
+    ``x``: (..., d_in) → (..., d_out). Masks are non-differentiable constants.
+    """
+    return x @ (w * mask_r).T
+
+
+def _slope_matmul_fwd(x, w, mask_r, mask_rc):
+    y = x @ (w * mask_r).T
+    return y, (x, w, mask_r, mask_rc)
+
+
+def _slope_matmul_bwd(res, dy):
+    x, w, mask_r, mask_rc = res
+    # BWD-2: input gradient through the DOUBLE-pruned weight (lossy, Eq. 6).
+    dx = dy @ (w * mask_rc)
+    # BWD-1: weight gradient masked to the static support (Alg. 1 line 13).
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    x2 = x.reshape(-1, x.shape[-1])
+    dw = (dy2.T @ x2) * mask_r
+    return dx, dw, None, None
+
+
+slope_matmul.defvjp(_slope_matmul_fwd, _slope_matmul_bwd)
+
+
+def slope_linear(
+    params: SlopeWeights,
+    x: jax.Array,
+    *,
+    bias: jax.Array | None = None,
+) -> jax.Array:
+    """Apply one SLoPe linear layer. ``x``: (..., d_in) → (..., d_out)."""
+    y = slope_matmul(x, params.w, params.mask_r, params.mask_rc)
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Compressed in-graph representation (the production pjit path).
+#
+# Parameters per layer:
+#   values     (d_out, d_in·N/M)            trainable, the only diff leaf
+#   idx_packed (d_out, d_in·N/M·bits/8)     uint8, static
+#   rc_packed  (d_out, d_in·N/M/8)          uint8 bitmap: which survivors
+#                                           also survive the column prune
+# Total ≈ (N/M)·(16 + bits + 1) bits per dense element — the honest footprint
+# that memory_analysis() and the FSDP all-gather sizes see. Decompression and
+# gradient compression are gather/scatter-free (compare-select), so sharding
+# never induces data-dependent collectives.
+# ---------------------------------------------------------------------------
+
+
+class CompressedSlope(NamedTuple):
+    values: jax.Array      # (d_out, k) trainable
+    idx_packed: jax.Array  # (d_out, k*bits/8) uint8 static
+    rc_packed: jax.Array   # (d_out, ceil(k/8)) uint8 static
+
+
+def compressed_from_dense_masked(params: SlopeWeights, n: int, m: int) -> CompressedSlope:
+    """Convert a DenseMasked layer to the compressed layout (exact)."""
+    c = compress(params.w, params.mask_r.astype(bool), n, m)
+    # rc bitmap: for each kept element, does it survive the double prune?
+    rc_dense = params.mask_rc.astype(bool)
+    rc_on_support = group_compress_select(rc_dense.astype(jnp.float32), c.indices, n, m) > 0.5
+    return CompressedSlope(
+        c.values,
+        pack_indices(c.indices, m),
+        pack_bools(rc_on_support),
+    )
+
+
+def init_compressed_slope(key: jax.Array, d_out: int, d_in: int, n: int, m: int,
+                          *, dtype=jnp.float32, scale: float | None = None) -> CompressedSlope:
+    return compressed_from_dense_masked(
+        init_slope_weights(key, d_out, d_in, n, m, dtype=dtype, scale=scale), n, m)
+
+
+def compressed_slope_matmul(x: jax.Array, params: CompressedSlope, *, n: int, m: int) -> jax.Array:
+    """``x @ W^T`` on the compressed layout with the Eq. 5–6 backward."""
+    k = params.values.shape[-1]
+    return _compressed_core(x, params.values, params.idx_packed, params.rc_packed,
+                            (n, m, k))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _compressed_core(x, values, idx_packed, rc_packed, nmk):
+    n, m, k = nmk
+    idx = unpack_indices(idx_packed, m, k)
+    w = decompress_select(values, idx, n, m)
+    return x @ w.T
+
+
+def _compressed_fwd(x, values, idx_packed, rc_packed, nmk):
+    return _compressed_core(x, values, idx_packed, rc_packed, nmk), (
+        x, values, idx_packed, rc_packed)
+
+
+def _compressed_bwd(nmk, res, dy):
+    x, values, idx_packed, rc_packed = res
+    n, m, k = nmk
+    idx = unpack_indices(idx_packed, m, k)
+    rc = unpack_bools(rc_packed, k)
+    # BWD-2 through the DOUBLE-pruned weight: zero out survivors that lost
+    # the column-wise prune, then decompress.
+    w_rc = decompress_select(jnp.where(rc, values, 0), idx, n, m)
+    dx = dy @ w_rc
+    # BWD-1: dense outer product, then compressed onto the static support
+    # (compare-select, no gather).
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    x2 = x.reshape(-1, x.shape[-1])
+    dw_dense = dy2.T @ x2
+    dvalues = group_compress_select(dw_dense, idx, n, m).astype(values.dtype)
+    return dx, dvalues, None, None
+
+
+_compressed_core.defvjp(_compressed_fwd, _compressed_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Extended SR-STE baseline (paper App. R, Listing 2): dynamic magnitude mask
+# recomputed every step, straight-through gradient + decay on pruned weights.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _srste_matmul(x, w, n_m, decay):
+    n, m = n_m
+    mask = magnitude_nm_mask(w, n, m, axis=1)
+    return x @ jnp.where(mask, w, 0.0).T
+
+
+def _srste_fwd(x, w, n_m, decay):
+    n, m = n_m
+    mask = magnitude_nm_mask(w, n, m, axis=1)
+    ws = jnp.where(mask, w, 0.0)
+    return x @ ws.T, (x, w, mask)
+
+
+def _srste_bwd(n_m, decay, res, dy):
+    x, w, mask = res
+    ws = jnp.where(mask, w, 0.0)
+    dx = dy @ ws
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    x2 = x.reshape(-1, x.shape[-1])
+    # Straight-through: dense gradient + SR-STE decay pulling pruned weights
+    # toward zero (weight_factor * mask_complement * w in Listing 2).
+    dw = dy2.T @ x2 + decay * jnp.where(mask, 0.0, w)
+    return dx, dw
+
+
+_srste_matmul.defvjp(_srste_fwd, _srste_bwd)
+
+
+def srste_linear(w: jax.Array, x: jax.Array, n: int, m: int, *, decay: float = 6e-6,
+                 bias: jax.Array | None = None) -> jax.Array:
+    """Extended SR-STE linear: dense weights stored, pruned on-the-fly."""
+    y = _srste_matmul(x, w, (n, m), decay)
+    if bias is not None:
+        y = y + bias
+    return y

@@ -1,0 +1,197 @@
+"""Compressed N:M storage format (TPU-oriented).
+
+Layout
+------
+For ``W ∈ R^{d_out × d_in}`` pruned N:M along ``d_in`` (row-wise, forward
+layout):
+
+  * ``values``  — ``(d_out, d_in * N / M)`` the surviving weights, group-major:
+                  group ``g`` of row ``i`` occupies ``values[i, g*N:(g+1)*N]``.
+  * ``indices`` — ``(d_out, d_in * N / M)`` uint8 offsets *within* each group
+                  (0..M-1, strictly increasing inside a group).
+
+This mirrors cuSPARSELt's compressed layout but is MXU-friendly: a Pallas
+kernel streams ``values``+``indices`` HBM→VMEM (≈ N/M + eps of the dense
+bytes) and scatters into a dense VMEM tile before the systolic matmul.
+
+The analytic footprint (paper Eq. 7: ceil(log2(C(M,N))) bits/group, e.g.
+3 bits for 2:4) is tracked in ``core.metrics``; the runtime layout spends
+8 bits per kept element for alignment — the gap is reported, not hidden.
+
+All functions are pure-jnp and jit-safe; compression happens once at init
+(static masks — the paper's key systems argument vs. dynamic-mask methods).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "CompressedNM", "compress", "decompress", "compressed_nbytes",
+    "index_bits", "pack_indices", "unpack_indices",
+    "pack_bools", "unpack_bools", "decompress_select", "group_compress_select",
+]
+
+
+class CompressedNM(NamedTuple):
+    """Compressed N:M matrix. Static metadata in ``n``/``m``/``d_in``."""
+
+    values: jax.Array   # (d_out, d_in * n // m)
+    indices: jax.Array  # (d_out, d_in * n // m) uint8, offset within group
+    n: int
+    m: int
+    d_in: int
+
+    @property
+    def d_out(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def dense_shape(self) -> tuple[int, int]:
+        return (self.values.shape[0], self.d_in)
+
+
+# CompressedNM carries static ints; register as pytree with aux data so it
+# can flow through jit.
+jax.tree_util.register_pytree_node(
+    CompressedNM,
+    lambda c: ((c.values, c.indices), (c.n, c.m, c.d_in)),
+    lambda aux, leaves: CompressedNM(leaves[0], leaves[1], *aux),
+)
+
+
+def compress(w: jax.Array, mask: jax.Array, n: int, m: int) -> CompressedNM:
+    """Pack a row-wise N:M-masked matrix into compressed form.
+
+    ``mask`` must have *exactly or at most* N nonzeros per group of M along
+    the last axis; groups with fewer survivors (possible after double
+    pruning) are padded with zero values at the group's unused slots.
+    """
+    d_out, d_in = w.shape
+    assert d_in % m == 0, (d_in, m)
+    groups = d_in // m
+    k = groups * n
+    wg = (w * mask).reshape(d_out, groups, m)
+    mg = mask.reshape(d_out, groups, m)
+    # Order each group so survivors come first (stable, by descending mask).
+    order = jnp.argsort(~mg, axis=-1, stable=True)  # False(=keep) sorts first
+    top = order[..., :n]                                     # (d_out, groups, n)
+    vals = jnp.take_along_axis(wg, top, axis=-1)
+    keep = jnp.take_along_axis(mg, top, axis=-1)
+    vals = jnp.where(keep, vals, 0.0)
+    idx = jnp.where(keep, top, 0).astype(jnp.uint8)
+    return CompressedNM(vals.reshape(d_out, k), idx.reshape(d_out, k), n, m, d_in)
+
+
+def decompress(c: CompressedNM) -> jax.Array:
+    """Scatter compressed values back to a dense ``(d_out, d_in)`` matrix."""
+    d_out = c.d_out
+    groups = c.d_in // c.m
+    vals = c.values.reshape(d_out, groups, c.n)
+    idx = c.indices.reshape(d_out, groups, c.n).astype(jnp.int32)
+    dense_groups = jnp.zeros((d_out, groups, c.m), dtype=c.values.dtype)
+    # Scatter within each group. Duplicate indices only occur in padded slots
+    # whose value is 0 (add keeps this exact as long as real indices are
+    # unique, which compress() guarantees).
+    dense_groups = jax.vmap(
+        jax.vmap(lambda dg, i, v: dg.at[i].add(v))
+    )(dense_groups, idx, vals)
+    return dense_groups.reshape(d_out, c.d_in)
+
+
+# ---------------------------------------------------------------------------
+# Packed layouts for the in-graph (pjit) compressed representation. These are
+# what make the FSDP all-gathers / memory_analysis honest: indices cost
+# ceil-to-power-of-2(log2 M) bits/element and per-element bools cost 1 bit,
+# instead of a full uint8/bool each.
+# ---------------------------------------------------------------------------
+
+
+def index_bits(m: int) -> int:
+    """Runtime bits per index: log2(m) rounded up to a divisor of 8."""
+    b = max(1, int(np.ceil(np.log2(m))))
+    while 8 % b != 0:
+        b += 1
+    return b
+
+
+def pack_indices(idx: jax.Array, m: int) -> jax.Array:
+    """Pack uint8 in-group offsets (< m) into bytes, ``8/index_bits(m)`` per
+    byte along the last axis (which must divide evenly)."""
+    bits = index_bits(m)
+    per = 8 // bits
+    *lead, k = idx.shape
+    assert k % per == 0, (k, per)
+    x = idx.astype(jnp.uint8).reshape(*lead, k // per, per)
+    shifts = (jnp.arange(per, dtype=jnp.uint8) * bits).astype(jnp.uint8)
+    return jnp.bitwise_or.reduce(x << shifts, axis=-1).astype(jnp.uint8)
+
+
+def unpack_indices(packed: jax.Array, m: int, k: int) -> jax.Array:
+    """Inverse of :func:`pack_indices` → uint8 offsets of length ``k``."""
+    bits = index_bits(m)
+    per = 8 // bits
+    mask = jnp.uint8((1 << bits) - 1)
+    shifts = (jnp.arange(per, dtype=jnp.uint8) * bits).astype(jnp.uint8)
+    out = (packed[..., None] >> shifts) & mask
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * per)[..., :k]
+
+
+def pack_bools(b: jax.Array) -> jax.Array:
+    """Pack a bool array (last axis divisible by 8) into uint8 bitmaps."""
+    *lead, k = b.shape
+    assert k % 8 == 0
+    x = b.astype(jnp.uint8).reshape(*lead, k // 8, 8)
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    return jnp.bitwise_or.reduce(x << shifts, axis=-1).astype(jnp.uint8)
+
+
+def unpack_bools(packed: jax.Array, k: int) -> jax.Array:
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    out = (packed[..., None] >> shifts) & jnp.uint8(1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 8)[..., :k].astype(bool)
+
+
+def decompress_select(values: jax.Array, idx: jax.Array, n: int, m: int) -> jax.Array:
+    """Gather/scatter-free decompress: ``n`` broadcast compare-selects per
+    group (identical math to the Pallas kernel's VMEM expansion — this is the
+    XLA path used inside the pjit training graph)."""
+    *lead, k = values.shape
+    g = k // n
+    v = values.reshape(*lead, g, n)
+    i = idx.reshape(*lead, g, n).astype(jnp.int32)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (*lead, g, m), len(lead) + 1)
+    dense = jnp.zeros((*lead, g, m), values.dtype)
+    for j in range(n):
+        dense = dense + jnp.where(pos == i[..., j : j + 1], v[..., j : j + 1], 0)
+    return dense.reshape(*lead, g * m)
+
+
+def group_compress_select(dense: jax.Array, idx: jax.Array, n: int, m: int) -> jax.Array:
+    """Gather-free compression of a dense gradient onto the compressed
+    support: ``out[..., g, j] = dense[..., g, idx[g, j]]`` via compare-select
+    reductions (used by the compressed VJP for ``∇values``)."""
+    *lead, d = dense.shape
+    g = d // m
+    dg = dense.reshape(*lead, g, m)
+    i = idx.reshape(*lead, g, n).astype(jnp.int32)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (*lead, g, m), len(lead) + 1)
+    outs = []
+    for j in range(n):
+        sel = pos == i[..., j : j + 1]
+        outs.append(jnp.sum(jnp.where(sel, dg, 0), axis=-1))
+    return jnp.stack(outs, axis=-1).reshape(*lead, g * n)
+
+
+def compressed_nbytes(c: CompressedNM, *, analytic_index_bits: int | None = None) -> dict:
+    """Actual + analytic byte counts for one compressed matrix."""
+    values_b = c.values.size * c.values.dtype.itemsize
+    indices_b = c.indices.size * c.indices.dtype.itemsize
+    out = {"values_bytes": int(values_b), "indices_bytes_runtime": int(indices_b)}
+    if analytic_index_bits is not None:
+        groups = c.d_out * (c.d_in // c.m)
+        out["indices_bytes_analytic"] = int(np.ceil(groups * analytic_index_bits / 8))
+    return out

@@ -1,0 +1,2 @@
+from .synthetic import SyntheticLM
+from .pipeline import Prefetcher

@@ -1,0 +1,35 @@
+"""Background-prefetch wrapper around any ``batch(step)`` data source."""
+from __future__ import annotations
+
+import queue
+import threading
+
+__all__ = ["Prefetcher"]
+
+
+class Prefetcher:
+    """Prefetches ``source.batch(step)`` for steps [start, end) on a thread.
+
+    Keeps the host data path off the training loop's critical path — the
+    standard producer/consumer overlap. Deterministic: batch(step) is pure.
+    """
+
+    def __init__(self, source, start: int, end: int, depth: int = 2):
+        self.source = source
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._end = end
+        self._thread = threading.Thread(
+            target=self._run, args=(start, end), daemon=True)
+        self._thread.start()
+
+    def _run(self, start, end):
+        for step in range(start, end):
+            self._q.put((step, self.source.batch(step)))
+        self._q.put(None)
+
+    def __iter__(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            yield item

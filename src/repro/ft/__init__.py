@@ -1,0 +1,3 @@
+from .checkpoint import (save_checkpoint, restore_checkpoint, latest_step,
+                         CheckpointManager)
+from .elastic import propose_mesh_shape, ElasticPolicy

@@ -1,0 +1,55 @@
+"""Elastic scaling: restore a checkpoint onto a *different* mesh.
+
+Because checkpoints are path-addressed full arrays and sharding specs are
+pure functions of (pytree, mesh), growing or shrinking the device pool is:
+
+    mesh2   = make_mesh(new_shape)
+    specs2  = param_specs(eval_shape(template), mesh2)
+    state,_ = restore_checkpoint(dir, template, shardings=named_shardings(specs2, mesh2))
+
+No resharding service needed at this scale of abstraction; on a real
+multi-host fleet the same logic runs with per-shard reads (each process
+loads only the slices its addressable devices need — the manifest carries
+enough metadata to index into the npz lazily).
+
+The elastic policy object below is what the training loop's watchdog calls
+when it decides a degraded pod should be dropped (straggler mitigation):
+it proposes the largest feasible mesh from the healthy-device count.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+__all__ = ["propose_mesh_shape", "ElasticPolicy"]
+
+
+def propose_mesh_shape(n_devices: int, *, model_parallel: int = 16,
+                       multi_pod_at: int = 512) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """Largest (pod, data, model) grid for a healthy-device count.
+
+    Keeps the model axis fixed (TP degree is a property of the model fit) and
+    absorbs device loss into the data/pod axes — the standard elastic-DP move.
+    """
+    if n_devices % model_parallel != 0:
+        raise ValueError(f"{n_devices} devices not divisible by TP={model_parallel}")
+    rows = n_devices // model_parallel
+    if n_devices >= multi_pod_at and rows % 2 == 0:
+        return (2, rows // 2, model_parallel), ("pod", "data", "model")
+    return (rows, model_parallel), ("data", "model")
+
+
+@dataclass
+class ElasticPolicy:
+    model_parallel: int = 16
+    min_data_parallel: int = 1
+
+    def on_failure(self, healthy_devices: int):
+        shape, axes = propose_mesh_shape(
+            healthy_devices - healthy_devices % self.model_parallel,
+            model_parallel=self.model_parallel)
+        dp = shape[0] if len(shape) == 2 else shape[0] * shape[1]
+        if dp < self.min_data_parallel:
+            raise RuntimeError("not enough healthy devices to continue")
+        return shape, axes

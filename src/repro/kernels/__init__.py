@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for SLoPe's compute hot spots.
+
+  nm_spmm      — N:M-compressed weight × dense activation matmul
+  sparse_lora  — fused SpMM + low-rank adapter (paper Eq. 11)
+  nm_prune     — one-shot magnitude N:M prune + compress
+
+Each kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the jit'd
+wrappers with backend dispatch (pallas / pallas_interpret / xla).
+"""
+from .ops import nm_spmm, sparse_lora_matmul, nm_prune, default_backend

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: N:M magnitude prune + compress (one-shot, init/ckpt time).
+
+Given a dense ``W`` block, emits the N:M top-|magnitude| mask and the
+compressed ``values``/``indices`` layout in one pass. SLoPe's masks are
+*static*, so this runs once at initialization (or when pruning a dense
+checkpoint) — the paper's App. B point: static sparsity amortizes the entire
+setup cost, unlike SR-STE/Bi-Mask which pay a per-step prune.
+
+TPU adaptation: instead of a sort (poorly supported inside kernels), the
+top-N selection is an iterative max-extract — ``n`` rounds of
+(max → first-occurrence pick → mask out), all VPU compare/select ops. Ties
+break toward the lower index, matching the stable-argsort reference oracle.
+
+Grid tiles rows only; the full ``d_in`` of a row block stays resident in
+VMEM (fine for d_in ≤ ~32k at bf16 with 128-row blocks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["nm_prune_pallas", "group_topn"]
+
+
+def group_topn(scores: jax.Array, n: int, m: int) -> jax.Array:
+    """Boolean keep-mask of top-``n`` per group of ``m`` (last axis grouped).
+
+    ``scores``: (rows, k) with k % m == 0. Iterative max-extract; ties to the
+    lowest index via the cumsum-first-occurrence trick.
+    """
+    rows, k = scores.shape
+    g = k // m
+    s = scores.reshape(rows, g, m)
+    mask = jnp.zeros((rows, g, m), dtype=jnp.bool_)
+    remaining = s
+    neg = jnp.array(-jnp.inf, s.dtype)
+    for _ in range(n):
+        mx = jnp.max(remaining, axis=-1, keepdims=True)
+        is_max = remaining == mx
+        first = jnp.cumsum(is_max.astype(jnp.int32), axis=-1) == 1
+        pick = jnp.logical_and(is_max, first)
+        mask = jnp.logical_or(mask, pick)
+        remaining = jnp.where(pick, neg, remaining)
+    return mask.reshape(rows, k)
+
+
+def _prune_kernel(w_ref, mask_ref, val_ref, idx_ref, *, n: int, m: int):
+    w = w_ref[...]
+    mask = group_topn(jnp.abs(w), n, m)
+    mask_ref[...] = mask
+    rows, k = w.shape
+    g = k // m
+    # Compress: survivors of each group, ordered by in-group position. Use the
+    # same n-round extraction over "position of kept elements".
+    wk = jnp.where(mask, w, 0).reshape(rows, g, m)
+    mk = mask.reshape(rows, g, m)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (rows, g, m), 2)
+    # Rank kept elements by position: j-th kept = element whose prefix-kept
+    # count equals j+1 and which is itself kept.
+    prefix = jnp.cumsum(mk.astype(jnp.int32), axis=-1)
+    vals = []
+    idxs = []
+    for j in range(n):
+        sel = jnp.logical_and(mk, prefix == j + 1)   # (rows, g, m) one-hot (or empty)
+        vals.append(jnp.sum(jnp.where(sel, wk, 0), axis=-1))
+        idxs.append(jnp.sum(jnp.where(sel, pos, 0), axis=-1))
+    val_ref[...] = jnp.stack(vals, axis=-1).reshape(rows, g * n).astype(val_ref.dtype)
+    idx_ref[...] = jnp.stack(idxs, axis=-1).reshape(rows, g * n).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m", "block_rows", "interpret"))
+def nm_prune_pallas(
+    w: jax.Array,  # (d_out, d_in)
+    *,
+    n: int,
+    m: int,
+    block_rows: int = 128,
+    interpret: bool = False,
+):
+    """Returns ``(mask bool, values, indices uint8)`` in compressed layout."""
+    d_out, d_in = w.shape
+    assert d_in % m == 0
+    block_rows = min(block_rows, d_out)
+    assert d_out % block_rows == 0
+    k_comp = d_in * n // m
+    grid = (d_out // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_prune_kernel, n=n, m=m),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, d_in), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, k_comp), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, k_comp), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d_out, d_in), jnp.bool_),
+            jax.ShapeDtypeStruct((d_out, k_comp), w.dtype),
+            jax.ShapeDtypeStruct((d_out, k_comp), jnp.uint8),
+        ],
+        interpret=interpret,
+    )(w)

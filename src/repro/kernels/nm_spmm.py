@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: N:M-compressed sparse × dense matmul.
+
+Computes ``Y = X @ W^T`` where ``W`` is stored in the compressed N:M layout
+(``values (d_out, d_in·N/M)`` + per-group uint8 ``indices``), as produced by
+``repro.core.sparse.compress``.
+
+TPU adaptation of cuSPARSELt SpMM (DESIGN.md §2): the MXU cannot skip work,
+so the win is **bandwidth** — the kernel streams the compressed operand
+HBM→VMEM (≈ N/M + 1/(2·itemsize) of the dense weight bytes) and expands it
+into a dense VMEM tile with a handful of VPU compare-selects immediately
+before the systolic matmul. The same kernel serves the forward pass
+(row-compressed ``W``) and the double-pruned input-gradient pass
+(``∇X = ∇Y @ W^{R,C}`` with the transposed-compressed copy — Alg. 1 keeps
+both copies resident).
+
+Grid: ``(B/bb, d_out/bo, d_in/bk)`` with the reduction axis innermost; the
+f32 accumulator lives in a VMEM scratch tile that is initialized at ``k==0``
+and flushed to the output block at the last reduction step.
+
+Block shapes are MXU-aligned (multiples of 128 on the matmul dims); ``bk``
+must be a multiple of ``M`` so index groups never straddle blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["nm_spmm_pallas", "decompress_block"]
+
+
+def decompress_block(vals: jax.Array, idx: jax.Array, n: int, m: int) -> jax.Array:
+    """Expand a compressed block ``(rows, g·n)`` to dense ``(rows, g·m)``.
+
+    Pure VPU work: ``n`` broadcasted compare-selects per group — no gathers,
+    no scatters (TPU-friendly; a gather-based expand would serialize).
+    """
+    rows, kb = vals.shape
+    g = kb // n
+    v = vals.reshape(rows, g, n)
+    i = idx.reshape(rows, g, n).astype(jnp.int32)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (rows, g, m), 2)
+    dense = jnp.zeros((rows, g, m), vals.dtype)
+    for j in range(n):
+        dense = dense + jnp.where(pos == i[:, :, j : j + 1], v[:, :, j : j + 1], 0)
+    return dense.reshape(rows, g * m)
+
+
+def _nm_spmm_kernel(x_ref, val_ref, idx_ref, o_ref, acc_ref, *, n: int, m: int, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w_dense = decompress_block(val_ref[...], idx_ref[...], n, m)  # (bo, bk)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_dense,
+        dimension_numbers=(((1,), (1,)), ((), ())),  # x @ w_dense.T
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "m", "block_b", "block_o", "block_k", "interpret"),
+)
+def nm_spmm_pallas(
+    x: jax.Array,           # (B, d_in)
+    values: jax.Array,      # (d_out, d_in * n // m)
+    indices: jax.Array,     # (d_out, d_in * n // m) uint8
+    *,
+    n: int,
+    m: int,
+    block_b: int = 128,
+    block_o: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """``Y = X @ decompress(values, indices)^T`` — returns ``(B, d_out)``."""
+    B, d_in = x.shape
+    d_out, k_comp = values.shape
+    assert k_comp * m == d_in * n, (x.shape, values.shape, n, m)
+    block_b = min(block_b, B)
+    block_o = min(block_o, d_out)
+    block_k = min(block_k, d_in)
+    assert d_in % block_k == 0 and block_k % m == 0, (d_in, block_k, m)
+    assert B % block_b == 0 and d_out % block_o == 0
+    bk_comp = block_k * n // m
+    nk = d_in // block_k
+    grid = (B // block_b, d_out // block_o, nk)
+    return pl.pallas_call(
+        functools.partial(_nm_spmm_kernel, n=n, m=m, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_o, bk_comp), lambda i, j, k: (j, k)),
+            pl.BlockSpec((block_o, bk_comp), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, d_out), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.float32)],
+        interpret=interpret,
+    )(x, values, indices)

@@ -1,0 +1,70 @@
+"""Jit'd public wrappers around the Pallas kernels with backend dispatch.
+
+``backend="auto"`` picks the Pallas kernel on TPU and interpret-mode Pallas
+(for validation) or the pure-XLA reference elsewhere. The distributed pjit
+graphs call these wrappers, so flipping a config flag moves the whole model
+between XLA reference compute and the TPU kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .nm_prune import nm_prune_pallas
+from .nm_spmm import nm_spmm_pallas
+from .sparse_lora import sparse_lora_pallas
+
+__all__ = ["nm_spmm", "sparse_lora_matmul", "nm_prune", "default_backend"]
+
+
+def default_backend() -> str:
+    plat = jax.default_backend()
+    return "pallas" if plat == "tpu" else "xla"
+
+
+def _resolve(backend: str) -> str:
+    return default_backend() if backend == "auto" else backend
+
+
+def nm_spmm(x, values, indices, *, n: int, m: int, backend: str = "auto",
+            **block_kw) -> jax.Array:
+    """``X @ W_compressed^T`` with batch-dim flattening. x: (..., d_in)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    b = _resolve(backend)
+    if b == "pallas":
+        y = nm_spmm_pallas(x2, values, indices, n=n, m=m, **block_kw)
+    elif b == "pallas_interpret":
+        y = nm_spmm_pallas(x2, values, indices, n=n, m=m, interpret=True, **block_kw)
+    else:
+        y = ref.nm_spmm_ref(x2, values, indices, n=n, m=m)
+    return y.reshape(*lead, -1)
+
+
+def sparse_lora_matmul(x, values, indices, l, r, *, n: int, m: int,
+                       backend: str = "auto", **block_kw) -> jax.Array:
+    """Fused ``X @ W_s^T + (X R^T) L^T``. x: (..., d_in)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    b = _resolve(backend)
+    if b == "pallas":
+        y = sparse_lora_pallas(x2, values, indices, l, r, n=n, m=m, **block_kw)
+    elif b == "pallas_interpret":
+        y = sparse_lora_pallas(x2, values, indices, l, r, n=n, m=m, interpret=True,
+                               **block_kw)
+    else:
+        y = ref.sparse_lora_ref(x2, values, indices, l, r, n=n, m=m)
+    return y.reshape(*lead, -1)
+
+
+def nm_prune(w, *, n: int, m: int, backend: str = "auto", **block_kw):
+    """One-shot magnitude N:M prune + compress: → (mask, values, indices)."""
+    b = _resolve(backend)
+    if b == "pallas":
+        return nm_prune_pallas(w, n=n, m=m, **block_kw)
+    if b == "pallas_interpret":
+        return nm_prune_pallas(w, n=n, m=m, interpret=True, **block_kw)
+    return ref.nm_prune_ref(w, n=n, m=m)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masks import magnitude_nm_mask
+from repro.core.sparse import CompressedNM, compress, decompress
+
+__all__ = ["nm_spmm_ref", "sparse_lora_ref", "nm_prune_ref", "flash_attention_ref"]
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """Plain softmax attention oracle. q/k/v: (bh, s, dh)."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * dh**-0.5
+    sq, sk = s.shape[-2:]
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qp >= kp
+    if window > 0:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def nm_spmm_ref(x: jax.Array, values: jax.Array, indices: jax.Array, *, n: int, m: int) -> jax.Array:
+    """Decompress-then-dense-matmul oracle for ``nm_spmm_pallas``."""
+    d_out, k_comp = values.shape
+    d_in = k_comp * m // n
+    w = decompress(CompressedNM(values, indices, n, m, d_in))
+    return x @ w.T
+
+
+def sparse_lora_ref(x, values, indices, l, r, *, n: int, m: int) -> jax.Array:
+    """Unfused oracle: sparse part + factored low-rank part."""
+    return nm_spmm_ref(x, values, indices, n=n, m=m) + (x @ r.T) @ l.T
+
+
+def nm_prune_ref(w: jax.Array, *, n: int, m: int):
+    """Oracle for ``nm_prune_pallas``: stable top-N magnitude mask + compress."""
+    mask = magnitude_nm_mask(w, n, m, axis=1)
+    c = compress(w, mask, n, m)
+    return mask, c.values, c.indices

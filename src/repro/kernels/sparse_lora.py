@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: fused N:M SpMM + low-rank adapter (paper §2.4, Eq. 11).
+
+Computes ``Y = X @ W_s^T + (X @ R^T) @ L^T`` in a single kernel. The naive
+implementation is 4 kernel launches with 3 extra HBM round-trips of a
+``(B, d_out)`` / ``(B, r)`` intermediate; here the low-rank contribution is
+accumulated in VMEM alongside the sparse part:
+
+  * per (i, j) output tile, loop over the d_in reduction:
+      - ``acc   += x_blk @ decompress(w_blk)^T``   (MXU, bandwidth-reduced)
+      - ``xr    += x_blk @ r_blk^T``               (tall-skinny MXU op)
+  * at the last reduction step: ``out = acc + xr @ l_blk^T``.
+
+The ``xr`` accumulator is recomputed per output-column tile ``j`` — with
+r ≪ d_out this duplicate work is ``(d_out/bo)·B·d_in·r`` MACs, a ~r/d_out
+fraction of the main matmul, and buys us never materializing ``X @ R^T`` in
+HBM (the arithmetic-intensity problem of App. C).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .nm_spmm import decompress_block
+
+__all__ = ["sparse_lora_pallas"]
+
+
+def _kernel(x_ref, val_ref, idx_ref, l_ref, r_ref, o_ref, acc_ref, xr_ref,
+            *, n: int, m: int, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xr_ref[...] = jnp.zeros_like(xr_ref)
+
+    w_dense = decompress_block(val_ref[...], idx_ref[...], n, m)  # (bo, bk)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_dense, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    xr_ref[...] += jax.lax.dot_general(
+        x_ref[...], r_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        lora = jax.lax.dot_general(
+            xr_ref[...], l_ref[...].astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + lora).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "m", "block_b", "block_o", "block_k", "interpret"),
+)
+def sparse_lora_pallas(
+    x: jax.Array,        # (B, d_in)
+    values: jax.Array,   # (d_out, d_in*n//m)
+    indices: jax.Array,  # (d_out, d_in*n//m) uint8
+    l: jax.Array,        # (d_out, r)
+    r: jax.Array,        # (r, d_in)
+    *,
+    n: int,
+    m: int,
+    block_b: int = 128,
+    block_o: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, d_in = x.shape
+    d_out, k_comp = values.shape
+    rank = l.shape[1]
+    assert r.shape == (rank, d_in) and l.shape == (d_out, rank)
+    assert k_comp * m == d_in * n
+    block_b = min(block_b, B)
+    block_o = min(block_o, d_out)
+    block_k = min(block_k, d_in)
+    assert d_in % block_k == 0 and block_k % m == 0
+    assert B % block_b == 0 and d_out % block_o == 0
+    bk_comp = block_k * n // m
+    nk = d_in // block_k
+    grid = (B // block_b, d_out // block_o, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, n=n, m=m, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_o, bk_comp), lambda i, j, k: (j, k)),
+            pl.BlockSpec((block_o, bk_comp), lambda i, j, k: (j, k)),
+            pl.BlockSpec((block_o, rank), lambda i, j, k: (j, 0)),
+            pl.BlockSpec((rank, block_k), lambda i, j, k: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, d_out), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_b, block_o), jnp.float32),
+            pltpu.VMEM((block_b, rank), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, values, indices, l, r)

@@ -1,0 +1,293 @@
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution config is coherent without hardware:
+512 placeholder CPU devices host the production meshes; every cell's step
+function must ``.lower().compile()`` cleanly, and the compiled artifact
+yields ``memory_analysis()`` (fits?) + ``cost_analysis()`` + the parsed
+collective schedule (→ EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --all                      # every cell, both meshes
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --arch ... --variant sp    # §Perf variants
+
+Variants (perf levers; see EXPERIMENTS.md §Perf):
+  base        remat=full, chunked attention (all-kv), microbatched
+  sp          + sequence-parallel residual stream ("dp_sp" activation policy)
+  tri         + triangular (causal-skip) attention schedule
+  dots        remat policy dots_saveable
+  dense       SLoPe disabled (dense baseline — the paper's comparison point)
+  nolazy      adapters resident from step 0 (non-lazy; paper ablation)
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ALL_NAMES, ARCH_NAMES, applicable_shapes, get_config
+from repro.configs.base import InputShape, TrainConfig, shape_by_name
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (abstract_caches, abstract_params,
+                                abstract_state, decode_input_specs,
+                                train_input_specs)
+from repro.models import build_model
+from repro.roofline import RooflineReport, collective_bytes, model_flops
+from repro.roofline.hlo_parse import analyze_hlo
+from repro.sharding.specs import (activation_policy, batch_specs, cache_specs,
+                                  named_shardings, param_specs)
+from repro.train.state import TrainState
+from repro.train.step import make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+ACT_BUDGET = 5e9  # bytes of rematerialization-saved residuals per device
+
+
+def pick_microbatches(cfg, shape: InputShape, dp: int) -> int:
+    """Smallest power-of-2 microbatch count keeping saved residuals under
+    budget, subject to (global_batch/mb) % dp == 0."""
+    tokens_per_dev = shape.global_batch * shape.seq_len / dp
+    per_layer = cfg.d_model * 2  # bf16 residual bytes per token per layer
+    need = cfg.num_layers * tokens_per_dev * per_layer / ACT_BUDGET
+    mb = 1
+    while mb < need and (shape.global_batch // (mb * 2)) % dp == 0 \
+            and mb * 2 <= shape.global_batch // dp:
+        mb *= 2
+    return mb
+
+
+def _variant_kwargs(variant: str):
+    """Variant string → (model_kw, activation_policy, remat, slope_repr,
+    adapter_rank, zero1, microbatch_override). Composable with '+':
+    e.g. --variant zero1+sp or zero1+mb4."""
+    model_kw = {}
+    policy = None
+    remat = None
+    slope_repr = None
+    adapter_rank = 0
+    zero1 = False
+    mb_override = None
+    for part in variant.split("+"):
+        if part == "sp":
+            policy = f"{policy}+dp_sp" if policy else "dp_sp"
+        elif part == "attn":
+            policy = f"{policy}+attn" if policy else "attn"
+        elif part == "tri":
+            model_kw["triangular"] = True
+        elif part == "dots":
+            remat = "dots"
+        elif part == "dense":
+            slope_repr = "dense"
+        elif part == "nolazy":
+            adapter_rank = 64
+        elif part == "zero1":
+            zero1 = True
+        elif part.startswith("mb"):
+            mb_override = int(part[2:])
+        elif part in ("base", "kvheads"):
+            pass
+        else:
+            raise ValueError(f"unknown variant component {part!r}")
+    return model_kw, policy, remat, slope_repr, adapter_rank, zero1, mb_override
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str = "base",
+             out_dir: str = OUT_DIR) -> dict:
+    t_start = time.time()
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    (model_kw, policy, remat, slope_repr, adapter_rank, zero1,
+     mb_override) = _variant_kwargs(variant)
+    if remat:
+        cfg = cfg.replace(remat=remat)
+    if slope_repr:
+        cfg = cfg.replace(slope=dataclasses.replace(cfg.slope, enabled=False))
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = int(np.prod(list(mesh.shape.values())))
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    moe_ep = cfg.num_experts > 0 and cfg.num_experts % mesh.shape["model"] == 0
+
+    model = build_model(cfg, **model_kw)
+    result: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                    "variant": variant, "chips": chips}
+
+    with mesh, activation_policy(policy, mesh):
+        if shape.kind in ("train", "prefill"):
+            batch_abs = train_input_specs(cfg, shape)
+            b_specs = batch_specs(batch_abs, mesh)
+            if shape.kind == "train":
+                mb = mb_override or pick_microbatches(cfg, shape, dp)
+                tcfg = TrainConfig(microbatches=mb, grad_compression="none")
+                result["microbatches"] = mb
+                state_abs = abstract_state(model, tcfg, adapter_rank=adapter_rank)
+                if zero1:
+                    # ZeRO-1: weights replicated over 'data' (no per-step
+                    # gathers); optimizer moments stay fully sharded.
+                    p_specs = TrainState(
+                        params=param_specs(state_abs.params, mesh,
+                                           moe_ep=moe_ep, mode="zero1"),
+                        opt=param_specs(state_abs.opt, mesh, moe_ep=moe_ep),
+                        ef=param_specs(state_abs.ef, mesh, moe_ep=moe_ep,
+                                       mode="zero1"),
+                        step=jax.sharding.PartitionSpec(),
+                    )
+                else:
+                    p_specs = param_specs(state_abs, mesh, moe_ep=moe_ep)
+                step = make_train_step(model, tcfg)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(named_shardings(p_specs, mesh),
+                                  named_shardings(b_specs, mesh)),
+                    out_shardings=(named_shardings(p_specs, mesh), None))
+                lowered = jitted.lower(state_abs, batch_abs)
+            else:
+                params_abs = abstract_params(model, adapter_rank=adapter_rank)
+                p_specs = param_specs(params_abs, mesh, moe_ep=moe_ep)
+                fwd = lambda p, b: model.forward(p, b)[0]
+                jitted = jax.jit(
+                    fwd,
+                    in_shardings=(named_shardings(p_specs, mesh),
+                                  named_shardings(b_specs, mesh)))
+                lowered = jitted.lower(params_abs, batch_abs)
+            tokens = shape.global_batch * shape.seq_len
+            mf = model_flops(cfg, tokens,
+                             kind="train" if shape.kind == "train" else "inference")
+        else:  # decode
+            params_abs = abstract_params(model, adapter_rank=adapter_rank)
+            p_specs = param_specs(params_abs, mesh, moe_ep=moe_ep, mode="serve")
+            caches_abs = abstract_caches(model, shape.global_batch, shape.seq_len)
+            c_specs = cache_specs(caches_abs, mesh,
+                                  batch_size=shape.global_batch,
+                                  kv_shard=("heads" if "kvheads" in variant else "seq"))
+            inputs = decode_input_specs(cfg, shape)
+            enc = inputs.pop("enc_out", None)
+
+            def serve_step(p, tok, caches, pos, enc_out=None):
+                return model.decode_step(p, tok, caches, pos, enc_out=enc_out)
+
+            dpax = ("pod", "data") if multi else "data"
+            dp_or_none = dpax if shape.global_batch % dp == 0 else None
+            in_sh = [named_shardings(p_specs, mesh),
+                     NamedSharding(mesh, P(dp_or_none, None)),
+                     named_shardings(c_specs, mesh),
+                     NamedSharding(mesh, P(dp_or_none))]
+            args = [params_abs, inputs["tokens"], caches_abs, inputs["decode_pos"]]
+            if enc is not None:
+                in_sh.append(NamedSharding(mesh, P(dp_or_none, None, None)))
+                args.append(enc)
+            jitted = jax.jit(serve_step, in_shardings=tuple(in_sh),
+                             out_shardings=(None, named_shardings(c_specs, mesh)))
+            lowered = jitted.lower(*args)
+            mf = model_flops(cfg, shape.global_batch, kind="inference")
+
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+    cost = compiled.cost_analysis() or {}
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                mem[k] = getattr(ma, k, None)
+    except Exception as e:  # CPU backend may not implement it
+        mem["error"] = str(e)
+
+    hlo = compiled.as_text()
+    # Trip-count-aware analysis (primary source — XLA's cost_analysis counts
+    # while bodies once; see roofline/hlo_parse.py).
+    hc = analyze_hlo(hlo)
+    coll = {"total_bytes": hc.collective_bytes,
+            "per_op_bytes": hc.per_collective,
+            "per_op_counts": hc.collective_counts}
+    rep = RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_kind, chips=chips,
+        hlo_flops=hc.flops, hlo_bytes=hc.bytes_accessed,
+        collective=coll, model_flops=mf,
+    ).finalize()
+    result.update({
+        "ok": True,
+        "lower_s": t_lower - t_start,
+        "compile_s": t_compile - t_lower,
+        "xla_cost_analysis": {k: float(v) for k, v in cost.items()
+                              if k in ("flops", "transcendentals",
+                                       "bytes accessed", "optimal_seconds")},
+        "hlo_analysis": {"dot_flops": hc.dot_flops,
+                         "while_trips": hc.while_trips,
+                         "unknown_whiles": hc.unknown_whiles},
+        "memory_analysis": mem,
+        "collectives": coll,
+        "roofline": rep.to_dict(),
+    })
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}__{shape_name}__{mesh_kind}__{variant}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(result, f, indent=2, default=float)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=("single", "multi", "both"))
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCH_NAMES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([shape_by_name(args.shape)] if args.shape
+                  else applicable_shapes(cfg))
+        for shp in shapes:
+            for mesh_kind in meshes:
+                fname = os.path.join(
+                    args.out, f"{arch}__{shp.name}__{mesh_kind}__{args.variant}.json")
+                if args.skip_existing and os.path.exists(fname):
+                    n_skip += 1
+                    continue
+                tag = f"{arch} × {shp.name} × {mesh_kind} [{args.variant}]"
+                try:
+                    t0 = time.time()
+                    res = run_cell(arch, shp.name, mesh_kind, args.variant, args.out)
+                    r = res["roofline"]
+                    print(f"[dryrun OK ] {tag}: compile {res['compile_s']:.1f}s "
+                          f"flops/chip {r['hlo_flops']:.3e} "
+                          f"coll {r['collective']['total_bytes']:.3e}B "
+                          f"bottleneck={r['bottleneck']} ({time.time()-t0:.0f}s)",
+                          flush=True)
+                    n_ok += 1
+                except Exception as e:
+                    n_fail += 1
+                    print(f"[dryrun FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+                    traceback.print_exc()
+                    with open(os.path.join(args.out, "failures.log"), "a") as f:
+                        f.write(f"{tag}\n{traceback.format_exc()}\n\n")
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed, {n_skip} skipped", flush=True)
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

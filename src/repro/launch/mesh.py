@@ -1,0 +1,26 @@
+"""Production mesh builders (functions, never module-level constants —
+importing this module must not touch jax device state)."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh_for"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256-chip pod; multi_pod=True → 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for(n_devices: int, *, model_parallel: int | None = None):
+    """Best-effort mesh for an arbitrary device count (tests / elastic)."""
+    if model_parallel is None:
+        model_parallel = 1
+        for cand in (16, 8, 4, 2):
+            if n_devices % cand == 0:
+                model_parallel = cand
+                break
+    return jax.make_mesh((n_devices // model_parallel, model_parallel),
+                         ("data", "model"))

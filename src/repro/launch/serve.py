@@ -1,0 +1,53 @@
+"""Serving launcher: load (or init) a model and serve batched requests.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gpt2-small --smoke \
+        --ckpt-dir ckpt/gpt2 --max-new 32
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.ft import restore_checkpoint
+    from repro.models import build_model
+    from repro.serve import ServeEngine
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    if args.ckpt_dir:
+        from repro.train import init_train_state
+        template = init_train_state(model, jax.random.PRNGKey(0))
+        try:
+            state, step = restore_checkpoint(args.ckpt_dir, template)
+            params = state.params
+            print(f"[serve] restored checkpoint step {step}")
+        except (FileNotFoundError, KeyError) as e:
+            print(f"[serve] no usable checkpoint ({e}); serving fresh init")
+
+    eng = ServeEngine(model, params, cache_len=args.cache_len)
+    rng = np.random.default_rng(0)
+    prompts = [list(map(int, rng.integers(2, cfg.vocab_size, rng.integers(4, 12))))
+               for _ in range(args.batch)]
+    outs = eng.generate(prompts, args.max_new, temperature=args.temperature)
+    for i, (p, o) in enumerate(zip(prompts, outs)):
+        print(f"[serve] req{i} prompt_len={len(p)} → {o}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""ShapeDtypeStruct stand-ins for every (arch × input-shape) cell.
+
+``input_specs(cfg, shape)`` returns the exact pytree a train/serve step takes
+— weak-type-correct, shardable, zero device allocation — so the dry-run can
+``.lower().compile()`` production-size graphs on one CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+
+__all__ = ["train_input_specs", "decode_input_specs", "prefill_input_specs",
+           "abstract_params", "abstract_caches", "abstract_state"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    n_img = cfg.num_image_tokens or 0
+    s_text = s - n_img if n_img else s
+    batch = {
+        "tokens": _sds((b, s_text), jnp.int32),
+        "labels": _sds((b, s_text), jnp.int32),
+    }
+    if n_img:
+        batch["img_embeds"] = _sds((b, n_img, cfg.d_model), jnp.float32)
+    if cfg.is_encoder_decoder:
+        batch["enc_frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+prefill_input_specs = train_input_specs  # prefill lowers the full forward
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """One new token against a seq_len-deep cache."""
+    b = shape.global_batch
+    out = {
+        "tokens": _sds((b, 1), jnp.int32),
+        "decode_pos": _sds((b,), jnp.int32),
+    }
+    if cfg.is_encoder_decoder:
+        out["enc_out"] = _sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def abstract_params(model, *, adapter_rank: int = 0):
+    return jax.eval_shape(
+        lambda k: model.init(k, adapter_rank=adapter_rank),
+        jax.random.PRNGKey(0))
+
+
+def abstract_caches(model, batch: int, cache_len: int):
+    return jax.eval_shape(lambda: model.init_caches(batch, cache_len))
+
+
+def abstract_state(model, tcfg, *, adapter_rank: int = 0):
+    from repro.train.state import init_train_state
+
+    return jax.eval_shape(
+        lambda k: init_train_state(model, k, adapter_rank=adapter_rank,
+                                   grad_compression=tcfg.grad_compression),
+        jax.random.PRNGKey(0))

@@ -1,0 +1,2 @@
+"""Model zoo: SLoPe-aware transformer/SSM/MoE/hybrid architectures."""
+from .model_zoo import Model, build_model, cross_entropy_loss

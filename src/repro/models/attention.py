@@ -1,0 +1,245 @@
+"""GQA attention: training (chunked online-softmax), prefill, and decode.
+
+Design notes
+------------
+* **Chunked attention** (flash-attention schedule in pure jnp/lax): queries
+  and keys are processed in blocks with a running (max, denom, acc) online
+  softmax. Memory is O(S·chunk) instead of O(S²) — required for the
+  prefill_32k cells. The first implementation scans *all* kv chunks per query
+  chunk and masks; the causal-skip (triangular) schedule is a §Perf
+  optimization toggled by ``triangular=True``.
+* **SWA / local attention** via position-window masking; decode at long
+  context uses a **rolling cache** of ``window`` slots (Mistral-style), which
+  is what makes mixtral/recurrentgemma long_500k cells feasible.
+* All projections are built by the SLoPe linear factory — pruning attention
+  weights is exactly the paper's "prune Self-Attention modules" setting.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SlopeConfig
+from repro.sharding.specs import constrain, policy_has
+from .layers import apply_rope, make_linear, rope
+
+__all__ = ["make_attention", "KVCache", "init_kv_cache", "chunked_attention"]
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    """Decode-time cache. ``rolling=True`` → size = window, slots reused."""
+
+    k: jax.Array          # (b, cache_len, kv_heads, head_dim)
+    v: jax.Array          # (b, cache_len, kv_heads, head_dim)
+    positions: jax.Array  # (b, cache_len) absolute positions, -1 = empty
+
+
+def init_kv_cache(batch: int, cache_len: int, kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, cache_len, kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, cache_len, kv_heads, head_dim), dtype),
+        positions=jnp.full((batch, cache_len), -1, jnp.int32),
+    )
+
+
+def _gqa_scores(q, k):
+    """q: (b, sq, kvh, grp, dh), k: (b, sk, kvh, dh) → (b, kvh, grp, sq, sk)."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k)
+
+
+def _fit_chunk(s: int, chunk: int) -> int:
+    """Largest divisor of ``s`` that is ≤ ``chunk`` (whisper's 1500-frame
+    encoder → 750; power-of-two seqs are untouched)."""
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
+                      q_chunk: int = 1024, kv_chunk: int = 1024,
+                      triangular: bool = False) -> jax.Array:
+    """Online-softmax attention.
+
+    q: (b, sq, kv_heads, group, dh); k/v: (b, sk, kv_heads, dh);
+    q_pos: (sq,), k_pos: (sk,). Returns (b, sq, kv_heads, group, dh).
+    ``window > 0`` restricts to q_pos - k_pos < window (plus causality).
+    ``triangular`` skips kv chunks strictly in the future of a query chunk
+    (and beyond the window) — identical output, fewer FLOPs.
+    """
+    b, sq, kvh, grp, dh = q.shape
+    sk = k.shape[1]
+    scale = dh ** -0.5
+    q = (q * scale).astype(q.dtype)
+    q_chunk = _fit_chunk(sq, q_chunk)
+    kv_chunk = _fit_chunk(sk, kv_chunk)
+    nq, nk = sq // q_chunk, sk // kv_chunk
+
+    qc = q.reshape(b, nq, q_chunk, kvh, grp, dh)
+    qp = q_pos.reshape(nq, q_chunk)
+    kc = k.reshape(b, nk, kv_chunk, kvh, dh)
+    vc = v.reshape(b, nk, kv_chunk, kvh, dh)
+    kp = k_pos.reshape(nk, kv_chunk)
+
+    def q_block(qi, q_blk, qp_blk):
+        acc0 = jnp.zeros((b, q_chunk, kvh, grp, dh), jnp.float32)
+        m0 = jnp.full((b, kvh, grp, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, grp, q_chunk), jnp.float32)
+
+        def kv_step(carry, blk):
+            acc, m, l = carry
+            k_blk, v_blk, kp_blk = blk
+            s = _gqa_scores(q_blk, k_blk).astype(jnp.float32)  # (b,kvh,grp,qc,kc)
+            msk = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                msk &= qp_blk[:, None] >= kp_blk[None, :]
+            if window > 0:
+                msk &= (qp_blk[:, None] - kp_blk[None, :]) < window
+            msk &= (kp_blk >= 0)[None, :]          # rolling-cache empty slots
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v_blk.dtype), v_blk)
+            acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv.astype(jnp.float32)
+            return (acc, m_new, l), None
+
+        if triangular and causal and nk > 1:
+            # Only kv chunks that can contain visible keys for this q chunk:
+            # k_pos <= max q_pos (causal) and k_pos > max q_pos - window (SWA).
+            hi = qi + 1  # kv chunk index bound under aligned chunking (sq==sk)
+            if window > 0:
+                w_chunks = -(-window // kv_chunk) + 1
+                lo = jnp.maximum(hi - w_chunks, 0)
+            else:
+                lo = jnp.zeros_like(hi)
+
+            def body(j, carry):
+                blk = (kc[:, j], vc[:, j], kp[j])
+                return kv_step(carry, blk)[0]
+
+            acc, m, l = jax.lax.fori_loop(lo, hi, body, (acc0, m0, l0))
+        else:
+            (acc, m, l), _ = jax.lax.scan(
+                kv_step, (acc0, m0, l0),
+                (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), kp))
+        l = jnp.maximum(l, 1e-20)
+        out = acc / l.transpose(0, 3, 1, 2)[..., None]
+        return out.astype(q.dtype)
+
+    outs = jax.lax.map(
+        lambda args: q_block(*args),
+        (jnp.arange(nq), qc.transpose(1, 0, 2, 3, 4, 5), qp))
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, kvh, grp, dh)
+
+
+def make_attention(cfg: ModelConfig, *, sparse: bool, cross: bool = False,
+                   causal: bool = True, dtype=jnp.bfloat16,
+                   q_chunk: int = 1024, kv_chunk: int = 1024,
+                   triangular: bool = False):
+    """Build one (self- or cross-) attention module.
+
+    apply(p, x, *, positions, kv_x=None, kv_positions=None, cache=None,
+          decode_pos=None) → (y, new_cache)
+    """
+    d = cfg.d_model
+    h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    grp = h // kvh
+    causal = causal and not cross
+    window = cfg.window if cfg.attention == "swa" else 0
+
+    lin_q = make_linear(cfg.slope, h * dh, d, sparse=sparse, dtype=dtype, use_bias=cfg.qkv_bias)
+    lin_k = make_linear(cfg.slope, kvh * dh, d, sparse=sparse, dtype=dtype, use_bias=cfg.qkv_bias)
+    lin_v = make_linear(cfg.slope, kvh * dh, d, sparse=sparse, dtype=dtype, use_bias=cfg.qkv_bias)
+    lin_o = make_linear(cfg.slope, d, h * dh, sparse=sparse, dtype=dtype)
+
+    def init(key, *, adapter_rank: int = 0):
+        ks = jax.random.split(key, 4)
+        return {
+            "q": lin_q[0](ks[0], adapter_rank=adapter_rank),
+            "k": lin_k[0](ks[1], adapter_rank=adapter_rank),
+            "v": lin_v[0](ks[2], adapter_rank=adapter_rank),
+            "o": lin_o[0](ks[3], adapter_rank=adapter_rank),
+        }
+
+    def _project_qkv(p, x, kv_x):
+        b, s, _ = x.shape
+        q = lin_q[1](p["q"], x).reshape(b, s, kvh, grp, dh)
+        src = x if kv_x is None else kv_x
+        sk = src.shape[1]
+        k = lin_k[1](p["k"], src).reshape(b, sk, kvh, dh)
+        v = lin_v[1](p["v"], src).reshape(b, sk, kvh, dh)
+        return q, k, v
+
+    def apply(p, x, *, positions, kv_x=None, kv_positions=None,
+              cache: KVCache | None = None, decode_pos=None):
+        b, s, _ = x.shape
+        q, k, v = _project_qkv(p, x, kv_x)
+        if cfg.pos == "rope" and not cross:
+            sin_q, cos_q = rope(positions, dh, cfg.rope_theta)
+            q = apply_rope(q.reshape(b, s, h, dh), sin_q, cos_q).reshape(b, s, kvh, grp, dh)
+            kpos = positions if kv_positions is None else kv_positions
+            sin_k, cos_k = rope(kpos, dh, cfg.rope_theta)
+            k = apply_rope(k, sin_k, cos_k)
+
+        new_cache = None
+        if cache is not None:
+            # Decode / chunked prefill: write s new kv entries at per-request
+            # slots, attend over the cache. ``decode_pos``: (b,) int32.
+            cache_len = cache.k.shape[1]
+            if window > 0 and cache_len == window:
+                slot = decode_pos % window            # rolling (SWA long-context)
+            else:
+                slot = decode_pos
+            qpos = decode_pos[:, None] + jnp.arange(s)  # (b, s) absolute positions
+            k_new = jax.vmap(lambda ck, kn, sl: jax.lax.dynamic_update_slice_in_dim(ck, kn, sl, 0)
+                             )(cache.k, k.astype(cache.k.dtype), slot)
+            v_new = jax.vmap(lambda cv, vn, sl: jax.lax.dynamic_update_slice_in_dim(cv, vn, sl, 0)
+                             )(cache.v, v.astype(cache.v.dtype), slot)
+            pos_new = jax.vmap(lambda pr, pv, sl: jax.lax.dynamic_update_slice_in_dim(pr, pv, sl, 0)
+                               )(cache.positions, qpos.astype(jnp.int32), slot)
+            new_cache = KVCache(k_new, v_new, pos_new)
+            scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k_new.astype(q.dtype)) * dh**-0.5
+            kp = new_cache.positions[:, None, None, None, :]   # (b,1,1,1,cache)
+            qp = qpos[:, None, None, :, None]                  # (b,1,1,s,1)
+            msk = (kp <= qp) & (kp >= 0)
+            if window > 0:
+                msk &= (qp - kp) < window
+            scores = jnp.where(msk, scores.astype(jnp.float32), NEG_INF)
+            attn = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+            out = jnp.einsum("bhgqk,bkhd->bqhgd", attn, v_new.astype(q.dtype))
+        else:
+            kpos = positions if kv_positions is None else kv_positions
+            # Cross-attention is position-free; per-request (b, s) decode
+            # positions collapse to a 1-D stand-in for the chunked kernel.
+            qpos_1d = positions if positions.ndim == 1 else jnp.arange(s)
+            kpos_1d = kpos if kpos.ndim == 1 else jnp.arange(k.shape[1])
+            if policy_has("attn") and grp > 1:
+                # MHA-ized GQA for TP > kv_heads: expand K/V to full heads so
+                # every attention einsum is shard-local over the head axis —
+                # kills the score-tensor all-reduces (§Perf). K/V replication
+                # is a broadcast of (b, s, kvh, dh) → grp× VMEM-cheap reads.
+                qf = constrain(q.reshape(b, s, h, dh), "attn_qkv")
+                kf = constrain(jnp.repeat(k, grp, axis=2), "attn_qkv")
+                vf = constrain(jnp.repeat(v, grp, axis=2), "attn_qkv")
+                out = chunked_attention(
+                    qf[:, :, :, None, :].reshape(b, s, h, 1, dh),
+                    kf, vf, qpos_1d, kpos_1d, causal=causal, window=window,
+                    q_chunk=q_chunk, kv_chunk=kv_chunk, triangular=triangular)
+                out = out.reshape(b, s, kvh, grp, dh)
+            else:
+                out = chunked_attention(q, k, v, qpos_1d, kpos_1d, causal=causal,
+                                        window=window, q_chunk=q_chunk,
+                                        kv_chunk=kv_chunk, triangular=triangular)
+        out = out.reshape(b, s, h * dh)
+        y = lin_o[1](p["o"], out)
+        return y, new_cache
+
+    return init, apply

@@ -1,0 +1,193 @@
+"""Building blocks: SLoPe-aware linear factory, norms, RoPE, embeddings.
+
+The module system is deliberately minimal and functional: every module is a
+``(init, apply)`` pair of closures produced by a factory that bakes in all
+static configuration (sparsity kind, N:M, rank...). Params are plain nested
+dicts of arrays, so pjit sharding rules and checkpointing operate on pytree
+paths with zero framework magic.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SlopeConfig
+from repro.core.adapters import LowRankAdapter, adapter_apply, init_adapter
+from repro.core.slope_linear import (
+    CompressedSlope,
+    SlopeWeights,
+    compressed_from_dense_masked,
+    init_slope_weights,
+    slope_matmul,
+    compressed_slope_matmul,
+    srste_linear,
+)
+
+Params = dict
+Initializer = Callable[..., Params]
+Apply = Callable[..., jax.Array]
+
+__all__ = ["make_linear", "rms_norm", "layer_norm", "make_norm", "make_embedding",
+           "rope", "apply_rope", "dense_init", "swiglu", "gelu_mlp_act"]
+
+
+# ---------------------------------------------------------------------------
+# Linear factory
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_out, d_in, dtype, scale=None):
+    if scale is None:
+        scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_out, d_in)) * scale).astype(dtype)
+
+
+def make_linear(cfg: SlopeConfig, d_out: int, d_in: int, *, sparse: bool,
+                dtype=jnp.bfloat16, use_bias: bool = False,
+                nm: tuple[int, int] | None = None):
+    """Return ``(init, apply)`` for one linear layer.
+
+    ``sparse=False`` (or SLoPe disabled) → dense. Otherwise the representation
+    is taken from ``cfg.representation``. ``apply(params, x)`` detects lazy
+    adapters by the presence of ``params["lora"]`` — so phase-1 and phase-2
+    use the same closure on different pytree structures (no flags in-graph).
+    """
+    n, m = nm if nm is not None else (cfg.n, cfg.m)
+    kind = cfg.representation if (sparse and cfg.enabled) else "dense"
+    if kind == "dense" or n == m:
+        kind = "dense"
+
+    def init(key, *, adapter_rank: int = 0) -> Params:
+        kw, kb, ka = jax.random.split(key, 3)
+        p: Params = {}
+        if kind == "dense":
+            p["w"] = dense_init(kw, d_out, d_in, dtype)
+        elif kind == "dense_masked":
+            sw = init_slope_weights(kw, d_out, d_in, n, m, dtype=dtype)
+            p["w"], p["mask_r"], p["mask_rc"] = sw.w, sw.mask_r, sw.mask_rc
+        elif kind == "compressed":
+            sw = init_slope_weights(kw, d_out, d_in, n, m, dtype=dtype)
+            cs = compressed_from_dense_masked(sw, n, m)
+            p["values"], p["idx_packed"], p["rc_packed"] = cs
+        elif kind == "srste":
+            p["w"] = dense_init(kw, d_out, d_in, dtype)
+        else:
+            raise ValueError(f"unknown linear kind {kind!r}")
+        if use_bias:
+            p["b"] = jnp.zeros((d_out,), dtype)
+        if adapter_rank > 0 and kind != "dense":
+            ad = init_adapter(ka, d_out, d_in, adapter_rank, dtype=dtype)
+            p["lora"] = {"l": ad.l, "r": ad.r}
+        return p
+
+    def apply(p: Params, x: jax.Array) -> jax.Array:
+        if kind == "dense":
+            y = x @ p["w"].T
+        elif kind == "dense_masked":
+            y = slope_matmul(x, p["w"], p["mask_r"], p["mask_rc"])
+        elif kind == "compressed":
+            cs = CompressedSlope(p["values"], p["idx_packed"], p["rc_packed"])
+            y = compressed_slope_matmul(x, cs, n=n, m=m)
+        elif kind == "srste":
+            y = srste_linear(p["w"], x, n, m, decay=cfg.srste_decay)
+        if "lora" in p:
+            y = y + adapter_apply(LowRankAdapter(p["lora"]["l"], p["lora"]["r"]), x)
+        if "b" in p:
+            y = y + p["b"]
+        return y
+
+    return init, apply
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def make_norm(kind: str, d: int, dtype=jnp.bfloat16):
+    if kind == "rmsnorm":
+        def init(key):
+            return {"scale": jnp.zeros((d,), dtype)}
+
+        def apply(p, x):
+            return rms_norm(x, p["scale"])
+    elif kind == "layernorm":
+        def init(key):
+            return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+        def apply(p, x):
+            return layer_norm(x, p["scale"], p["bias"])
+    else:
+        raise ValueError(kind)
+    return init, apply
+
+
+# ---------------------------------------------------------------------------
+# Embedding (always dense — paper keeps first layer + heads dense)
+# ---------------------------------------------------------------------------
+
+
+def make_embedding(vocab: int, d: int, dtype=jnp.bfloat16):
+    def init(key):
+        return {"embedding": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+    def apply(p, tokens):
+        return jnp.take(p["embedding"], tokens, axis=0)
+
+    def attend(p, x):  # logits head (tied weights)
+        return x @ p["embedding"].T
+
+    return init, apply, attend
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(positions: jax.Array, head_dim: int, theta: float = 10000.0):
+    """Return (sin, cos) of shape (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (jnp.log(theta) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (..., seq, heads, head_dim); sin/cos: (..., seq, head_dim/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin_ = sin[..., None, :]
+    cos_ = cos[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos_ - x2 * sin_, x2 * cos_ + x1 * sin_], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP activations
+# ---------------------------------------------------------------------------
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def gelu_mlp_act(h: jax.Array) -> jax.Array:
+    return jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)

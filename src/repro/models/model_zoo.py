@@ -1,0 +1,157 @@
+"""Full models: decoder LMs, encoder-decoder (whisper), VLM (llava).
+
+Public surface used by train/serve/launch:
+
+    model = build_model(cfg)
+    params = model.init(key, adapter_rank=0)
+    logits, aux = model.forward(params, batch)          # train / prefill
+    loss, metrics = model.loss(params, batch)
+    logits, caches = model.decode_step(params, tokens, caches, pos, enc_out=None)
+    caches = model.init_caches(batch, cache_len)
+
+Batch dict keys: "tokens" (b, s) int32; optional "labels" (b, s) int32 with
+-100 = ignore; "img_embeds" (b, n_img, d) for VLM (stub frontend output);
+"enc_frames" (b, enc_seq, d) for audio (stub conv-frontend output).
+
+Per the paper, the embedding table, positional embeddings, and the LM head
+are always dense; block linears are SLoPe-pruned per config.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import dense_init, make_embedding, make_norm
+from .transformer import make_decoder_stack
+
+__all__ = ["Model", "build_model", "cross_entropy_loss"]
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    loss: Callable
+    decode_step: Callable
+    init_caches: Callable
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Mean CE over labels >= 0. logits (b, s, V) any float; labels (b, s)."""
+    logits = logits.astype(jnp.float32)
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    denom = jnp.maximum(valid.sum(), 1)
+    return nll.sum() / denom, denom
+
+
+def build_model(cfg: ModelConfig, *, q_chunk: int = 1024, kv_chunk: int = 1024,
+                triangular: bool = False) -> Model:
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    embed = make_embedding(cfg.vocab_size, d, dtype)
+    final_norm = make_norm(cfg.norm, d, dtype)
+    stack = make_decoder_stack(cfg, causal=True, dtype=dtype, q_chunk=q_chunk,
+                               kv_chunk=kv_chunk, triangular=triangular)
+    enc_stack = None
+    if cfg.is_encoder_decoder:
+        enc_cfg = cfg.replace(num_layers=cfg.encoder_layers,
+                              block_pattern=("attn",), attention="full", window=0)
+        enc_stack = make_decoder_stack(enc_cfg, causal=False, dtype=dtype,
+                                       q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+    max_pos = 1 << 16  # learned-position table bound (dry-run shapes cap at 32k+)
+
+    def init(key, *, adapter_rank: int = 0):
+        ks = jax.random.split(key, 8)
+        p: dict = {
+            "embed": embed[0](ks[0]),
+            "stack": stack[0](ks[1], adapter_rank=adapter_rank),
+            "final_norm": final_norm[0](ks[2]),
+        }
+        if not cfg.tie_embeddings:
+            p["head"] = {"w": dense_init(ks[3], cfg.vocab_size, d, dtype, scale=0.02)}
+        if cfg.pos == "learned":
+            p["pos_embed"] = (jax.random.normal(ks[4], (max_pos, d)) * 0.01).astype(dtype)
+        if cfg.is_encoder_decoder:
+            p["encoder"] = {
+                "stack": enc_stack[0](ks[5], adapter_rank=adapter_rank),
+                "final_norm": final_norm[0](ks[6]),
+                "pos_embed": (jax.random.normal(ks[7], (cfg.encoder_seq, d)) * 0.01).astype(dtype),
+            }
+        return p
+
+    def _head(p, x):
+        w = p["embed"]["embedding"] if cfg.tie_embeddings else p["head"]["w"]
+        return x @ w.T
+
+    def _encode(p, enc_frames):
+        h = enc_frames.astype(dtype) + p["encoder"]["pos_embed"][None, : enc_frames.shape[1]]
+        pos = jnp.arange(enc_frames.shape[1])
+        h, _, _ = enc_stack[1](p["encoder"]["stack"], h, positions=pos)
+        return final_norm[1](p["encoder"]["final_norm"], h)
+
+    def _embed_inputs(p, batch):
+        tokens = batch["tokens"]
+        x = embed[1](p["embed"], tokens)
+        if cfg.num_image_tokens and "img_embeds" in batch:
+            img = batch["img_embeds"].astype(x.dtype)
+            x = jnp.concatenate([img, x], axis=1)
+        if cfg.pos == "learned":
+            x = x + p["pos_embed"][None, : x.shape[1]]
+        return x
+
+    def forward(p, batch):
+        """Full-sequence forward (train / prefill). → (logits, aux)."""
+        x = _embed_inputs(p, batch)
+        pos = jnp.arange(x.shape[1])
+        enc_out = None
+        enc_pos = None
+        if cfg.is_encoder_decoder:
+            enc_out = _encode(p, batch["enc_frames"])
+            enc_pos = jnp.arange(enc_out.shape[1])
+        x, _, aux = stack[1](p["stack"], x, positions=pos,
+                             enc_out=enc_out, enc_positions=enc_pos)
+        x = final_norm[1](p["final_norm"], x)
+        return _head(p, x), aux
+
+    def loss(p, batch):
+        logits, aux = forward(p, batch)
+        labels = batch["labels"]
+        if cfg.num_image_tokens and "img_embeds" in batch:
+            pad = jnp.full((labels.shape[0], batch["img_embeds"].shape[1]), -100,
+                           labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        ce, ntok = cross_entropy_loss(logits, labels)
+        total = ce + 0.01 * aux
+        return total, {"ce": ce, "aux": aux, "ntok": ntok}
+
+    def decode_step(p, tokens, caches, decode_pos, *, enc_out=None):
+        """One decode (or chunked-prefill) step. tokens (b, s); decode_pos is
+        a scalar or per-request (b,) int32 giving the absolute position of
+        tokens[:, 0]. → (logits (b, s, V), new_caches)."""
+        b, s = tokens.shape
+        decode_pos = jnp.asarray(decode_pos, jnp.int32)
+        if decode_pos.ndim == 0:
+            decode_pos = jnp.broadcast_to(decode_pos, (b,))
+        qpos = decode_pos[:, None] + jnp.arange(s)     # (b, s)
+        x = embed[1](p["embed"], tokens)
+        if cfg.pos == "learned":
+            x = x + jnp.take(p["pos_embed"], jnp.minimum(qpos, max_pos - 1), axis=0)
+        enc_pos = jnp.arange(enc_out.shape[1]) if enc_out is not None else None
+        x, new_caches, _ = stack[1](p["stack"], x, positions=qpos,
+                                    caches=caches, decode_pos=decode_pos,
+                                    enc_out=enc_out, enc_positions=enc_pos)
+        x = final_norm[1](p["final_norm"], x)
+        return _head(p, x), new_caches
+
+    def init_caches(batch: int, cache_len: int):
+        return stack[2](batch, cache_len)
+
+    return Model(cfg, init, forward, loss, decode_step, init_caches)

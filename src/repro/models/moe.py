@@ -1,0 +1,104 @@
+"""Mixture-of-Experts FFN with GShard-style capacity dispatch.
+
+Router stays **dense** (tiny + accuracy-critical — DESIGN.md
+§Arch-applicability); expert FFN weights are SLoPe-pruned like any other MLP.
+
+Dispatch: tokens are processed in fixed-size groups; within a group, top-k
+routing builds a ``(group, E, capacity)`` one-hot dispatch tensor and two
+einsums move tokens in/out of the expert dimension. This is the classic
+GShard formulation — it shards cleanly (tokens over data, experts over model
+for EP) with XLA inserting the all-to-alls. The dispatch-einsum FLOP overhead
+is visible in the roofline's MODEL_FLOPS/HLO ratio and is a §Perf lever
+(sort-based dispatch).
+
+Sharding strategy per config (DESIGN.md):
+  * ``E % model_axis == 0`` (moonshot 64e) → EP: experts sharded over 'model'.
+  * otherwise (mixtral 8e on 16-way) → TP-within-expert: d_ff over 'model'.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import dense_init, make_linear, swiglu
+
+__all__ = ["make_moe_mlp"]
+
+
+def make_moe_mlp(cfg: ModelConfig, *, sparse: bool, dtype=jnp.bfloat16,
+                 group_size: int = 1024, capacity_factor: float = 1.25,
+                 nm: tuple[int, int] | None = None):
+    """Top-k MoE MLP. apply(p, x) → (y, aux_loss)."""
+    d, d_ff, E, k = cfg.d_model, cfg.d_ff, cfg.num_experts, cfg.experts_per_token
+    assert E > 0 and 0 < k <= E
+    lin_gate = make_linear(cfg.slope, d_ff, d, sparse=sparse, dtype=dtype, nm=nm)
+    lin_up = make_linear(cfg.slope, d_ff, d, sparse=sparse, dtype=dtype, nm=nm)
+    lin_down = make_linear(cfg.slope, d, d_ff, sparse=sparse, dtype=dtype, nm=nm)
+
+    def init(key, *, adapter_rank: int = 0):
+        kr, ke = jax.random.split(key)
+        expert_keys = jax.random.split(ke, E)
+
+        def one_expert(kk):
+            k1, k2, k3 = jax.random.split(kk, 3)
+            return {
+                "gate": lin_gate[0](k1, adapter_rank=adapter_rank),
+                "up": lin_up[0](k2, adapter_rank=adapter_rank),
+                "down": lin_down[0](k3, adapter_rank=adapter_rank),
+            }
+
+        return {
+            "router": {"w": dense_init(kr, E, d, jnp.float32)},
+            "experts": jax.vmap(one_expert)(expert_keys),
+        }
+
+    def _expert_ffn(ep, h):
+        """ep: expert params stacked on leading E axis; h: (E, C*, d)."""
+        def one(e_p, e_h):
+            g = lin_gate[1](e_p["gate"], e_h)
+            u = lin_up[1](e_p["up"], e_h)
+            return lin_down[1](e_p["down"], swiglu(g, u))
+        return jax.vmap(one)(ep, h)
+
+    def apply(p, x):
+        b, s, _ = x.shape
+        t = b * s
+        g = min(group_size, t)
+        assert t % g == 0, (t, g)
+        num_groups = t // g
+        cap = max(k, int(g * k * capacity_factor / E))
+        xt = x.reshape(num_groups, g, d)
+
+        logits = (xt.astype(jnp.float32) @ p["router"]["w"].T)  # (G, g, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, k)                  # (G, g, k)
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+        # Position of each (token, choice) within its expert's capacity buffer.
+        sel = jax.nn.one_hot(top_e, E, dtype=jnp.int32)         # (G, g, k, E)
+        flat_sel = sel.reshape(num_groups, g * k, E)
+        pos_in_expert = jnp.cumsum(flat_sel, axis=1) * flat_sel - 1  # (G, g*k, E)
+        pos_in_expert = pos_in_expert.reshape(num_groups, g, k, E)
+        keep = (pos_in_expert < cap) & (sel > 0)
+        # dispatch/combine tensors: (G, g, E, cap)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos_in_expert, -1), cap, dtype=dtype)
+        dispatch = (pos_oh * keep[..., None].astype(dtype)).sum(axis=2)
+        combine = jnp.einsum("Ggk,Ggkec->Ggec",
+                             top_p.astype(jnp.float32),
+                             (pos_oh * keep[..., None].astype(dtype)).astype(jnp.float32))
+
+        expert_in = jnp.einsum("Ggec,Ggd->eGcd", dispatch, xt.astype(dtype))
+        e_out = _expert_ffn(p["experts"], expert_in.reshape(E, num_groups * cap, d))
+        e_out = e_out.reshape(E, num_groups, cap, d)
+        y = jnp.einsum("Ggec,eGcd->Ggd", combine.astype(dtype), e_out)
+        y = y.reshape(b, s, d)
+
+        # Switch-style load-balance aux loss.
+        frac_tokens = jnp.mean(jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32),
+                               axis=(0, 1))
+        frac_probs = jnp.mean(probs, axis=(0, 1))
+        aux = E * jnp.sum(frac_tokens * frac_probs)
+        return y, aux
+
+    return init, apply

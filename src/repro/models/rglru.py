@@ -1,0 +1,115 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: x → [W_x branch → temporal conv1d(width w) → RG-LRU] ⊙ gelu(W_gate x)
+→ W_out. The RG-LRU is a *diagonal* gated linear recurrence:
+
+    r_t = σ(W_r ξ_t);  i_t = σ(W_i ξ_t)
+    log a_t = -c · softplus(Λ) · r_t          (c = 8, Λ learned)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ ξ_t)
+
+Diagonal + linear ⇒ ``lax.associative_scan`` over time (O(log S) depth) for
+training/prefill and an O(1)-state single step for decode — this is what
+makes the long_500k cell feasible for this arch.
+
+Projections (W_x, W_gate, W_out, W_r, W_i) are SLoPe-prunable GEMMs; Λ and
+conv kernels are small per-channel vectors and stay dense.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import make_linear
+
+__all__ = ["make_rglru_block", "RGLRUState"]
+
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array     # (b, d_rnn) recurrent state
+    conv: jax.Array  # (b, w-1, d_rnn) trailing inputs for the temporal conv
+
+
+def make_rglru_block(cfg: ModelConfig, *, sparse: bool, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    dr = cfg.rglru_d_rnn or cfg.d_model
+    w = cfg.conv_width
+
+    lin_x = make_linear(cfg.slope, dr, d, sparse=sparse, dtype=dtype)
+    lin_gate = make_linear(cfg.slope, dr, d, sparse=sparse, dtype=dtype)
+    lin_out = make_linear(cfg.slope, d, dr, sparse=sparse, dtype=dtype)
+    lin_r = make_linear(cfg.slope, dr, dr, sparse=sparse, dtype=dtype)
+    lin_i = make_linear(cfg.slope, dr, dr, sparse=sparse, dtype=dtype)
+
+    def init(key, *, adapter_rank: int = 0):
+        ks = jax.random.split(key, 7)
+        return {
+            "x": lin_x[0](ks[0], adapter_rank=adapter_rank),
+            "gate": lin_gate[0](ks[1], adapter_rank=adapter_rank),
+            "out": lin_out[0](ks[2], adapter_rank=adapter_rank),
+            "r": lin_r[0](ks[3], adapter_rank=adapter_rank),
+            "i": lin_i[0](ks[4], adapter_rank=adapter_rank),
+            "conv_w": (jax.random.normal(ks[5], (w, dr)) / jnp.sqrt(w)).astype(dtype),
+            "conv_b": jnp.zeros((dr,), dtype),
+            # Λ init so that a ≈ U(0.9, 0.999)^c at r=1 (Griffin appendix).
+            "lam": jnp.log(jnp.expm1(
+                -jnp.log(jax.random.uniform(ks[6], (dr,), minval=0.9, maxval=0.999)) / _C
+            )).astype(jnp.float32),
+        }
+
+    def _conv(p, xi, carry):
+        """Causal temporal conv1d. xi: (b, s, dr); carry: (b, w-1, dr)."""
+        full = jnp.concatenate([carry.astype(xi.dtype), xi], axis=1)
+        out = sum(
+            full[:, i : i + xi.shape[1]] * p["conv_w"][i]
+            for i in range(w)
+        ) + p["conv_b"]
+        new_carry = full[:, -(w - 1):] if w > 1 else carry
+        return out, new_carry
+
+    def _gates(p, xi):
+        r = jax.nn.sigmoid(lin_r[1](p["r"], xi).astype(jnp.float32))
+        i = jax.nn.sigmoid(lin_i[1](p["i"], xi).astype(jnp.float32))
+        log_a = -_C * jax.nn.softplus(p["lam"]) * r         # (b, s, dr)
+        gated = i * xi.astype(jnp.float32)
+        beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+        return log_a, beta * gated
+
+    def apply(p, x, state: RGLRUState | None = None):
+        b, s, _ = x.shape
+        xi = lin_x[1](p["x"], x)                            # (b, s, dr)
+        gate = jax.nn.gelu(lin_gate[1](p["gate"], x).astype(jnp.float32))
+        if state is None:
+            state = init_state(b)
+        xi, conv_carry = _conv(p, xi, state.conv)
+        log_a, u = _gates(p, xi)
+        if s == 1:
+            a = jnp.exp(log_a[:, 0])
+            h = a * state.h + u[:, 0]
+            hs = h[:, None]
+            new_state = RGLRUState(h, conv_carry)
+        else:
+            # associative scan over (log_a, u): (A1,B1)∘(A2,B2) = (A1+A2, B2+exp(A2)·B1)
+            def combine(left, right):
+                la, bu = left
+                ra, ru = right
+                return la + ra, ru + jnp.exp(ra) * bu
+
+            # prepend carried state as step 0 contribution
+            u0 = u.at[:, 0].add(jnp.exp(log_a[:, 0]) * state.h)
+            la_c, hs = jax.lax.associative_scan(combine, (log_a, u0), axis=1)
+            new_state = RGLRUState(hs[:, -1], conv_carry)
+        y = (hs * gate).astype(x.dtype)
+        return lin_out[1](p["out"], y), new_state
+
+    def init_state(batch: int):
+        return RGLRUState(
+            h=jnp.zeros((batch, dr), jnp.float32),
+            conv=jnp.zeros((batch, max(w - 1, 1), dr), jnp.float32),
+        )
+
+    return init, apply, init_state

@@ -1,0 +1,316 @@
+"""Model assembler: pattern-cycled blocks, segment scan + remat, caches.
+
+A model is compiled from a *layer plan*: the ``block_pattern`` is cycled over
+``num_layers`` and split into segments —
+
+  * the first block is **unrolled** and its linears stay dense when
+    ``slope.first_layer_dense`` (paper: "first linear layer after the input
+    is dense");
+  * a mixed-sparsity boundary at ``num_layers // 2`` when ``slope.tail_nm``
+    is set (paper Table 6);
+  * maximal uniform runs are **scanned** (stacked params, O(1) HLO in depth)
+    with per-group ``jax.checkpoint`` remat; stragglers are unrolled.
+
+Blocks are pre-norm residual: ``x += mixer(norm(x)); x += mlp(norm(x))``.
+Mixer kinds: attn | xattn (self+cross, enc-dec decoder) | recurrent (RG-LRU)
+| mlstm | slstm. MoE replaces the MLP when ``num_experts > 0``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.specs import constrain
+from .attention import KVCache, init_kv_cache, make_attention
+from .layers import gelu_mlp_act, make_embedding, make_linear, make_norm, swiglu
+from .moe import make_moe_mlp
+from .rglru import make_rglru_block
+from .xlstm import make_mlstm_block, make_slstm_block
+
+__all__ = ["make_block", "make_decoder_stack", "Segment", "plan_layers"]
+
+
+# ---------------------------------------------------------------------------
+# One block
+# ---------------------------------------------------------------------------
+
+
+def make_mlp(cfg: ModelConfig, *, sparse: bool, dtype, nm=None):
+    d, d_ff = cfg.d_model, cfg.d_ff
+    if cfg.act == "swiglu":
+        lin_g = make_linear(cfg.slope, d_ff, d, sparse=sparse, dtype=dtype, nm=nm)
+        lin_u = make_linear(cfg.slope, d_ff, d, sparse=sparse, dtype=dtype, nm=nm)
+        lin_d = make_linear(cfg.slope, d, d_ff, sparse=sparse, dtype=dtype, nm=nm)
+
+        def init(key, *, adapter_rank=0):
+            k1, k2, k3 = jax.random.split(key, 3)
+            return {"gate": lin_g[0](k1, adapter_rank=adapter_rank),
+                    "up": lin_u[0](k2, adapter_rank=adapter_rank),
+                    "down": lin_d[0](k3, adapter_rank=adapter_rank)}
+
+        def apply(p, x):
+            return lin_d[1](p["down"], swiglu(lin_g[1](p["gate"], x), lin_u[1](p["up"], x)))
+    else:  # gelu MLP (GPT2/OPT/whisper style)
+        lin_u = make_linear(cfg.slope, d_ff, d, sparse=sparse, dtype=dtype,
+                            use_bias=True, nm=nm)
+        lin_d = make_linear(cfg.slope, d, d_ff, sparse=sparse, dtype=dtype,
+                            use_bias=True, nm=nm)
+
+        def init(key, *, adapter_rank=0):
+            k1, k2 = jax.random.split(key)
+            return {"up": lin_u[0](k1, adapter_rank=adapter_rank),
+                    "down": lin_d[0](k2, adapter_rank=adapter_rank)}
+
+        def apply(p, x):
+            return lin_d[1](p["down"], gelu_mlp_act(lin_u[1](p["up"], x)))
+    return init, apply
+
+
+def make_block(cfg: ModelConfig, kind: str, *, sparse: bool, nm=None,
+               causal: bool = True, dtype=jnp.bfloat16,
+               q_chunk: int = 1024, kv_chunk: int = 1024, triangular: bool = False):
+    """Build one block. Returns (init, apply, init_cache).
+
+    apply(p, x, *, positions, cache, decode_pos, enc_out, enc_positions)
+      → (x_new, new_cache, aux_loss)
+    ``cache`` is None in train/prefill mode.
+    """
+    cfg = cfg if nm is None else cfg  # nm flows to linears explicitly below
+    norm_f = make_norm(cfg.norm, cfg.d_model, dtype)
+    has_mlp = cfg.d_ff > 0 and kind in ("attn", "xattn", "recurrent")
+    is_moe = cfg.num_experts > 0 and has_mlp
+    mlp = (make_moe_mlp(cfg, sparse=sparse and cfg.slope.prune_mlp, dtype=dtype, nm=nm)
+           if is_moe else
+           make_mlp(cfg, sparse=sparse and cfg.slope.prune_mlp, dtype=dtype, nm=nm)
+           if has_mlp else None)
+    attn_sparse = sparse and cfg.slope.prune_attention
+
+    if kind in ("attn", "xattn"):
+        attn = make_attention(cfg, sparse=attn_sparse, causal=causal, dtype=dtype,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk, triangular=triangular)
+    if kind == "xattn":
+        xatt = make_attention(cfg, sparse=attn_sparse, cross=True, dtype=dtype,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk)
+    if kind == "recurrent":
+        rec = make_rglru_block(cfg, sparse=attn_sparse, dtype=dtype)
+    if kind == "mlstm":
+        rec = make_mlstm_block(cfg, sparse=attn_sparse, dtype=dtype)
+    if kind == "slstm":
+        rec = make_slstm_block(cfg, sparse=attn_sparse, dtype=dtype)
+
+    def init(key, *, adapter_rank: int = 0):
+        ks = jax.random.split(key, 6)
+        p: dict = {"norm1": norm_f[0](ks[0])}
+        if kind in ("attn", "xattn"):
+            p["attn"] = attn[0](ks[1], adapter_rank=adapter_rank)
+        else:
+            p["mixer"] = rec[0](ks[1], adapter_rank=adapter_rank)
+        if kind == "xattn":
+            p["norm_x"] = norm_f[0](ks[2])
+            p["xattn"] = xatt[0](ks[3], adapter_rank=adapter_rank)
+        if mlp is not None:
+            p["norm2"] = norm_f[0](ks[4])
+            p["mlp"] = mlp[0](ks[5], adapter_rank=adapter_rank)
+        return p
+
+    def apply(p, x, *, positions, cache=None, decode_pos=None,
+              enc_out=None, enc_positions=None):
+        aux = jnp.zeros((), jnp.float32)
+        h = norm_f[1](p["norm1"], x)
+        if kind in ("attn", "xattn"):
+            self_cache = cache["self"] if isinstance(cache, dict) else cache
+            y, new_cache = attn[1](p["attn"], h, positions=positions,
+                                   cache=self_cache, decode_pos=decode_pos)
+        else:
+            y, new_cache = rec[1](p["mixer"], h, cache)
+        x = x + y
+        if kind == "xattn":
+            h = norm_f[1](p["norm_x"], x)
+            y, _ = xatt[1](p["xattn"], h, positions=positions, kv_x=enc_out,
+                           kv_positions=enc_positions)
+            x = x + y
+            if isinstance(cache, dict):
+                new_cache = {"self": new_cache}
+        if mlp is not None:
+            h = norm_f[1](p["norm2"], x)
+            if is_moe:
+                y, aux = mlp[1](p["mlp"], h)
+            else:
+                y = mlp[1](p["mlp"], h)
+            x = x + y
+        return x, new_cache, aux
+
+    def init_cache(batch: int, cache_len: int):
+        if kind in ("attn", "xattn"):
+            eff = min(cache_len, cfg.window) if (cfg.attention == "swa" and cfg.window) else cache_len
+            c = init_kv_cache(batch, eff, cfg.num_kv_heads, cfg.resolved_head_dim,
+                              dtype=jnp.bfloat16)
+            return {"self": c} if kind == "xattn" else c
+        return rec[2](batch)
+
+    return init, apply, init_cache
+
+
+# ---------------------------------------------------------------------------
+# Layer plan
+# ---------------------------------------------------------------------------
+
+
+class Segment(NamedTuple):
+    kinds: tuple[str, ...]   # block kinds of ONE group (pattern slice)
+    repeats: int             # number of groups; scanned iff repeats > 1 & scan on
+    sparse: bool
+    nm: tuple[int, int] | None
+    scanned: bool
+
+
+def plan_layers(cfg: ModelConfig) -> list[Segment]:
+    pattern = cfg.block_pattern
+    kinds = [pattern[i % len(pattern)] for i in range(cfg.num_layers)]
+    # (start, end, sparse, nm) runs
+    runs: list[tuple[int, int, bool, tuple[int, int] | None]] = []
+    sparse_on = cfg.slope.enabled
+    cut = cfg.num_layers // 2 if cfg.slope.tail_nm else cfg.num_layers
+    i = 0
+    if cfg.slope.first_layer_dense and cfg.num_layers > 0:
+        runs.append((0, 1, False, None))
+        i = 1
+    if i < min(cut, cfg.num_layers):
+        runs.append((i, cut, sparse_on, None))
+    if cut < cfg.num_layers:
+        runs.append((cut, cfg.num_layers, sparse_on, cfg.slope.tail_nm))
+
+    segs: list[Segment] = []
+    plen = len(pattern)
+    for (s, e, sp, nm) in runs:
+        n = e - s
+        if n <= 0:
+            continue
+        # align to pattern phase: scan only groups starting at phase 0
+        while n > 0 and (s % plen != 0 or n < plen):
+            segs.append(Segment((kinds[s],), 1, sp, nm, False))
+            s += 1
+            n -= 1
+        if n >= plen:
+            groups = n // plen
+            if groups >= 2 and cfg.scan_layers:
+                segs.append(Segment(tuple(pattern), groups, sp, nm, True))
+            else:
+                for g in range(groups):
+                    for j in range(plen):
+                        segs.append(Segment((kinds[s + g * plen + j],), 1, sp, nm, False))
+            s += groups * plen
+            n -= groups * plen
+        for j in range(n):  # tail stragglers
+            segs.append(Segment((kinds[s + j],), 1, sp, nm, False))
+    assert sum(len(g.kinds) * g.repeats for g in segs) == cfg.num_layers
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Decoder stack (used for LM decoders and the whisper encoder alike)
+# ---------------------------------------------------------------------------
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)  # "full": save only block boundaries
+
+
+def make_decoder_stack(cfg: ModelConfig, *, causal: bool = True,
+                       dtype=jnp.bfloat16, q_chunk: int = 1024,
+                       kv_chunk: int = 1024, triangular: bool = False):
+    """The block stack (no embeddings). Returns (init, apply, init_caches).
+
+    apply(p, x, *, positions, caches, decode_pos, enc_out, enc_positions)
+      → (x, new_caches, aux)
+    ``caches`` is a list aligned with segments (None in train mode).
+    """
+    segs = plan_layers(cfg)
+    built = []  # per segment: (block modules per kind)
+    for seg in segs:
+        mods = tuple(
+            make_block(cfg, k, sparse=seg.sparse, nm=seg.nm, causal=causal,
+                       dtype=dtype, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                       triangular=triangular)
+            for k in seg.kinds)
+        built.append(mods)
+
+    def init(key, *, adapter_rank: int = 0):
+        params = []
+        keys = jax.random.split(key, len(segs))
+        for seg, mods, k in zip(segs, built, keys):
+            if seg.scanned:
+                gkeys = jax.random.split(k, seg.repeats)
+
+                def one_group(gk, _mods=mods):
+                    ks = jax.random.split(gk, len(_mods))
+                    return tuple(m[0](kk, adapter_rank=adapter_rank)
+                                 for m, kk in zip(_mods, ks))
+
+                params.append(jax.vmap(one_group)(gkeys))
+            else:
+                params.append(tuple(m[0](kk, adapter_rank=adapter_rank)
+                                    for m, kk in zip(mods, jax.random.split(k, len(mods)))))
+        return {"segments": params}
+
+    def apply(p, x, *, positions, caches=None, decode_pos=None,
+              enc_out=None, enc_positions=None):
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for si, (seg, mods) in enumerate(zip(segs, built)):
+            seg_p = p["segments"][si]
+            seg_cache = None if caches is None else caches[si]
+
+            def group_body(x_, gp, gc, _mods=mods):
+                aux_g = jnp.zeros((), jnp.float32)
+                ncs = []
+                for bi, m in enumerate(_mods):
+                    bc = None if gc is None else gc[bi]
+                    x_, nc, a = m[1](gp[bi], x_, positions=positions, cache=bc,
+                                     decode_pos=decode_pos, enc_out=enc_out,
+                                     enc_positions=enc_positions)
+                    ncs.append(nc)
+                    aux_g = aux_g + a
+                x_ = constrain(x_, "residual")
+                return x_, tuple(ncs), aux_g
+
+            if seg.scanned:
+                body = _remat(group_body, cfg.remat)
+
+                def scan_fn(carry, xs, _body=body):
+                    x_, aux_ = carry
+                    gp, gc = xs
+                    x_, ncs, a = _body(x_, gp, gc)
+                    return (x_, aux_ + a), ncs
+
+                xs = (seg_p, seg_cache)
+                (x, aux_total), ncs = jax.lax.scan(scan_fn, (x, aux_total), xs)
+                new_caches.append(ncs)
+            else:
+                body = _remat(group_body, cfg.remat)
+                x, ncs, a = body(x, seg_p, seg_cache)
+                aux_total = aux_total + a
+                new_caches.append(ncs)
+        return x, (new_caches if caches is not None else None), aux_total
+
+    def init_caches(batch: int, cache_len: int):
+        caches = []
+        for seg, mods in zip(segs, built):
+            one = lambda _mods=mods: tuple(m[2](batch, cache_len) for m in _mods)
+            if seg.scanned:
+                stacked = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(x, (seg.repeats, *x.shape)), one())
+                caches.append(stacked)
+            else:
+                caches.append(one())
+        return caches
+
+    return init, apply, init_caches

@@ -1,0 +1,225 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, strictly sequential scan).
+
+mLSTM is implemented in its chunkwise-parallel form (linear-attention style):
+within a chunk, a decay-masked attention computes the intra-chunk part; a
+(d_head × d_head) state matrix carries information across chunks. This is the
+production formulation (O(S·L) memory) and gives honest HLO FLOPs, unlike a
+per-token scan. Stabilization follows the paper's running-max trick; the
+output normalizer is lower-bounded at 1 (|n^T q| ∨ 1), the paper's Eq. (18)
+form.
+
+sLSTM keeps per-head recurrent mixing (block-diagonal R), which makes it
+inherently sequential → lax.scan over time. Decode is a single fused step for
+both.
+
+All in/out projections go through the SLoPe linear factory; the per-head gate
+parameters are vectors (no GEMM) and stay dense — DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import make_linear
+
+__all__ = ["make_mlstm_block", "make_slstm_block", "MLSTMState", "SLSTMState"]
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # (b, h, dh, dh) matrix memory
+    n: jax.Array  # (b, h, dh) normalizer
+    m: jax.Array  # (b, h) stabilizer (log domain)
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (b, h, dh)
+    n: jax.Array  # (b, h, dh)
+    h: jax.Array  # (b, h, dh)
+    m: jax.Array  # (b, h, dh)
+
+
+def _mlstm_chunk(q, k, v, log_i, log_f, state: MLSTMState):
+    """One chunk of the chunkwise-parallel mLSTM.
+
+    q,k,v: (b, L, h, dh); log_i/log_f: (b, L, h). Returns (y, new_state).
+    """
+    b, L, h, dh = q.shape
+    F = jnp.cumsum(log_f, axis=1)                       # (b, L, h) inclusive
+    # log decay from entry s to position t (s<=t): F_t - F_s + log i_s
+    log_d = F[:, :, None, :] - F[:, None, :, :] + log_i[:, None, :, :]
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    log_d = jnp.where(causal[None, :, :, None], log_d, -jnp.inf)
+    # inter-chunk: contribution of carried state decayed by F_t (+ m_prev)
+    log_inter = F + state.m[:, None, :]                 # (b, L, h)
+    m_intra = jnp.max(log_d, axis=2)                    # (b, L, h)
+    m_new = jnp.maximum(m_intra, log_inter)             # running stabilizer per t
+    d = jnp.exp(log_d - m_new[:, :, None, :])           # (b, L, L, h)
+    inter_w = jnp.exp(log_inter - m_new)                # (b, L, h)
+
+    qk = jnp.einsum("blhd,bshd->blsh", q, k) * (dh ** -0.5)
+    num = jnp.einsum("blsh,blsh,bshd->blhd", qk, d.astype(qk.dtype), v)
+    num = num + inter_w[..., None].astype(qk.dtype) * jnp.einsum(
+        "blhd,bhde->blhe", q, state.c.astype(q.dtype)) * (dh ** -0.5)
+    den = jnp.einsum("blsh,blsh->blh", qk, d.astype(qk.dtype))
+    den = den + inter_w.astype(qk.dtype) * jnp.einsum(
+        "blhd,bhd->blh", q, state.n.astype(q.dtype)) * (dh ** -0.5)
+    y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+
+    # New carried state at chunk end (position L-1):
+    F_tot = F[:, -1, :]                                  # (b, h) total chunk decay
+    m_carry = jnp.maximum(F_tot + state.m, jnp.max(F_tot[:, None, :] - F + log_i, axis=1))
+    w_prev = jnp.exp(F_tot + state.m - m_carry)          # (b, h)
+    w_s = jnp.exp(F_tot[:, None, :] - F + log_i - m_carry[:, None, :])  # (b, L, h)
+    c_new = state.c * w_prev[..., None, None] + jnp.einsum(
+        "bshd,bshe,bsh->bhde", k, v, w_s.astype(k.dtype))
+    n_new = state.n * w_prev[..., None] + jnp.einsum(
+        "bshd,bsh->bhd", k, w_s.astype(k.dtype))
+    return y, MLSTMState(c_new, n_new, m_carry)
+
+
+def make_mlstm_block(cfg: ModelConfig, *, sparse: bool, dtype=jnp.bfloat16,
+                     chunk: int = 256):
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    lin_q = make_linear(cfg.slope, d, d, sparse=sparse, dtype=dtype)
+    lin_k = make_linear(cfg.slope, d, d, sparse=sparse, dtype=dtype)
+    lin_v = make_linear(cfg.slope, d, d, sparse=sparse, dtype=dtype)
+    lin_o = make_linear(cfg.slope, d, d, sparse=sparse, dtype=dtype)
+
+    def init(key, *, adapter_rank: int = 0):
+        ks = jax.random.split(key, 6)
+        return {
+            "q": lin_q[0](ks[0], adapter_rank=adapter_rank),
+            "k": lin_k[0](ks[1], adapter_rank=adapter_rank),
+            "v": lin_v[0](ks[2], adapter_rank=adapter_rank),
+            "o": lin_o[0](ks[3], adapter_rank=adapter_rank),
+            "w_i": (jax.random.normal(ks[4], (h, d)) * 0.01).astype(jnp.float32),
+            "b_i": jnp.full((h,), -3.0, jnp.float32),
+            "w_f": (jax.random.normal(ks[5], (h, d)) * 0.01).astype(jnp.float32),
+            "b_f": jnp.full((h,), 3.0, jnp.float32),
+        }
+
+    def _proj(p, x):
+        b, s, _ = x.shape
+        q = lin_q[1](p["q"], x).reshape(b, s, h, dh)
+        k = lin_k[1](p["k"], x).reshape(b, s, h, dh)
+        v = lin_v[1](p["v"], x).reshape(b, s, h, dh)
+        x32 = x.astype(jnp.float32)
+        log_i = x32 @ p["w_i"].T + p["b_i"]              # (b, s, h) pre-act
+        log_f = jax.nn.log_sigmoid(x32 @ p["w_f"].T + p["b_f"])
+        return q, k, v, log_i, log_f
+
+    def apply(p, x, state: MLSTMState | None = None):
+        """Train/prefill: x (b, s, d), state None → scan over chunks.
+        Decode: x (b, 1, d) with state → single recurrent step."""
+        b, s, _ = x.shape
+        q, k, v, log_i, log_f = _proj(p, x)
+        if state is None:
+            state = MLSTMState(
+                c=jnp.zeros((b, h, dh, dh), jnp.float32),
+                n=jnp.zeros((b, h, dh), jnp.float32),
+                m=jnp.full((b, h), -1e30, jnp.float32),
+            )
+        if s == 1:
+            y, new_state = _mlstm_decode_step(q, k, v, log_i, log_f, state, dh)
+        else:
+            L = min(chunk, s)
+            assert s % L == 0
+            nch = s // L
+
+            def body(st, blk):
+                qq, kk, vv, li, lf = blk
+                yy, st2 = _mlstm_chunk(qq, kk, vv, li, lf, st)
+                return st2, yy
+
+            blks = tuple(
+                a.reshape(b, nch, L, *a.shape[2:]).swapaxes(0, 1)
+                for a in (q, k, v, log_i, log_f))
+            new_state, ys = jax.lax.scan(body, state, blks)
+            y = ys.swapaxes(0, 1).reshape(b, s, h, dh)
+        y = y.reshape(b, s, d).astype(x.dtype)
+        return lin_o[1](p["o"], y), new_state
+
+    def _mlstm_decode_step(q, k, v, log_i, log_f, state, dh_):
+        q1, k1, v1 = (a[:, 0] for a in (q, k, v))        # (b, h, dh)
+        li, lf = log_i[:, 0], log_f[:, 0]                # (b, h)
+        m_new = jnp.maximum(lf + state.m, li)
+        w_prev = jnp.exp(lf + state.m - m_new)[..., None, None]
+        w_in = jnp.exp(li - m_new)[..., None, None]
+        c = state.c * w_prev + w_in * jnp.einsum("bhd,bhe->bhde", k1, v1)
+        n = state.n * w_prev[..., 0] + w_in[..., 0] * k1
+        num = jnp.einsum("bhd,bhde->bhe", q1, c.astype(q1.dtype)) * (dh_ ** -0.5)
+        den = jnp.einsum("bhd,bhd->bh", q1, n.astype(q1.dtype)) * (dh_ ** -0.5)
+        y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        return y[:, None], MLSTMState(c, n, m_new)
+
+    def init_state(batch: int):
+        return MLSTMState(
+            c=jnp.zeros((batch, h, dh, dh), jnp.float32),
+            n=jnp.zeros((batch, h, dh), jnp.float32),
+            m=jnp.full((batch, h), -1e30, jnp.float32),
+        )
+
+    return init, apply, init_state
+
+
+def make_slstm_block(cfg: ModelConfig, *, sparse: bool, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    lin_in = make_linear(cfg.slope, 4 * d, d, sparse=sparse, dtype=dtype)
+    lin_o = make_linear(cfg.slope, d, d, sparse=sparse, dtype=dtype)
+
+    def init(key, *, adapter_rank: int = 0):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "in": lin_in[0](k1, adapter_rank=adapter_rank),
+            # block-diagonal recurrent mixing, per head: (4 gates, h, dh, dh)
+            "r": (jax.random.normal(k2, (4, h, dh, dh)) / jnp.sqrt(dh)).astype(jnp.float32),
+            "o": lin_o[0](k3, adapter_rank=adapter_rank),
+        }
+
+    def _step(p, zifo, state: SLSTMState):
+        """zifo: (b, 4, h, dh) pre-activations from input; recurrent part added here."""
+        rh = jnp.einsum("ghde,bhe->bghd", p["r"], state.h)  # (b, 4, h, dh)
+        pre = zifo.astype(jnp.float32) + rh
+        z = jnp.tanh(pre[:, 0])
+        i_log = pre[:, 1]                                   # exp input gate (log dom)
+        f_log = jax.nn.log_sigmoid(pre[:, 2])
+        o = jax.nn.sigmoid(pre[:, 3])
+        m_new = jnp.maximum(f_log + state.m, i_log)
+        i_s = jnp.exp(i_log - m_new)
+        f_s = jnp.exp(f_log + state.m - m_new)
+        c = f_s * state.c + i_s * z
+        n = jnp.maximum(f_s * state.n + i_s, 1e-6)
+        hid = o * (c / n)
+        return SLSTMState(c, n, hid, m_new)
+
+    def apply(p, x, state: SLSTMState | None = None):
+        b, s, _ = x.shape
+        zifo = lin_in[1](p["in"], x).reshape(b, s, 4, h, dh)
+        if state is None:
+            state = init_state(b)
+        if s == 1:
+            new_state = _step(p, zifo[:, 0], state)
+            hs = new_state.h[:, None]
+        else:
+            def body(st, z_t):
+                st2 = _step(p, z_t, st)
+                return st2, st2.h
+
+            new_state, hs = jax.lax.scan(body, state, zifo.swapaxes(0, 1))
+            hs = hs.swapaxes(0, 1)                          # (b, s, h, dh)
+        y = hs.reshape(b, s, d).astype(x.dtype)
+        return lin_o[1](p["o"], y), new_state
+
+    def init_state(batch: int):
+        z = jnp.zeros((batch, h, dh), jnp.float32)
+        return SLSTMState(z, z, z, jnp.full((batch, h, dh), -1e30, jnp.float32))
+
+    return init, apply, init_state

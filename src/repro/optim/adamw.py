@@ -1,0 +1,120 @@
+"""Masked AdamW for SLoPe (paper Alg. 1 lines 13–18).
+
+Key properties:
+  * Optimizer states exist **only for trainable float leaves** — for the
+    compressed representation that means m/v are allocated on the packed
+    ``values`` arrays (N/M of dense), which *is* the paper's optimizer-state
+    memory saving. Static leaves (packed indices, rc bitmaps, masks) carry no
+    state and are never updated.
+  * For the dense_masked representation, gradients arrive pre-masked from the
+    custom VJP (Alg. 1 line 13), so pruned weights receive no update and
+    weight decay is masked too (decay · w is zero off-support by invariant).
+  * Decoupled weight decay (AdamW); no decay on norms/biases/1-d leaves.
+  * fp32 states regardless of param dtype; update cast back to param dtype.
+
+Implemented directly on pytrees (no optax dependency).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+__all__ = ["AdamWState", "init_adamw", "adamw_update", "clip_by_global_norm",
+           "is_trainable"]
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def is_trainable(path_str: str, leaf) -> bool:
+    if not (hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating)):
+        return False
+    # static mask constants in the dense_masked representation
+    if "mask_r" in path_str or "mask_rc" in path_str:
+        return False
+    return True
+
+
+def _decay_ok(path_str: str, leaf) -> bool:
+    if leaf.ndim < 2:
+        return False
+    for k in ("norm", "pos_embed", "lam", "conv"):
+        if k in path_str:
+            return False
+    return True
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        out.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return "/".join(out)
+
+
+def init_adamw(params) -> AdamWState:
+    def zero_like(path, p):
+        if is_trainable(_path_str(path), p):
+            return jnp.zeros(p.shape, jnp.float32)
+        return None
+
+    mu = jax.tree_util.tree_map_with_path(zero_like, params)
+    nu = jax.tree_util.tree_map_with_path(zero_like, params)
+    return AdamWState(mu, nu, jnp.zeros((), jnp.int32))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = [g for g in jax.tree_util.tree_leaves(grads)
+              if hasattr(g, "dtype") and jnp.issubdtype(g.dtype, jnp.floating)]
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+
+    def maybe(g):
+        if hasattr(g, "dtype") and jnp.issubdtype(g.dtype, jnp.floating):
+            return (g.astype(jnp.float32) * scale).astype(g.dtype)
+        return g
+
+    return jax.tree_util.tree_map(maybe, grads), gn
+
+
+def adamw_update(params, grads, state: AdamWState, lr, cfg: TrainConfig):
+    """One AdamW step. Non-trainable leaves pass through unchanged."""
+    count = state.count + 1
+    b1, b2, eps = cfg.b1, cfg.b2, cfg.eps
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        ps = _path_str(path)
+        if not is_trainable(ps, p) or m is None:
+            return p, m, v
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if cfg.weight_decay and _decay_ok(ps, p):
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, m, v
+
+    flat_p = jax.tree_util.tree_flatten_with_path(params)
+    treedef = flat_p[1]
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    new_p, new_m, new_v = [], [], []
+    for (path, p), g, m, v in zip(flat_p[0], flat_g, flat_m, flat_v):
+        a, b, c = upd(path, p, g, m, v)
+        new_p.append(a)
+        new_m.append(b)
+        new_v.append(c)
+    return (jax.tree_util.tree_unflatten(treedef, new_p),
+            AdamWState(jax.tree_util.tree_unflatten(treedef, new_m),
+                       jax.tree_util.tree_unflatten(treedef, new_v),
+                       count))

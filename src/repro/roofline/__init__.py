@@ -1,0 +1,3 @@
+from .hw import HW, V5E
+from .analysis import (collective_bytes, RooflineReport, model_flops,
+                       param_count, active_param_count)

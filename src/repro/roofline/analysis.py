@@ -1,0 +1,173 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+    compute    = HLO_FLOPs / (chips × peak)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes_per_chip / link_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()``. Collective bytes are NOT
+in cost_analysis — we parse the optimized HLO text and sum operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. The SPMD-partitioned module is the per-device program, so
+parsed operand sizes are already per-chip; cost_analysis FLOPs are per-chip
+on the partitioned module too (verified empirically in tests/test_roofline).
+
+Caveats (stated, not hidden): while-loop bodies are counted once by XLA's
+static analysis — models with time-step scans (sLSTM) undercount; we report
+the analytic MODEL_FLOPS next to HLO_FLOPs so the gap is visible either way.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .hw import HW, V5E
+
+__all__ = ["collective_bytes", "model_flops", "param_count",
+           "active_param_count", "RooflineReport"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "u4": 1,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape like ``bf16[128,1024]{1,0}`` or a tuple."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum *output* operand bytes of every collective op, per opcode.
+
+    Output-shape accounting ≈ bytes placed on the wire per device for AG/AR;
+    for reduce-scatter the input is larger — we take max(in, out) per op by
+    parsing the full instruction line (shape on the LHS is the output).
+    """
+    per_op: dict[str, int] = {k: 0 for k in _COLL_OPS}
+    counts: dict[str, int] = {k: 0 for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # "  name = bf16[...] all-gather(bf16[...] ...), ..."
+        m = re.match(r"^[%\w\.\-]+\s*=\s*(.+?)\s+([a-z\-]+)\(", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        if op.rstrip("-start").rstrip("-done") not in _COLL_OPS and op not in _COLL_OPS:
+            base = op.replace("-start", "").replace("-done", "")
+            if base not in _COLL_OPS:
+                continue
+            op = base
+        else:
+            op = op.replace("-start", "").replace("-done", "")
+        if op.endswith("-done"):
+            continue
+        out_b = _shape_bytes(m.group(1))
+        per_op[op] += out_b
+        counts[op] += 1
+    total = sum(per_op.values())
+    return {"total_bytes": total, "per_op_bytes": per_op, "per_op_counts": counts}
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective: dict
+    model_flops: float
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_flop_ratio: float = 0.0
+    extra: dict = field(default_factory=dict)
+
+    def finalize(self, hw: HW = V5E):
+        # cost_analysis is per-chip on the SPMD-partitioned module.
+        self.compute_s = self.hlo_flops / hw.peak_flops_bf16
+        self.memory_s = self.hlo_bytes / hw.hbm_bw
+        self.collective_s = self.collective["total_bytes"] / hw.ici_link_bw
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        per_chip_model = self.model_flops / self.chips
+        self.useful_flop_ratio = (per_chip_model / self.hlo_flops
+                                  if self.hlo_flops else 0.0)
+        return self
+
+    def to_dict(self) -> dict:
+        return {k: (v if not isinstance(v, np.generic) else v.item())
+                for k, v in self.__dict__.items()}
+
+
+def param_count(cfg) -> float:
+    """Analytic dense-equivalent parameter count N (embeddings + blocks)."""
+    d, L, V = cfg.d_model, cfg.num_layers, cfg.vocab_size
+    h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    total = V * d * (1 if cfg.tie_embeddings else 2)
+    kinds = [cfg.block_pattern[i % len(cfg.block_pattern)] for i in range(L)]
+    for kind in kinds:
+        if kind in ("attn", "xattn"):
+            attn = d * h * dh + 2 * d * kvh * dh + h * dh * d
+            if kind == "xattn":
+                attn *= 2
+            total += attn
+        elif kind == "recurrent":
+            dr = cfg.rglru_d_rnn or d
+            total += 2 * d * dr + dr * d + 2 * dr * dr
+        elif kind in ("mlstm", "slstm"):
+            total += 4 * d * d if kind == "mlstm" else (4 * d * d + d * d)
+        if kind in ("attn", "xattn") and cfg.d_ff:
+            n_mat = 3 if cfg.act == "swiglu" else 2
+            ff = n_mat * d * cfg.d_ff
+            total += ff * max(cfg.num_experts, 1)
+        elif kind == "recurrent" and cfg.d_ff:
+            n_mat = 3 if cfg.act == "swiglu" else 2
+            total += n_mat * d * cfg.d_ff
+    if cfg.is_encoder_decoder:
+        enc = cfg.encoder_layers * (2 * d * h * dh + 2 * d * kvh * dh
+                                    + (3 if cfg.act == "swiglu" else 2) * d * cfg.d_ff)
+        total += enc
+    return float(total)
+
+
+def active_param_count(cfg) -> float:
+    """N_active for MoE (experts_per_token of num_experts)."""
+    if not cfg.num_experts:
+        return param_count(cfg)
+    dense_ff_all = param_count(cfg)
+    n_mat = 3 if cfg.act == "swiglu" else 2
+    ff_one = n_mat * cfg.d_model * cfg.d_ff
+    kinds = [cfg.block_pattern[i % len(cfg.block_pattern)] for i in range(cfg.num_layers)]
+    n_moe_layers = sum(1 for k in kinds if k in ("attn", "xattn"))
+    all_experts = ff_one * cfg.num_experts * n_moe_layers
+    active = ff_one * cfg.experts_per_token * n_moe_layers
+    return dense_ff_all - all_experts + active
+
+
+def model_flops(cfg, tokens: float, *, kind: str = "train") -> float:
+    """6·N·D (train) / 2·N·D (inference) with N_active for MoE."""
+    n = active_param_count(cfg)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

@@ -1,0 +1,326 @@
+"""Trip-count-aware HLO cost analysis (FLOPs / HBM bytes / collective bytes).
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE — useless for
+production graphs built from scans (layer scan, microbatch scan, chunked
+attention). This analyzer parses the optimized post-SPMD HLO text and walks
+the call graph with multiplicities:
+
+  * while loops → trip count parsed from the canonical induction pattern in
+    the condition computation (``compare(iter, constant(N)), direction=LT``);
+    unparseable conditions get multiplier 1 and are reported in
+    ``unknown_whiles``;
+  * dots → 2 · prod(output dims) · prod(contracting dims) FLOPs (batch dims
+    handled implicitly: output = batch × lhs-free × rhs-free);
+  * HBM bytes: for every *top-level* instruction of a scheduled computation
+    (fusion internals excluded — they live in registers/VMEM), bytes =
+    Σ operand bytes + output bytes. This mirrors XLA's own accounting and
+    upper-bounds HBM traffic under perfect fusion;
+  * collectives: all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute output bytes × multiplicity, attributed per opcode.
+
+Per-device numbers (the module is the SPMD-partitioned per-device program).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f8e4m3fn|f8e5m2|[a-z]+[0-9]+|pred|token)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(.*\{\s*$")
+_INSTR = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_CALLED_MULTI = re.compile(r"(body|condition|to_apply)=%?([\w\.\-]+)")
+_TRIP_CFG = re.compile(r"known_trip_count\D+(\d+)")
+
+
+def _shape_elems_bytes(shape_str: str):
+    elems, nbytes = 0, 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclass
+class _Instr:
+    name: str
+    out_shape: str
+    opcode: str
+    rest: str
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    per_collective: dict = field(default_factory=dict)
+    collective_counts: dict = field(default_factory=dict)
+    dot_flops: float = 0.0
+    while_trips: dict = field(default_factory=dict)
+    unknown_whiles: int = 0
+    bytes_by_opcode: dict = field(default_factory=dict)
+
+    def top_bytes(self, k: int = 10) -> list:
+        return sorted(self.bytes_by_opcode.items(), key=lambda kv: -kv[1])[:k]
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "per_collective": self.per_collective,
+            "collective_counts": self.collective_counts,
+            "while_trips": self.while_trips,
+            "unknown_whiles": self.unknown_whiles,
+        }
+
+
+def _parse_computations(hlo: str):
+    comps: dict[str, list[_Instr]] = {}
+    shapes: dict[str, str] = {}
+    entry: str | None = None
+    cur: list[_Instr] | None = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        hdr = _COMP_HDR.match(line)
+        if hdr and line.endswith("{"):
+            cur = []
+            comps[hdr.group(2)] = cur
+            if hdr.group(1):
+                entry = hdr.group(2)
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if m:
+            ins = _Instr(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.append(ins)
+            shapes[ins.name] = ins.out_shape
+    return comps, shapes, entry
+
+
+def _args_of(ins: _Instr) -> list[str]:
+    """Operand names of an instruction (scheduled HLO prints bare names)."""
+    depth = 1
+    out = []
+    token = ""
+    for ch in ins.rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth >= 1 and ch != ",":
+            token += ch
+        elif depth >= 1:
+            out.append(token)
+            token = ""
+    if token:
+        out.append(token)
+    return [t.strip().lstrip("%") for t in out if t.strip()]
+
+
+def _trip_count(cond: list[_Instr]) -> int | None:
+    """Canonical scan condition: iter (gte) LT constant(N)."""
+    consts: dict[str, int] = {}
+    for ins in cond:
+        if ins.opcode == "constant":
+            cm = re.search(r"constant\((-?\d+)\)", f"constant({ins.rest}")
+            if cm:
+                consts[ins.name] = int(cm.group(1))
+            else:
+                cm2 = re.match(r"^(-?\d+)\)?", ins.rest)
+                if cm2:
+                    consts[ins.name] = int(cm2.group(1))
+    for ins in cond:
+        if ins.opcode == "compare" and "direction=LT" in ins.rest:
+            args = [a.strip().lstrip("%") for a in ins.rest.split("),")[0].split(",")]
+            names = [re.sub(r".*\s", "", a) for a in args]
+            for nm in names:
+                base = nm.split(" ")[-1]
+                if base in consts:
+                    return consts[base]
+    return None
+
+
+def _dot_flops(ins: _Instr, shapes: dict[str, str]) -> float:
+    out_elems, _ = _shape_elems_bytes(ins.out_shape)
+    args = _args_of(ins)
+    if not args:
+        return 0.0
+    lhs_shape = shapes.get(args[0], "")
+    lm = _SHAPE_RE.search(lhs_shape)
+    if lm is None:
+        return 0.0
+    lhs_dims = [int(d) for d in lm.group(2).split(",") if d]
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+    contract = 1
+    if cm and cm.group(1):
+        for idx in cm.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return 2.0 * out_elems * contract
+
+
+def _instr_bytes(ins: _Instr, shapes: dict[str, str]) -> int:
+    _, out_b = _shape_elems_bytes(ins.out_shape)
+    in_b = 0
+    for a in _args_of(ins):
+        _, b = _shape_elems_bytes(shapes.get(a, ""))
+        in_b += b
+    return out_b + in_b
+
+
+_ALIASING = {"dynamic-slice", "dynamic-update-slice", "gather", "scatter"}
+
+
+def _aliasing_bytes(ins: _Instr, shapes: dict[str, str]) -> int:
+    """HBM traffic of in-place / slicing ops (XLA aliases the big buffer):
+
+      * update pattern (out ≈ largest operand, e.g. dynamic-update-slice of a
+        scan carry): traffic = 2 × small operands (update read + write);
+      * slice pattern (out ≪ largest operand, e.g. fused dynamic-slice or an
+        embedding gather): traffic = 2 × out + small operands.
+    """
+    _, out_b = _shape_elems_bytes(ins.out_shape)
+    op_bytes = []
+    for a in _args_of(ins):
+        _, b = _shape_elems_bytes(shapes.get(a, ""))
+        op_bytes.append(b)
+    big = max(op_bytes, default=0)
+    rest = sorted(op_bytes)[:-1] if op_bytes else []
+    if out_b >= big:
+        # in-place update pattern: only the update slices move
+        return 2 * sum(rest) + max(out_b - big, 0)
+    # slice pattern: each aliased big operand contributes ~an out-sized slice
+    small = sum(min(b, out_b) for b in rest)
+    return 2 * out_b + small
+
+
+def _fusion_is_aliasing(comp: list[_Instr]) -> bool:
+    return any(i.opcode in _ALIASING for i in comp)
+
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+               "after-all", "token", "partition-id", "replica-id"}
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps, shapes, entry = _parse_computations(hlo)
+    cost = HloCost(per_collective={k: 0.0 for k in _COLL},
+                   collective_counts={k: 0 for k in _COLL})
+    if entry is None and comps:
+        entry = max(comps, key=lambda n: len(comps[n]))
+
+    visited_stack: set[str] = set()
+
+    def walk(name: str, mult: float):
+        if name not in comps or name in visited_stack:
+            return
+        visited_stack.add(name)
+        for ins in comps[name]:
+            op = ins.opcode
+            base = op.replace("-start", "").replace("-done", "")
+            if op.endswith("-done"):
+                continue
+            if base in _COLL:
+                _, out_b = _shape_elems_bytes(ins.out_shape)
+                cost.per_collective[base] += out_b * mult
+                cost.collective_counts[base] += int(mult)
+                cost.collective_bytes += out_b * mult
+                bb = _instr_bytes(ins, shapes) * mult
+                cost.bytes_accessed += bb
+                cost.bytes_by_opcode[base] = cost.bytes_by_opcode.get(base, 0) + bb
+                continue
+            if op == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.rest)
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.rest)
+                tm = _TRIP_CFG.search(ins.rest)  # XLA's known_trip_count
+                trips = int(tm.group(1)) if tm else None
+                if trips is None and cm and cm.group(1) in comps:
+                    trips = _trip_count(comps[cm.group(1)])
+                if trips is None:
+                    trips = 1
+                    cost.unknown_whiles += 1
+                cost.while_trips[ins.name] = trips
+                if bm:
+                    walk(bm.group(1), mult * trips)
+                continue
+            if op in ("call", "conditional"):
+                for cm2 in _CALLED_MULTI.finditer(ins.rest):
+                    walk(cm2.group(2), mult)
+                fm = re.search(r"to_apply=%?([\w\.\-]+)", ins.rest)
+                if fm:
+                    walk(fm.group(1), mult)
+                continue
+            if op == "fusion":
+                fm = re.search(r"calls=%?([\w\.\-]+)", ins.rest)
+                if fm and _fusion_is_aliasing(comps.get(fm.group(1), [])):
+                    bb = _aliasing_bytes(ins, shapes) * mult
+                    key = "fusion_aliasing"
+                else:
+                    bb = _instr_bytes(ins, shapes) * mult
+                    key = "fusion"
+                cost.bytes_accessed += bb
+                cost.bytes_by_opcode[key] = cost.bytes_by_opcode.get(key, 0) + bb
+                out_elems, _ = _shape_elems_bytes(ins.out_shape)
+                cost.flops += out_elems * mult  # ~1 flop/output element
+                if fm and fm.group(1) in comps:
+                    # dots inside fusions contribute their full flops
+                    for sub in comps[fm.group(1)]:
+                        if sub.opcode == "dot":
+                            f = _dot_flops(sub, shapes) * mult
+                            cost.dot_flops += f
+                            cost.flops += f
+                continue
+            if op == "dot":
+                f = _dot_flops(ins, shapes) * mult
+                cost.dot_flops += f
+                cost.flops += f
+                bb = _instr_bytes(ins, shapes) * mult
+                cost.bytes_accessed += bb
+                cost.bytes_by_opcode["dot"] = cost.bytes_by_opcode.get("dot", 0) + bb
+                continue
+            if op in _SKIP_BYTES:
+                continue
+            # generic op: bytes + ~1 flop/elem
+            out_elems, _ = _shape_elems_bytes(ins.out_shape)
+            cost.flops += out_elems * mult
+            if op in _ALIASING:
+                bb = _aliasing_bytes(ins, shapes) * mult
+            else:
+                bb = _instr_bytes(ins, shapes) * mult
+            cost.bytes_accessed += bb
+            cost.bytes_by_opcode[op] = cost.bytes_by_opcode.get(op, 0) + bb
+        visited_stack.discard(name)
+
+    if entry:
+        walk(entry, 1.0)
+    return cost

@@ -1,0 +1,26 @@
+"""Target-hardware constants (TPU v5e-class, per chip) for roofline terms."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["HW", "V5E"]
+
+
+@dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops_bf16: float   # FLOP/s
+    hbm_bw: float            # bytes/s
+    ici_link_bw: float       # bytes/s per link (one direction)
+    hbm_bytes: float         # capacity
+    vmem_bytes: float
+
+
+V5E = HW(
+    name="tpu-v5e-class",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,
+    hbm_bytes=16e9,
+    vmem_bytes=128 * 2**20,
+)

@@ -1,0 +1,3 @@
+from .specs import (param_specs, batch_specs, cache_specs, named_shardings,
+                    activation_policy, constrain, logical_axes)
+from .pipeline import pipeline_apply, bubble_fraction

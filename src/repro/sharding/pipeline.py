@@ -1,0 +1,81 @@
+"""Pipeline parallelism: GPipe schedule via shard_map + collective_permute.
+
+The stage axis holds identical block-stacks (depth sliced across stages);
+microbatches stream through with the classic fill/drain schedule:
+
+    tick t: stage s processes microbatch (t - s); boundary activations move
+    stage→stage+1 by ppermute. Total ticks = M + S - 1; bubble fraction
+    (S-1)/(M+S-1).
+
+Differentiable end-to-end: the VJP of ppermute is the reverse permute, so
+``jax.grad`` through ``pipeline_apply`` yields the standard 1F1B-equivalent
+backward sweep (XLA schedules it); stage parameter gradients stay on their
+stage — exactly what a PP optimizer wants.
+
+This engine composes with the data/model axes of the production mesh: the
+stage axis is carved from 'pod' or 'data' (e.g. (stage=4, data=4, model=16)
+inside one pod) — see tests/test_pipeline_pp.py and EXPERIMENTS.md §Dry-run
+for a lowered example.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+shard_map = jax.shard_map
+
+__all__ = ["pipeline_apply", "bubble_fraction"]
+
+
+def bubble_fraction(num_micro: int, num_stages: int) -> float:
+    return (num_stages - 1) / (num_micro + num_stages - 1)
+
+
+def pipeline_apply(stage_fn, stacked_params, x, *, mesh: Mesh,
+                   axis: str = "stage", num_micro: int | None = None):
+    """Run ``y = stage_{S-1}(... stage_0(x))`` with a GPipe schedule.
+
+    stage_fn(params_slice, h) -> h          (one stage's compute)
+    stacked_params: pytree with leading stage axis S on every leaf
+    x: (M, mb, ...) microbatched input (M = number of microbatches)
+
+    Returns (M, mb, ...) outputs (the last stage's results, in order).
+    """
+    S = mesh.shape[axis]
+    M = x.shape[0] if num_micro is None else num_micro
+    assert x.shape[0] == M
+
+    fwd_perm = [(i, i + 1) for i in range(S - 1)]
+
+    @partial(shard_map, mesh=mesh, in_specs=(P(axis), P()), out_specs=P(),
+             check_vma=False)
+    def _run(params, xs):
+        params = jax.tree_util.tree_map(lambda l: l[0], params)  # this stage's slice
+        stage = jax.lax.axis_index(axis)
+        is_first = stage == 0
+        is_last = stage == S - 1
+
+        h0 = jnp.zeros_like(xs[0])
+        outs0 = jnp.zeros((M, *xs.shape[1:]), xs.dtype)
+
+        def tick(t, carry):
+            h_in, outs = carry
+            mb_in = jnp.clip(t, 0, M - 1)
+            inp = jnp.where(is_first, xs[mb_in], h_in)
+            y = stage_fn(params, inp)
+            mb_out = t - (S - 1)
+            valid_out = jnp.logical_and(is_last, jnp.logical_and(mb_out >= 0, mb_out < M))
+            outs = jax.lax.dynamic_update_index_in_dim(
+                outs, jnp.where(valid_out, y, outs[jnp.clip(mb_out, 0, M - 1)]),
+                jnp.clip(mb_out, 0, M - 1), 0)
+            h_next = jax.lax.ppermute(y, axis, fwd_perm)
+            return h_next, outs
+
+        _, outs = jax.lax.fori_loop(0, M + S - 1, tick, (h0, outs0))
+        # all stages hold zeros except the last — sum-reduce to collect
+        return jax.lax.psum(jnp.where(is_last, outs, jnp.zeros_like(outs)), axis)
+
+    return _run(stacked_params, x)

@@ -1,0 +1,282 @@
+"""Sharding rules: pytree paths → PartitionSpec (DP/FSDP/TP/SP/EP).
+
+Physical mesh axes (launch/mesh.py):
+  single-pod: ("data", "model")            16 × 16 = 256 chips
+  multi-pod : ("pod", "data", "model")     2 × 16 × 16 = 512 chips
+
+Logical roles:
+  * batch   → ("pod", "data")  — 'pod' is pure DP (cross-pod traffic is one
+    gradient all-reduce per step; ICI-heavy FSDP gathers stay intra-pod).
+  * fsdp    → ("data",)        — ZeRO-3-style parameter sharding, intra-pod.
+  * tp      → "model"          — tensor parallel (heads / d_ff / vocab).
+  * sp      → "model" on the sequence dim of the residual stream between
+    blocks (activation policy "dp_sp").
+  * ep      → "model" on the expert dim when num_experts % model == 0.
+
+Rules are path-regex + shape driven; any dim not divisible by its axis size
+degrades to replication (e.g. whisper's 51865 vocab). Compressed SLoPe leaves
+(values/idx_packed/rc_packed) inherit the sharding of the dense weight they
+replace — this is what shrinks the FSDP all-gather bytes by ~N/M.
+"""
+from __future__ import annotations
+
+import re
+from contextlib import contextmanager
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "activation_policy",
+           "constrain", "named_shardings", "logical_axes"]
+
+
+def logical_axes(mesh: Mesh) -> dict:
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    return {
+        "dp": dp if len(dp) > 1 else (dp[0] if dp else None),
+        "fsdp": "data" if "data" in names else None,
+        "tp": "model" if "model" in names else None,
+    }
+
+
+_COL = ("q", "k", "v", "gate", "up", "in", "x", "r", "i")   # d_out is tp-sharded
+_ROW = ("o", "out", "down")                                  # d_in is tp-sharded
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _guard(mesh: Mesh, shape, spec_tail):
+    """Replicate any dim whose size isn't divisible by its assigned axes."""
+    tail = []
+    off = len(shape) - len(spec_tail)
+    out = [None] * off
+    for i, ax in enumerate(spec_tail):
+        dim = shape[off + i]
+        if ax is not None and dim % _axis_size(mesh, ax) == 0:
+            tail.append(ax)
+        else:
+            tail.append(None)
+    return P(*(out + tail))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):        # DictKey / FlattenedIndexKey
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):      # SequenceKey
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):     # GetAttrKey (NamedTuple fields)
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/" + "/".join(parts) + "/"
+
+
+def _role(path: str) -> str | None:
+    for name in _COL:
+        if f"/{name}/" in path:
+            return "col"
+    for name in _ROW:
+        if f"/{name}/" in path:
+            return "row"
+    return None
+
+
+def _leaf_spec(path: str, shape, mesh: Mesh, ax: dict, moe_ep: bool) -> P:
+    tp, fsdp = ax["tp"], ax["fsdp"]
+    nd = len(shape)
+    role = _role(path)
+
+    if "/embedding/" in path:
+        return _guard(mesh, shape, [tp, None])
+    if "/head/" in path:
+        return _guard(mesh, shape, [tp, fsdp])
+    if "/pos_embed/" in path:
+        return _guard(mesh, shape, [None, tp])
+    if "/router/" in path:
+        return P(*([None] * nd))
+
+    in_expert = "/experts/" in path
+    if "/lora/" in path:
+        if "/l/" in path:  # (d_out, rank)
+            return _guard(mesh, shape, [tp if role == "col" else fsdp, None])
+        return _guard(mesh, shape, [None, fsdp if role == "col" else tp])
+
+    if path.endswith("/b/"):  # linear bias (d_out,)
+        return _guard(mesh, shape, [tp if role == "col" else None])
+
+    is_mat = any(f"/{k}/" in path for k in
+                 ("w", "values", "idx_packed", "rc_packed"))
+    if is_mat and role is not None and nd >= 2:
+        if in_expert:
+            e_ax = tp if moe_ep else None
+            inner_tp = None if moe_ep else tp
+            if role == "col":   # (..., E, d_ff, d_in)
+                return _guard(mesh, shape, [e_ax, inner_tp, fsdp])
+            return _guard(mesh, shape, [e_ax, fsdp, inner_tp])
+        if role == "col":       # (d_out=tp, d_in=fsdp)
+            return _guard(mesh, shape, [tp, fsdp])
+        return _guard(mesh, shape, [fsdp, tp])
+
+    # everything else (norms, gates' vectors, conv kernels, lam, ...): replicate
+    return P(*([None] * nd))
+
+
+def param_specs(params, mesh: Mesh, *, moe_ep: bool = False, mode: str = "train"):
+    """PartitionSpec tree mirroring ``params``.
+
+    ``mode="train"``: FSDP (ZeRO-3) — weights sharded over 'data' too.
+    ``mode="serve"``: inference layout — TP over 'model', replicated over
+    'data'/'pod' (weights are stationary; no per-step all-gathers).
+    ``mode="zero1"``: weights replicated over 'data' (gathers eliminated),
+    optimizer state still sharded — set by the §Perf train variant; the
+    caller applies it to the opt-state subtree separately.
+    """
+    ax = logical_axes(mesh)
+    if mode in ("serve", "zero1"):
+        ax = dict(ax, fsdp=None)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(_path_str(path), leaf.shape, mesh, ax, moe_ep),
+        params)
+
+
+def batch_specs(batch, mesh: Mesh):
+    """Batch inputs: leading dim over ('pod','data'); rest replicated."""
+    ax = logical_axes(mesh)
+    dp = ax["dp"]
+
+    def spec(path, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        if leaf.shape[0] % _axis_size(mesh, dp) == 0:
+            return P(*([dp] + [None] * (nd - 1)))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def cache_specs(caches, mesh: Mesh, *, batch_size: int | None = None,
+                kv_shard: str = "seq"):
+    """KV/recurrent cache shardings.
+
+    KV leaves (..., b, S, kvh, dh): batch over dp and, by default, the cache
+    *sequence* dim over tp (``kv_shard="seq"``). Sequence sharding is the
+    communication-optimal decode layout when kv-heads don't divide the model
+    axis (GQA kvh=8 on 16-way TP): scores are computed locally per S-shard
+    and only O(b·h) softmax stats + O(b·h·dh) output partials are reduced —
+    vs. all-reducing O(b·h·S) score tensors under head/dh sharding
+    (EXPERIMENTS.md §Perf, decode hillclimb). ``kv_shard="heads"`` restores
+    head sharding (falls back to dh, then seq, on divisibility).
+
+    Recurrent-state leaves: batch (identified by ``batch_size``) over dp;
+    last feature dim over tp when divisible.
+    """
+    ax = logical_axes(mesh)
+    dp, tp = ax["dp"], ax["tp"]
+
+    def spec(path, leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        p = _path_str(path)
+        if nd >= 4 and ("/k/" in p or "/v/" in p):
+            lead = [None] * (nd - 4)
+            if kv_shard == "heads":
+                for cand in ([dp, None, tp, None], [dp, None, None, tp],
+                             [dp, tp, None, None]):
+                    t = _tail(mesh, shape[-4:], cand)
+                    if any(x is not None for x in t[1:]):
+                        return P(*(lead + t))
+                return P(*(lead + _tail(mesh, shape[-4:], [dp, None, None, None])))
+            return P(*(lead + _tail(mesh, shape[-4:], [dp, tp, None, None])))
+        if nd >= 2 and "/positions/" in p:
+            lead = [None] * (nd - 2)
+            return P(*(lead + _tail(mesh, shape[-2:], [dp, tp])))
+        # recurrent states: find the batch dim, shard last feature dim over tp
+        out = [None] * nd
+        if batch_size is not None:
+            for i, d in enumerate(shape):
+                if d == batch_size:
+                    if d % _axis_size(mesh, dp) == 0:
+                        out[i] = dp
+                    break
+        if nd >= 2 and out[-1] is None and shape[-1] % _axis_size(mesh, tp) == 0 \
+                and shape[-1] >= 128:
+            out[-1] = tp
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(spec, caches)
+
+
+def _tail(mesh, dims, axes):
+    out = []
+    for d, ax in zip(dims, axes):
+        out.append(ax if ax is not None and d % _axis_size(mesh, ax) == 0 else None)
+    return out
+
+
+def named_shardings(specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding policy (constraints inside the model graph)
+# ---------------------------------------------------------------------------
+
+_POLICY: list = [None]  # ("dp" | "dp_sp" | None, mesh)
+
+
+@contextmanager
+def activation_policy(policy: str | None, mesh: Mesh | None = None):
+    prev = _POLICY[0]
+    _POLICY[0] = (policy, mesh) if policy else None
+    try:
+        yield
+    finally:
+        _POLICY[0] = prev
+
+
+def policy_has(flag: str) -> bool:
+    pol = _POLICY[0]
+    return pol is not None and flag in pol[0].split("+")
+
+
+def constrain(x, kind: str = "residual"):
+    """Apply the active activation-sharding constraints.
+
+    kinds: "residual" (b, s, d) under policy dp / dp_sp;
+           "attn_qkv" (b, s, heads, dh) under policy component "attn" —
+           heads sharded over tp (the MHA-ized GQA layout that keeps every
+           attention einsum shard-local; see attention.py).
+    """
+    pol = _POLICY[0]
+    if pol is None:
+        return x
+    policy, mesh = pol
+    parts = policy.split("+")
+    ax = logical_axes(mesh)
+    dp, tp = ax["dp"], ax["tp"]
+    if kind == "residual" and x.ndim == 3:
+        if "dp_sp" in parts:
+            spec = P(*_tail(mesh, x.shape, [dp, tp, None]))
+        elif "dp" in parts:
+            spec = P(dp, None, None)
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    if kind == "attn_qkv" and x.ndim == 4 and "attn" in parts:
+        spec = P(*_tail(mesh, x.shape, [dp, None, tp, None]))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return x

@@ -1,0 +1,3 @@
+from .state import TrainState, init_train_state, add_lazy_adapters, graft
+from .step import make_train_step, float_grads
+from .loop import train_loop, TrainReport

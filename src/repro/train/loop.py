@@ -1,0 +1,101 @@
+"""Host training loop: phase-1 → lazy phase-2, checkpoints, watchdog.
+
+Responsibilities (the parts a pure train_step can't own):
+  * resume from the latest checkpoint (same stream position — data is a pure
+    function of step);
+  * swap to the phase-2 step function at the lazy-adapter boundary
+    (``lazy_start_step``) — params/opt-state grafted, separate compiled graph;
+  * async checkpointing every ``checkpoint_every`` steps + final;
+  * straggler watchdog: wall-clock per step vs. running median; slow steps
+    are logged and counted (on a real fleet the ElasticPolicy would trigger a
+    re-mesh — unit-tested separately in tests/test_ft.py).
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.core.adapters import lazy_start_step
+from repro.ft.checkpoint import CheckpointManager, latest_step, restore_checkpoint
+from .state import TrainState, add_lazy_adapters, init_train_state
+from .step import make_train_step
+
+__all__ = ["train_loop", "TrainReport"]
+
+
+@dataclass
+class TrainReport:
+    losses: list = field(default_factory=list)
+    step_times: list = field(default_factory=list)
+    straggler_steps: list = field(default_factory=list)
+    resumed_from: int | None = None
+    phase2_at: int | None = None
+
+
+def train_loop(model, tcfg: TrainConfig, data, *, ckpt_dir: str | None = None,
+               log_every: int = 10, donate: bool = True,
+               log_fn=print) -> tuple[TrainState, TrainReport]:
+    report = TrainReport()
+    key = jax.random.PRNGKey(tcfg.seed)
+    rank = model.cfg.slope.adapter_rank if model.cfg.slope.enabled else 0
+    boundary = (lazy_start_step(tcfg.total_steps, model.cfg.slope.lazy_fraction)
+                if rank else tcfg.total_steps)
+    report.phase2_at = boundary if rank else None
+
+    state = init_train_state(model, key, adapter_rank=0,
+                             grad_compression=tcfg.grad_compression)
+    start = 0
+    mgr = CheckpointManager(ckpt_dir, keep=tcfg.keep_checkpoints) if ckpt_dir else None
+    if ckpt_dir and latest_step(ckpt_dir) is not None:
+        start = latest_step(ckpt_dir)
+        template = state
+        if rank and start >= boundary:
+            template = add_lazy_adapters(model, state, key, rank,
+                                         grad_compression=tcfg.grad_compression)
+        state, _ = restore_checkpoint(ckpt_dir, template, step=start)
+        report.resumed_from = start
+        log_fn(f"[loop] resumed from step {start}")
+
+    step_fn = jax.jit(make_train_step(model, tcfg),
+                      donate_argnums=(0,) if donate else ())
+    phase2 = rank and start >= boundary
+
+    times: list[float] = []
+    for step in range(start, tcfg.total_steps):
+        if rank and not phase2 and step >= boundary:
+            log_fn(f"[loop] phase-2: adding rank-{rank} lazy adapters at step {step}")
+            key, sub = jax.random.split(key)
+            state = add_lazy_adapters(model, state, sub, rank,
+                                      grad_compression=tcfg.grad_compression)
+            step_fn = jax.jit(make_train_step(model, tcfg),
+                              donate_argnums=(0,) if donate else ())
+            phase2 = True
+        batch = {k: jax.numpy.asarray(v) for k, v in data.batch(step).items()}
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        report.losses.append(loss)
+        report.step_times.append(dt)
+        if len(times) >= 5:
+            med = float(np.median(times[-50:]))
+            if dt > tcfg.straggler_slow_factor * med:
+                report.straggler_steps.append(step)
+                log_fn(f"[watchdog] step {step} took {dt:.3f}s "
+                       f"(median {med:.3f}s) — straggler flagged")
+        if step % log_every == 0:
+            log_fn(f"[loop] step {step} loss {loss:.4f} "
+                   f"({dt*1e3:.0f} ms, lr {float(metrics['lr']):.2e})")
+        if mgr and step > start and step % tcfg.checkpoint_every == 0:
+            mgr.save_async(state, step)
+    if mgr:
+        mgr.wait()
+        mgr.save_async(state, tcfg.total_steps)
+        mgr.wait()
+    return state, report

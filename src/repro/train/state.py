@@ -1,0 +1,58 @@
+"""TrainState pytree + phase-2 (lazy adapter) grafting."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamWState, init_adamw, init_ef_state
+
+__all__ = ["TrainState", "init_train_state", "add_lazy_adapters"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    ef: Any            # error-feedback residuals (None when compression off)
+    step: jax.Array    # int32 scalar
+
+
+def init_train_state(model, key, *, adapter_rank: int = 0,
+                     grad_compression: str = "none") -> TrainState:
+    params = model.init(key, adapter_rank=adapter_rank)
+    ef = init_ef_state(params) if grad_compression == "int8_ef" else None
+    return TrainState(params, init_adamw(params), ef, jnp.zeros((), jnp.int32))
+
+
+def _paths_dict(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+def graft(new_tree, old_tree):
+    """Copy every leaf of ``old_tree`` into the matching path of ``new_tree``
+    (paths present only in ``new_tree`` keep their fresh values)."""
+    old = _paths_dict(old_tree)
+
+    def pick(path, new_leaf):
+        return old.get(jax.tree_util.keystr(path), new_leaf)
+
+    return jax.tree_util.tree_map_with_path(pick, new_tree)
+
+
+def add_lazy_adapters(model, state: TrainState, key, rank: int,
+                      *, grad_compression: str = "none") -> TrainState:
+    """Phase-2 boundary (paper §2.2): re-init the param tree WITH adapters,
+    graft all trained leaves, fresh optimizer state only for the new LoRA
+    leaves. The sparse weights keep their Adam moments."""
+    new_params = model.init(key, adapter_rank=rank)
+    params = graft(new_params, state.params)
+    new_opt = init_adamw(params)
+    opt = AdamWState(graft(new_opt.mu, state.opt.mu),
+                     graft(new_opt.nu, state.opt.nu),
+                     state.opt.count)
+    ef = init_ef_state(params) if grad_compression == "int8_ef" else None
+    if ef is not None and state.ef is not None:
+        ef = graft(ef, state.ef)
+    return TrainState(params, opt, ef, state.step)

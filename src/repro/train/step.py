@@ -1,0 +1,98 @@
+"""train_step factory: grad accumulation, clipping, EF-int8, masked AdamW.
+
+Built once per (model, TrainConfig, phase); the phase-1 graph contains no
+adapter parameters at all (the "lazy" in lazy LoRA — SLoPe's 99%-of-training
+fast path), phase-2 adds them by pytree structure.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.optim import (adamw_update, clip_by_global_norm, ef_int8_compress,
+                         warmup_cosine)
+from .state import TrainState
+
+__all__ = ["make_train_step", "float_grads"]
+
+
+def float_grads(grads, params):
+    """Replace non-float cotangents (float0 of packed indices etc.) by None."""
+    def one(g, p):
+        if hasattr(p, "dtype") and jnp.issubdtype(p.dtype, jnp.floating):
+            return g
+        return None
+
+    return jax.tree_util.tree_map(one, grads, params)
+
+
+def _tree_add(a, b):
+    return jax.tree_util.tree_map(
+        lambda x, y: None if x is None else x + y, a, b,
+        is_leaf=lambda x: x is None)
+
+
+def _tree_scale(a, s):
+    return jax.tree_util.tree_map(
+        lambda x: None if x is None else x * s, a, is_leaf=lambda x: x is None)
+
+
+def _tree_f32(a):
+    return jax.tree_util.tree_map(
+        lambda x: None if x is None else x.astype(jnp.float32), a,
+        is_leaf=lambda x: x is None)
+
+
+def make_train_step(model, tcfg: TrainConfig):
+    """Returns ``train_step(state, batch) -> (state, metrics)`` (pure, jittable).
+
+    ``batch`` leaves have leading dim ``global_batch``; with
+    ``tcfg.microbatches > 1`` the step scans over microbatch slices
+    accumulating fp32 gradients (memory lever for the big cells).
+    """
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True, allow_int=True)
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        params = state.params
+        nmb = tcfg.microbatches
+        if nmb > 1:
+            def reshape(x):
+                return x.reshape(nmb, x.shape[0] // nmb, *x.shape[1:])
+
+            mbs = jax.tree_util.tree_map(reshape, batch)
+            zero = _tree_f32(float_grads(jax.tree_util.tree_map(jnp.zeros_like, params), params))
+
+            def body(acc, mb):
+                (loss, metrics), g = grad_fn(params, mb)
+                g = _tree_f32(float_grads(g, params))
+                return _tree_add(acc, g), (loss, metrics["ce"])
+
+            acc, (losses, ces) = jax.lax.scan(body, zero, mbs)
+            grads = _tree_scale(acc, 1.0 / nmb)
+            loss = losses.mean()
+            ce = ces.mean()
+        else:
+            (loss, metrics), g = grad_fn(params, batch)
+            grads = _tree_f32(float_grads(g, params))
+            ce = metrics["ce"]
+
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        ef = state.ef
+        if tcfg.grad_compression == "int8_ef" and ef is not None:
+            grads, ef = ef_int8_compress(grads, ef)
+        lr = warmup_cosine(state.step, base_lr=tcfg.learning_rate,
+                           warmup=tcfg.warmup_steps, total=tcfg.total_steps)
+        new_params, new_opt = adamw_update(params, grads, state.opt, lr, tcfg)
+        new_state = TrainState(new_params, new_opt, ef, state.step + 1)
+        return new_state, {"loss": loss, "ce": ce, "grad_norm": gnorm, "lr": lr}
+
+    return train_step

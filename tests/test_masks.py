@@ -1,0 +1,82 @@
+"""N:M mask invariants + Lemma 2.1 (closed form vs. empirical)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.masks import (density, double_prune_mask, expected_extra_sparsity,
+                              index_bits_per_group, magnitude_nm_mask,
+                              nm_mask_from_scores, random_nm_mask)
+
+NM = [(1, 2), (2, 4), (2, 8), (1, 4), (4, 8)]
+
+
+@pytest.mark.parametrize("n,m", NM)
+def test_random_mask_exact_group_counts(n, m):
+    mask = random_nm_mask(jax.random.PRNGKey(0), (32, 16 * m), n, m, axis=1)
+    groups = np.asarray(mask).reshape(32, 16, m).sum(-1)
+    assert (groups == n).all()
+
+
+@pytest.mark.parametrize("n,m", NM)
+def test_magnitude_mask_keeps_largest(n, m):
+    w = jax.random.normal(jax.random.PRNGKey(1), (8, 4 * m))
+    mask = magnitude_nm_mask(w, n, m, axis=1)
+    wg = np.asarray(jnp.abs(w)).reshape(8, 4, m)
+    mg = np.asarray(mask).reshape(8, 4, m)
+    for i in range(8):
+        for g in range(4):
+            kept = wg[i, g][mg[i, g]]
+            dropped = wg[i, g][~mg[i, g]]
+            if len(dropped):
+                assert kept.min() >= dropped.max() - 1e-7
+
+
+@pytest.mark.parametrize("n,m", NM)
+def test_double_prune_column_constraint(n, m):
+    """After double pruning, every column group of M has ≤ N nonzeros."""
+    key = jax.random.PRNGKey(2)
+    w = jax.random.normal(key, (16 * m, 16 * m))
+    mr = random_nm_mask(key, w.shape, n, m, axis=1)
+    mrc = double_prune_mask(mr, w, n, m, row_axis=0)
+    col_groups = np.asarray(mrc).T.reshape(16 * m, 16, m).sum(-1)
+    assert col_groups.max() <= n
+    # double-pruned is a subset of row-pruned
+    assert not np.any(np.asarray(mrc) & ~np.asarray(mr))
+
+
+def test_lemma21_closed_form_values():
+    """Paper §2.1: 1:2 → 12.5%, 2:4 → 9.375%."""
+    assert abs(expected_extra_sparsity(1, 2) - 0.125) < 1e-12
+    assert abs(expected_extra_sparsity(2, 4) - 0.09375) < 1e-12
+
+
+@pytest.mark.parametrize("n,m", [(1, 2), (2, 4), (2, 8)])
+def test_lemma21_empirical(n, m):
+    """Monte-Carlo density drop matches Eq. (8) for random masks."""
+    key = jax.random.PRNGKey(3)
+    shape = (64 * m, 64 * m)
+    mr = random_nm_mask(key, shape, n, m, axis=1)
+    mrc = double_prune_mask(mr, None, n, m, row_axis=0, key=jax.random.PRNGKey(4))
+    drop = float(density(mr) - density(mrc))
+    expect = expected_extra_sparsity(n, m)
+    assert abs(drop - expect) < 0.01, (drop, expect)
+
+
+def test_index_bits():
+    assert index_bits_per_group(2, 4) == 3   # paper Eq. (7): ceil(log2 C(4,2))
+    assert index_bits_per_group(1, 2) == 1
+    assert index_bits_per_group(2, 8) == 5
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 8), st.integers(1, 6))
+def test_mask_group_invariant_property(n_raw, m_mult, rows, groups):
+    """Hypothesis: for any valid (n, m) and shape, exactly n survive/group."""
+    m = n_raw * m_mult if n_raw * m_mult > n_raw else n_raw + 1
+    n = min(n_raw, m)
+    scores = jax.random.uniform(jax.random.PRNGKey(n * 7 + m), (rows, groups * m))
+    mask = nm_mask_from_scores(scores, n, m, axis=1)
+    got = np.asarray(mask).reshape(rows, groups, m).sum(-1)
+    assert (got == n).all()

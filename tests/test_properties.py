@@ -1,0 +1,102 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparse import (compress, decompress, decompress_select,
+                               group_compress_select, pack_bools, pack_indices,
+                               unpack_bools, unpack_indices)
+from repro.core.masks import random_nm_mask
+from repro.models.model_zoo import cross_entropy_loss
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from([(1, 2), (2, 4), (2, 8), (1, 4)]),
+       st.integers(1, 6), st.integers(1, 4), st.integers(0, 2**31 - 1))
+def test_compress_decompress_roundtrip(nm, rows, groups, seed):
+    n, m = nm
+    key = jax.random.PRNGKey(seed)
+    d_in = groups * m * 8  # keep pack_bools' %8 satisfied
+    w = jax.random.normal(key, (rows, d_in))
+    mask = random_nm_mask(key, (rows, d_in), n, m, axis=1)
+    c = compress(w, mask, n, m)
+    np.testing.assert_allclose(np.asarray(decompress(c)),
+                               np.asarray(w * mask), rtol=0, atol=0)
+    # select-based decompress identical to scatter-based
+    np.testing.assert_allclose(
+        np.asarray(decompress_select(c.values, c.indices, n, m)),
+        np.asarray(decompress(c)), rtol=0, atol=0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from([2, 4, 8]), st.integers(1, 5), st.integers(0, 2**31 - 1))
+def test_index_packing_roundtrip(m, rows, seed):
+    k = 8 * m  # divisible by pack group
+    idx = jax.random.randint(jax.random.PRNGKey(seed), (rows, k), 0, m).astype(jnp.uint8)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_indices(pack_indices(idx, m), m, k)), np.asarray(idx))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 4), st.integers(0, 2**31 - 1))
+def test_bool_packing_roundtrip(rows, byts, seed):
+    k = byts * 8
+    b = jax.random.bernoulli(jax.random.PRNGKey(seed), 0.5, (rows, k))
+    np.testing.assert_array_equal(np.asarray(unpack_bools(pack_bools(b), k)),
+                                  np.asarray(b))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([(1, 2), (2, 4)]), st.integers(0, 2**31 - 1))
+def test_grad_compress_adjoint(nm, seed):
+    """group_compress_select is the adjoint of decompress_select:
+    <decompress(v), g> == <v, compress(g)> for all v, g."""
+    n, m = nm
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    rows, groups = 4, 6
+    d = groups * m
+    mask = random_nm_mask(k1, (rows, d), n, m, axis=1)
+    w = jax.random.normal(k2, (rows, d))
+    c = compress(w, mask, n, m)
+    g = jax.random.normal(k3, (rows, d))
+    lhs = float(jnp.vdot(decompress_select(c.values, c.indices, n, m), g))
+    rhs = float(jnp.vdot(c.values, group_compress_select(g, c.indices, n, m)))
+    assert abs(lhs - rhs) < 1e-3 * max(1.0, abs(lhs))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 12), st.integers(3, 50),
+       st.integers(0, 2**31 - 1))
+def test_cross_entropy_matches_numpy(b, s, v, seed):
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (b, s, v))
+    labels = jax.random.randint(key, (b, s), -1, v)  # some ignored (-1 < 0)
+    loss, ntok = cross_entropy_loss(logits, labels)
+    lg = np.asarray(logits, np.float64)
+    lb = np.asarray(labels)
+    ref, cnt = 0.0, 0
+    for i in range(b):
+        for j in range(s):
+            if lb[i, j] >= 0:
+                zs = lg[i, j] - lg[i, j].max()
+                ref += np.log(np.exp(zs).sum()) - zs[lb[i, j]]
+                cnt += 1
+    if cnt:
+        assert abs(float(loss) - ref / cnt) < 1e-3
+        assert int(ntok) == cnt
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_ef_compression_residual_bounded(seed):
+    """EF residual never exceeds one quantization step of the running max."""
+    from repro.optim import ef_int8_compress
+    rng = np.random.default_rng(seed)
+    ef = {"g": jnp.zeros((32,), jnp.float32)}
+    for _ in range(10):
+        g = {"g": jnp.asarray(rng.standard_normal(32), jnp.float32)}
+        sent, ef = ef_int8_compress(g, ef)
+        step = float(jnp.max(jnp.abs(g["g"] + 0))) / 127 + 1e-6
+        assert float(jnp.max(jnp.abs(ef["g"]))) <= 4 * step + 1e-3

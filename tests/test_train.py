@@ -1,0 +1,87 @@
+"""Training semantics: grad-accum equivalence, phase-2 grafting, convergence."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.configs.base import TrainConfig
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.train import (add_lazy_adapters, init_train_state, make_train_step,
+                         train_loop)
+
+
+def _setup(name="gpt2-small", **slope_kw):
+    cfg = get_smoke_config(name)
+    if slope_kw:
+        import dataclasses
+        cfg = cfg.replace(slope=dataclasses.replace(cfg.slope, **slope_kw))
+    return cfg, build_model(cfg)
+
+
+def test_grad_accum_equivalence():
+    """microbatches=4 gives (near-)identical update to microbatches=1."""
+    cfg, model = _setup()
+    data = SyntheticLM(cfg, global_batch=8, seq_len=32, seed=1)
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    s1 = init_train_state(model, jax.random.PRNGKey(0))
+    s4 = init_train_state(model, jax.random.PRNGKey(0))
+    st1, m1 = jax.jit(make_train_step(model, TrainConfig(microbatches=1)))(s1, batch)
+    st4, m4 = jax.jit(make_train_step(model, TrainConfig(microbatches=4)))(s4, batch)
+    # loss is a mean over microbatches; f32 resummation tolerance
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-3
+    diffs = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32))))
+        if jnp.issubdtype(a.dtype, jnp.floating) else 0.0,
+        st1.params, st4.params)
+    assert max(jax.tree_util.tree_leaves(diffs)) < 5e-3
+
+
+def test_phase2_grafting_preserves_weights_and_output():
+    """Adding lazy adapters (L=0 init) must not change the function."""
+    cfg, model = _setup(adapter_rank=4)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32)}
+    y1, _ = model.forward(state.params, batch)
+    state2 = add_lazy_adapters(model, state, jax.random.PRNGKey(9), 4)
+    y2, _ = model.forward(state2.params, batch)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), rtol=1e-5, atol=1e-5)
+    # adam moments survived the graft
+    assert int(state2.opt.count) == int(state.opt.count)
+
+
+def test_slope_trains_and_adapters_help():
+    """SLoPe converges; phase-2 adapters keep improving the loss."""
+    cfg, model = _setup(adapter_rank=8)
+    tcfg = TrainConfig(total_steps=40, warmup_steps=5, learning_rate=2e-3,
+                       checkpoint_every=1000)
+    data = SyntheticLM(cfg, global_batch=8, seq_len=64, seed=0)
+    _, rep = train_loop(model, tcfg, data, ckpt_dir=None, log_every=100,
+                        log_fn=lambda *a: None)
+    first = np.mean(rep.losses[:5])
+    last = np.mean(rep.losses[-5:])
+    assert last < first - 0.3, (first, last)
+    assert rep.phase2_at is not None
+
+
+def test_mask_stays_static_through_training():
+    """SLoPe invariant: pruned weights stay exactly zero across updates."""
+    cfg, model = _setup()
+    assert cfg.slope.representation == "compressed"
+    tcfg = TrainConfig(total_steps=5, warmup_steps=1, learning_rate=1e-2)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, tcfg))
+    data = SyntheticLM(cfg, global_batch=4, seq_len=32, seed=0)
+    # static metadata must be bit-identical after 5 steps
+    before = [np.asarray(x) for x in jax.tree_util.tree_leaves(state.params)
+              if x.dtype == jnp.uint8]
+    for t in range(5):
+        state, _ = step(state, {k: jnp.asarray(v) for k, v in data.batch(t).items()})
+    after = [np.asarray(x) for x in jax.tree_util.tree_leaves(state.params)
+             if x.dtype == jnp.uint8]
+    for b, a in zip(before, after):
+        np.testing.assert_array_equal(b, a)
