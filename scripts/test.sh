@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point. Usage:
+#   scripts/test.sh                 # full tier-1 suite
+#   scripts/test.sh -m "not slow"   # skip subprocess/distributed tests
+#   scripts/test.sh tests/test_repr.py -k parity
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -1,4 +1,26 @@
 """repro — production-grade JAX framework reproducing SLoPe (ICLR 2025):
 double-pruned N:M sparse + lazy low-rank adapter pretraining of LLMs."""
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+_LAZY = {
+    # Top-level conversion API (kept lazy: importing `repro` must stay cheap
+    # and cycle-free — submodules import repro.configs.* at their own top).
+    "freeze_for_inference": ("repro.models.freeze", "freeze_for_inference"),
+    "get_repr": ("repro.core.repr", "get_repr"),
+    "available_reprs": ("repro.core.repr", "available_reprs"),
+}
+
+
+def __getattr__(name):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+
+    return getattr(importlib.import_module(mod_name), attr)
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))

@@ -12,7 +12,10 @@ class SlopeConfig:
     enabled: bool = True
     n: int = 2
     m: int = 4
-    representation: str = "compressed"     # "compressed" | "dense_masked" | "srste" | "dense"
+    representation: str = "compressed"     # any name in core.repr registry:
+    #                                        "compressed" | "dense_masked" | "srste" | "dense"
+    backend: str = "auto"                  # kernels/ops.py dispatch:
+    #                                        "auto" | "xla" | "pallas" | "pallas_interpret"
     mask_init: str = "random"              # "random" | "magnitude"
     adapter_rank: int = 0                  # 0 → no low-rank adapters
     lazy_fraction: float = 0.01            # adapters exist only in the final 1%

@@ -19,7 +19,7 @@ from dataclasses import dataclass
 from .masks import index_bits_per_group
 
 __all__ = ["LinearFootprint", "linear_training_bits", "linear_inference_bits",
-           "slope_flops", "dense_flops"]
+           "slope_flops", "dense_flops", "runtime_ratio"]
 
 
 @dataclass(frozen=True)
@@ -74,6 +74,16 @@ def linear_inference_bits(d_out: int, d_in: int, n: int, m: int, rank: int = 0,
     dense = elems * weight_bits
     slope = nnz * weight_bits + idx_total + rank * (d_in + d_out) * weight_bits
     return LinearFootprint(dense, slope)
+
+
+def runtime_ratio(runtime_bytes: float, d_out: int, d_in: int,
+                  *, weight_bits: int = 16) -> float:
+    """Measured bytes of one linear's stored pytree (``LinearRepr.nbytes``)
+    against its dense equivalent — the runtime counterpart of
+    ``linear_inference_bits(...).ratio``, so the analytic-vs-actual gap
+    (3-bit index vs aligned packed bytes, masks kept resident, ...) is
+    reported rather than hidden."""
+    return runtime_bytes * 8.0 / (d_out * d_in * weight_bits)
 
 
 def dense_flops(b: int, d_out: int, d_in: int) -> float:

@@ -1,0 +1,462 @@
+"""Pluggable linear-representation registry (the seam between math and metal).
+
+One logical SLoPe linear layer has several physical forms — dense, dense with
+static masks for the double-pruned backward (paper Eqs. 4–6), compressed N:M
+for memory/bandwidth, and fused sparse+LoRA for phase-2 inference (Eq. 11).
+This module makes each form a first-class, convertible *representation*:
+
+    rep = get_repr("compressed", n=2, m=4)
+    p   = rep.init(key, d_out, d_in, dtype=jnp.bfloat16)
+    y   = rep.apply(p, x, backend="pallas")          # kernels/ops.py dispatch
+    name, p_inf = rep.to_inference(p)                # serving layout
+
+Every representation implements the ``LinearRepr`` protocol:
+
+  * ``init(key, d_out, d_in, *, dtype, use_bias, adapter_rank)`` → params dict
+  * ``apply(params, x, *, backend)`` — forward with the representation's
+    custom VJP (double-pruned backward where the paper requires it). All
+    matmuls route through :mod:`repro.kernels.ops`, so one config flag moves
+    the whole model between the XLA reference and the Pallas TPU kernels.
+  * ``to_inference(params)`` → ``(repr_name, params)`` — the serving form
+    (dense_masked/srste → compressed; adapters ride along for the fused
+    sparse+LoRA kernel). Backward metadata (``rc_packed``) is dropped.
+  * ``param_roles()`` — leaf name → role ("matrix" leaves inherit the
+    sharding of the dense weight they replace; consumed by
+    ``sharding/specs.py``).
+  * ``nbytes(params)`` — actual bytes of the stored pytree (the honest
+    runtime footprint that ``core/metrics.py`` compares against the paper's
+    analytic bit counts).
+
+Param-dict key names are stable across representations ("w", "mask_r",
+"mask_rc", "values", "idx_packed", "rc_packed", "b", "lora/{l,r}") so
+checkpoint paths and sharding rules survive representation changes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, ClassVar
+
+import jax
+import jax.numpy as jnp
+
+# Module object (not names) — repro.kernels may be mid-import when this module
+# loads through core/__init__; attributes are resolved at call time.
+from repro.kernels import ops
+
+from .adapters import LowRankAdapter, adapter_apply, init_adapter
+from .masks import magnitude_nm_mask
+from .slope_linear import compressed_from_dense_masked, init_slope_weights
+from .sparse import (
+    compress,
+    decompress_select,
+    group_compress_select,
+    pack_indices,
+    unpack_bools,
+    unpack_indices,
+)
+
+Params = dict
+
+__all__ = [
+    "LinearRepr", "DenseRepr", "DenseMaskedRepr", "CompressedRepr",
+    "SrsteRepr", "CompressedInferenceRepr",
+    "register_repr", "get_repr", "available_reprs", "matrix_param_names",
+    "dense_init", "tree_nbytes",
+]
+
+
+_REGISTRY: dict[str, type["LinearRepr"]] = {}
+
+
+def register_repr(cls: type["LinearRepr"]) -> type["LinearRepr"]:
+    """Class decorator: add a representation to the registry by its ``name``."""
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def get_repr(name: str, *, n: int = 2, m: int = 4,
+             srste_decay: float = 6e-6) -> "LinearRepr":
+    """Instantiate a registered representation by name.
+
+    Raises ``ValueError`` for unknown names — this is the single gate every
+    linear-layer construction goes through (no silent fall-through).
+    """
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown linear representation {name!r}; "
+            f"registered: {available_reprs()}") from None
+    return cls(n=n, m=m, srste_decay=srste_decay)
+
+
+def available_reprs() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def matrix_param_names() -> frozenset[str]:
+    """Union of all leaf names that shard like the dense (d_out, d_in) weight."""
+    names: set[str] = set()
+    for cls in _REGISTRY.values():
+        names.update(k for k, role in cls.param_roles().items()
+                     if role == "matrix")
+    return frozenset(names)
+
+
+def dense_init(key, d_out, d_in, dtype, scale=None):
+    if scale is None:
+        scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_out, d_in)) * scale).astype(dtype)
+
+
+def tree_nbytes(params) -> int:
+    """Actual bytes of every array leaf in ``params``."""
+    return int(sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(params)
+                   if hasattr(leaf, "dtype")))
+
+
+# ---------------------------------------------------------------------------
+# Backend-aware custom VJPs. Defined at module level (one trace cache per
+# static config, not per layer instance). ``static`` tuples carry the N:M
+# geometry plus the backend string; masks / packed metadata receive no
+# cotangent (None — they are constants of the training run).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _masked_matmul(x, w, mask_r, mask_rc, static):
+    """``x @ (w ⊙ mask_r)^T`` with the Eq. 5–6 double-pruned backward."""
+    n, m, backend = static
+    if ops.resolve_backend(backend) == "xla":
+        return x @ (w * mask_r).T
+    # Kernel path: compress the masked weight to the N:M layout and stream it
+    # through nm_spmm (the bandwidth win the dense-masked storage forgoes).
+    c = compress(w, mask_r.astype(bool), n, m)
+    lead = x.shape[:-1]
+    y = ops.nm_spmm(x.reshape(-1, x.shape[-1]), c.values, c.indices,
+                    n=n, m=m, backend=backend)
+    return y.reshape(*lead, -1)
+
+
+def _masked_matmul_fwd(x, w, mask_r, mask_rc, static):
+    return _masked_matmul(x, w, mask_r, mask_rc, static), (x, w, mask_r, mask_rc)
+
+
+def _masked_matmul_bwd(static, res, dy):
+    n, m, backend = static
+    x, w, mask_r, mask_rc = res
+    d_out = w.shape[0]
+    w_rc = w * mask_rc
+    if ops.resolve_backend(backend) != "xla" and d_out % m == 0:
+        # BWD-2 through the transposed-compressed double-pruned copy (Alg. 1
+        # keeps both copies resident): column groups of mask_rc carry ≤ N
+        # survivors, so W^{R,C,T} is itself N:M along d_out.
+        ct = compress(w_rc.T, mask_rc.T.astype(bool), n, m)
+        lead = dy.shape[:-1]
+        dx = ops.nm_spmm(dy.reshape(-1, d_out), ct.values, ct.indices,
+                         n=n, m=m, backend=backend).reshape(*lead, -1)
+    else:
+        dx = dy @ w_rc
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    x2 = x.reshape(-1, x.shape[-1])
+    dw = (dy2.T @ x2) * mask_r
+    return dx, dw, None, None
+
+
+_masked_matmul.defvjp(_masked_matmul_fwd, _masked_matmul_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _compressed_matmul(x, values, idx_packed, rc_packed, static):
+    """``x @ W^T`` on the packed compressed layout, Eq. 5–6 backward."""
+    n, m, k, backend = static
+    idx = unpack_indices(idx_packed, m, k)
+    lead = x.shape[:-1]
+    y = ops.nm_spmm(x.reshape(-1, x.shape[-1]), values, idx,
+                    n=n, m=m, backend=backend)
+    return y.reshape(*lead, -1)
+
+
+def _compressed_matmul_fwd(x, values, idx_packed, rc_packed, static):
+    return _compressed_matmul(x, values, idx_packed, rc_packed, static), (
+        x, values, idx_packed, rc_packed)
+
+
+def _compressed_matmul_bwd(static, res, dy):
+    n, m, k, backend = static
+    x, values, idx_packed, rc_packed = res
+    idx = unpack_indices(idx_packed, m, k)
+    rc = unpack_bools(rc_packed, k)
+    # BWD-2: survivors that lost the column prune are zeroed before the
+    # input-gradient matmul (the lossy double-pruned weight of Eq. 6).
+    w_rc = decompress_select(jnp.where(rc, values, 0), idx, n, m)
+    d_out = w_rc.shape[0]
+    if ops.resolve_backend(backend) != "xla" and d_out % m == 0:
+        ct = compress(w_rc.T, w_rc.T != 0, n, m)
+        lead = dy.shape[:-1]
+        dx = ops.nm_spmm(dy.reshape(-1, d_out), ct.values, ct.indices,
+                         n=n, m=m, backend=backend).reshape(*lead, -1)
+    else:
+        dx = dy @ w_rc
+    # BWD-1: dense outer product, compressed onto the static support
+    # (compare-select, no gather).
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    x2 = x.reshape(-1, x.shape[-1])
+    dvalues = group_compress_select(dy2.T @ x2, idx, n, m).astype(values.dtype)
+    return dx, dvalues, None, None
+
+
+_compressed_matmul.defvjp(_compressed_matmul_fwd, _compressed_matmul_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _srste_matmul(x, w, static):
+    """Extended SR-STE forward: dynamic magnitude N:M mask each step."""
+    n, m, decay, backend = static
+    mask = magnitude_nm_mask(w, n, m, axis=1)
+    if ops.resolve_backend(backend) == "xla":
+        return x @ jnp.where(mask, w, 0.0).T
+    c = compress(w, mask, n, m)
+    lead = x.shape[:-1]
+    y = ops.nm_spmm(x.reshape(-1, x.shape[-1]), c.values, c.indices,
+                    n=n, m=m, backend=backend)
+    return y.reshape(*lead, -1)
+
+
+def _srste_matmul_fwd(x, w, static):
+    return _srste_matmul(x, w, static), (x, w)
+
+
+def _srste_matmul_bwd(static, res, dy):
+    n, m, decay, backend = static
+    x, w = res
+    mask = magnitude_nm_mask(w, n, m, axis=1)
+    # Straight-through: dense input grad through the pruned weight, dense
+    # weight grad + SR-STE decay pulling pruned weights toward zero. The
+    # magnitude mask is NOT double-pruned, so there is no transposed N:M
+    # compressed copy to stream — the backward stays on the XLA dense path
+    # (exactly the systems disadvantage the paper holds against SR-STE).
+    ws = jnp.where(mask, w, 0.0)
+    dx = dy @ ws
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    x2 = x.reshape(-1, x.shape[-1])
+    dw = dy2.T @ x2 + decay * jnp.where(mask, 0.0, w)
+    return dx, dw
+
+
+_srste_matmul.defvjp(_srste_matmul_fwd, _srste_matmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Representations
+# ---------------------------------------------------------------------------
+
+
+class LinearRepr:
+    """Base class: bias + lazy-adapter handling shared by all representations.
+
+    Subclasses set ``name``/``inference_name`` and implement ``_init_core``
+    (repr-owned leaves), ``_matmul`` (the core product with its custom VJP),
+    ``to_inference`` and ``param_roles``.
+    """
+
+    name: ClassVar[str]
+    inference_name: ClassVar[str]
+    trainable: ClassVar[bool] = True
+
+    def __init__(self, *, n: int = 2, m: int = 4, srste_decay: float = 6e-6):
+        self.n, self.m, self.srste_decay = n, m, srste_decay
+
+    # -- protocol ----------------------------------------------------------
+
+    def init(self, key, d_out: int, d_in: int, *, dtype=jnp.bfloat16,
+             use_bias: bool = False, adapter_rank: int = 0) -> Params:
+        kw, ka = jax.random.split(key)
+        p = self._init_core(kw, d_out, d_in, dtype)
+        if use_bias:
+            p["b"] = jnp.zeros((d_out,), dtype)
+        if adapter_rank > 0 and self.name != "dense":
+            ad = init_adapter(ka, d_out, d_in, adapter_rank, dtype=dtype)
+            p["lora"] = {"l": ad.l, "r": ad.r}
+        return p
+
+    def apply(self, params: Params, x: jax.Array, *,
+              backend: str = "auto") -> jax.Array:
+        y = self._matmul(params, x, backend)
+        if "lora" in params:
+            y = y + adapter_apply(
+                LowRankAdapter(params["lora"]["l"], params["lora"]["r"]), x)
+        if "b" in params:
+            y = y + params["b"]
+        return y
+
+    def to_inference(self, params: Params) -> tuple[str, Params]:
+        raise NotImplementedError
+
+    @classmethod
+    def param_roles(cls) -> dict[str, str]:
+        raise NotImplementedError
+
+    def nbytes(self, params: Params) -> int:
+        return tree_nbytes(params)
+
+    # -- subclass hooks ----------------------------------------------------
+
+    def _init_core(self, key, d_out, d_in, dtype) -> Params:
+        raise NotImplementedError
+
+    def _matmul(self, params, x, backend) -> jax.Array:
+        raise NotImplementedError
+
+    # -- shared conversion helpers ----------------------------------------
+
+    def _carry_over(self, src: Params, dst: Params) -> Params:
+        for k in ("b", "lora"):
+            if k in src:
+                dst[k] = src[k]
+        return dst
+
+
+@register_repr
+class DenseRepr(LinearRepr):
+    """Plain dense weight (also the first layer / heads per the paper)."""
+
+    name = "dense"
+    inference_name = "dense"
+
+    def _init_core(self, key, d_out, d_in, dtype):
+        return {"w": dense_init(key, d_out, d_in, dtype)}
+
+    def _matmul(self, p, x, backend):
+        return ops.dense_matmul(x, p["w"], backend=backend)
+
+    def to_inference(self, params):
+        return ("dense", params)
+
+    @classmethod
+    def param_roles(cls):
+        return {"w": "matrix"}
+
+
+@register_repr
+class DenseMaskedRepr(LinearRepr):
+    """Dense storage + static (mask_R, mask_RC) — the XLA training form."""
+
+    name = "dense_masked"
+    inference_name = "compressed_inference"
+
+    def _init_core(self, key, d_out, d_in, dtype):
+        sw = init_slope_weights(key, d_out, d_in, self.n, self.m, dtype=dtype)
+        return {"w": sw.w, "mask_r": sw.mask_r, "mask_rc": sw.mask_rc}
+
+    def _matmul(self, p, x, backend):
+        return _masked_matmul(x, p["w"], p["mask_r"], p["mask_rc"],
+                              (self.n, self.m, backend))
+
+    def to_inference(self, params):
+        c = compress(params["w"], params["mask_r"].astype(bool), self.n, self.m)
+        out = {"values": c.values, "idx_packed": pack_indices(c.indices, self.m)}
+        return ("compressed_inference", self._carry_over(params, out))
+
+    @classmethod
+    def param_roles(cls):
+        return {"w": "matrix", "mask_r": "matrix", "mask_rc": "matrix"}
+
+
+@register_repr
+class CompressedRepr(LinearRepr):
+    """Packed N:M in-graph form — the production pjit training path."""
+
+    name = "compressed"
+    inference_name = "compressed_inference"
+
+    def _init_core(self, key, d_out, d_in, dtype):
+        sw = init_slope_weights(key, d_out, d_in, self.n, self.m, dtype=dtype)
+        cs = compressed_from_dense_masked(sw, self.n, self.m)
+        return {"values": cs.values, "idx_packed": cs.idx_packed,
+                "rc_packed": cs.rc_packed}
+
+    def _matmul(self, p, x, backend):
+        k = p["values"].shape[-1]
+        return _compressed_matmul(x, p["values"], p["idx_packed"],
+                                  p["rc_packed"], (self.n, self.m, k, backend))
+
+    def to_inference(self, params):
+        # rc_packed is pure backward metadata; the serving layout drops it.
+        out = {k: v for k, v in params.items() if k != "rc_packed"}
+        return ("compressed_inference", out)
+
+    @classmethod
+    def param_roles(cls):
+        return {"values": "matrix", "idx_packed": "matrix",
+                "rc_packed": "matrix"}
+
+
+@register_repr
+class SrsteRepr(LinearRepr):
+    """Extended SR-STE baseline: dense storage, magnitude mask every step."""
+
+    name = "srste"
+    inference_name = "compressed_inference"
+
+    def _init_core(self, key, d_out, d_in, dtype):
+        return {"w": dense_init(key, d_out, d_in, dtype)}
+
+    def _matmul(self, p, x, backend):
+        return _srste_matmul(x, p["w"],
+                             (self.n, self.m, self.srste_decay, backend))
+
+    def to_inference(self, params):
+        mask = magnitude_nm_mask(params["w"], self.n, self.m, axis=1)
+        c = compress(params["w"], mask, self.n, self.m)
+        out = {"values": c.values, "idx_packed": pack_indices(c.indices, self.m)}
+        return ("compressed_inference", self._carry_over(params, out))
+
+    @classmethod
+    def param_roles(cls):
+        return {"w": "matrix"}
+
+
+@register_repr
+class CompressedInferenceRepr(LinearRepr):
+    """Frozen serving layout: packed N:M values (+ optional fused LoRA).
+
+    Produced by ``to_inference`` / ``freeze_for_inference`` — never trained
+    (no backward metadata, no custom VJP). With adapters present the whole
+    layer is one fused sparse+LoRA kernel launch (paper Eq. 11).
+    """
+
+    name = "compressed_inference"
+    inference_name = "compressed_inference"
+    trainable = False
+
+    def init(self, key, d_out, d_in, *, dtype=jnp.bfloat16, use_bias=False,
+             adapter_rank=0):
+        raise ValueError(
+            "compressed_inference is a frozen serving layout; produce it via "
+            "freeze_for_inference()/to_inference(), not init()")
+
+    def apply(self, params, x, *, backend: str = "auto"):
+        k = params["values"].shape[-1]
+        idx = unpack_indices(params["idx_packed"], self.m, k)
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        if "lora" in params:
+            y = ops.sparse_lora_matmul(x2, params["values"], idx,
+                                       params["lora"]["l"], params["lora"]["r"],
+                                       n=self.n, m=self.m, backend=backend)
+        else:
+            y = ops.nm_spmm(x2, params["values"], idx, n=self.n, m=self.m,
+                            backend=backend)
+        y = y.reshape(*lead, -1)
+        if "b" in params:
+            y = y + params["b"]
+        return y
+
+    def to_inference(self, params):
+        return ("compressed_inference", params)
+
+    @classmethod
+    def param_roles(cls):
+        return {"values": "matrix", "idx_packed": "matrix"}

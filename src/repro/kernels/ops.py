@@ -1,9 +1,16 @@
 """Jit'd public wrappers around the Pallas kernels with backend dispatch.
 
-``backend="auto"`` picks the Pallas kernel on TPU and interpret-mode Pallas
-(for validation) or the pure-XLA reference elsewhere. The distributed pjit
-graphs call these wrappers, so flipping a config flag moves the whole model
-between XLA reference compute and the TPU kernels.
+``backend="auto"`` picks the Pallas kernel on TPU and the pure-XLA reference
+elsewhere; ``"pallas_interpret"`` runs the kernels in interpret mode for
+validation on any host. The model's linear representations
+(``core/repr.py``) call these wrappers from the real forward/backward graph,
+so flipping ``SlopeConfig.backend`` moves the whole model between XLA
+reference compute and the TPU kernels.
+
+Block shapes are auto-fitted to the operand dims when not given explicitly
+(largest divisor ≤ the MXU-friendly default, ``block_k`` kept a multiple of
+M), so the model path never trips the kernels' divisibility asserts on odd
+batch/feature sizes.
 """
 from __future__ import annotations
 
@@ -17,7 +24,10 @@ from .nm_prune import nm_prune_pallas
 from .nm_spmm import nm_spmm_pallas
 from .sparse_lora import sparse_lora_pallas
 
-__all__ = ["nm_spmm", "sparse_lora_matmul", "nm_prune", "default_backend"]
+__all__ = ["nm_spmm", "sparse_lora_matmul", "nm_prune", "dense_matmul",
+           "default_backend", "resolve_backend", "BACKENDS"]
+
+BACKENDS = ("auto", "xla", "pallas", "pallas_interpret")
 
 
 def default_backend() -> str:
@@ -25,8 +35,32 @@ def default_backend() -> str:
     return "pallas" if plat == "tpu" else "xla"
 
 
-def _resolve(backend: str) -> str:
+def resolve_backend(backend: str) -> str:
+    """Resolve ``"auto"`` and reject unknown backend names loudly."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
     return default_backend() if backend == "auto" else backend
+
+
+def _fit_block(dim: int, target: int, multiple: int = 1) -> int:
+    """Largest divisor of ``dim`` that is ≤ ``target`` and % ``multiple`` == 0."""
+    c = min(target, dim)
+    while c > 1:
+        if dim % c == 0 and c % multiple == 0:
+            return c
+        c -= 1
+    if dim % multiple:
+        raise ValueError(
+            f"dimension {dim} is not a multiple of the N:M group size {multiple}")
+    return min(dim, max(multiple, 1))
+
+
+def _fit_blocks(block_kw: dict, b: int, d_out: int, d_in: int, m: int) -> dict:
+    kw = dict(block_kw)
+    kw.setdefault("block_b", _fit_block(b, 128))
+    kw.setdefault("block_o", _fit_block(d_out, 128))
+    kw.setdefault("block_k", _fit_block(d_in, 512, m))
+    return kw
 
 
 def nm_spmm(x, values, indices, *, n: int, m: int, backend: str = "auto",
@@ -34,11 +68,11 @@ def nm_spmm(x, values, indices, *, n: int, m: int, backend: str = "auto",
     """``X @ W_compressed^T`` with batch-dim flattening. x: (..., d_in)."""
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    b = _resolve(backend)
-    if b == "pallas":
-        y = nm_spmm_pallas(x2, values, indices, n=n, m=m, **block_kw)
-    elif b == "pallas_interpret":
-        y = nm_spmm_pallas(x2, values, indices, n=n, m=m, interpret=True, **block_kw)
+    b = resolve_backend(backend)
+    if b in ("pallas", "pallas_interpret"):
+        block_kw = _fit_blocks(block_kw, x2.shape[0], values.shape[0], x2.shape[1], m)
+        y = nm_spmm_pallas(x2, values, indices, n=n, m=m,
+                           interpret=(b == "pallas_interpret"), **block_kw)
     else:
         y = ref.nm_spmm_ref(x2, values, indices, n=n, m=m)
     return y.reshape(*lead, -1)
@@ -49,12 +83,11 @@ def sparse_lora_matmul(x, values, indices, l, r, *, n: int, m: int,
     """Fused ``X @ W_s^T + (X R^T) L^T``. x: (..., d_in)."""
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    b = _resolve(backend)
-    if b == "pallas":
-        y = sparse_lora_pallas(x2, values, indices, l, r, n=n, m=m, **block_kw)
-    elif b == "pallas_interpret":
-        y = sparse_lora_pallas(x2, values, indices, l, r, n=n, m=m, interpret=True,
-                               **block_kw)
+    b = resolve_backend(backend)
+    if b in ("pallas", "pallas_interpret"):
+        block_kw = _fit_blocks(block_kw, x2.shape[0], values.shape[0], x2.shape[1], m)
+        y = sparse_lora_pallas(x2, values, indices, l, r, n=n, m=m,
+                               interpret=(b == "pallas_interpret"), **block_kw)
     else:
         y = ref.sparse_lora_ref(x2, values, indices, l, r, n=n, m=m)
     return y.reshape(*lead, -1)
@@ -62,9 +95,21 @@ def sparse_lora_matmul(x, values, indices, l, r, *, n: int, m: int,
 
 def nm_prune(w, *, n: int, m: int, backend: str = "auto", **block_kw):
     """One-shot magnitude N:M prune + compress: → (mask, values, indices)."""
-    b = _resolve(backend)
-    if b == "pallas":
-        return nm_prune_pallas(w, n=n, m=m, **block_kw)
-    if b == "pallas_interpret":
-        return nm_prune_pallas(w, n=n, m=m, interpret=True, **block_kw)
+    b = resolve_backend(backend)
+    if b in ("pallas", "pallas_interpret"):
+        block_kw.setdefault("block_rows", _fit_block(w.shape[0], 128))
+        return nm_prune_pallas(w, n=n, m=m,
+                               interpret=(b == "pallas_interpret"), **block_kw)
     return ref.nm_prune_ref(w, n=n, m=m)
+
+
+def dense_matmul(x, w, *, backend: str = "auto") -> jax.Array:
+    """``X @ W^T`` for dense representations. x: (..., d_in), w: (d_out, d_in).
+
+    Every backend lowers to the native XLA dot: a dense MXU matmul *is* the
+    hardware path (there is nothing for a Pallas kernel to beat), but the
+    wrapper keeps dense layers on the same dispatch surface as the sparse
+    ones — ``resolve_backend`` still validates the flag.
+    """
+    resolve_backend(backend)
+    return x @ w.T

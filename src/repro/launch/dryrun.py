@@ -70,8 +70,9 @@ def pick_microbatches(cfg, shape: InputShape, dp: int) -> int:
 
 def _variant_kwargs(variant: str):
     """Variant string → (model_kw, activation_policy, remat, slope_repr,
-    adapter_rank, zero1, microbatch_override). Composable with '+':
-    e.g. --variant zero1+sp or zero1+mb4."""
+    adapter_rank, zero1, microbatch_override, backend). Composable with '+':
+    e.g. --variant zero1+sp or zero1+mb4. 'pallas' / 'interp' set the
+    kernels/ops.py backend for every linear (TPU kernels / interpret mode)."""
     model_kw = {}
     policy = None
     remat = None
@@ -79,6 +80,7 @@ def _variant_kwargs(variant: str):
     adapter_rank = 0
     zero1 = False
     mb_override = None
+    backend = None
     for part in variant.split("+"):
         if part == "sp":
             policy = f"{policy}+dp_sp" if policy else "dp_sp"
@@ -94,13 +96,18 @@ def _variant_kwargs(variant: str):
             adapter_rank = 64
         elif part == "zero1":
             zero1 = True
+        elif part == "pallas":
+            backend = "pallas"
+        elif part == "interp":
+            backend = "pallas_interpret"
         elif part.startswith("mb"):
             mb_override = int(part[2:])
         elif part in ("base", "kvheads"):
             pass
         else:
             raise ValueError(f"unknown variant component {part!r}")
-    return model_kw, policy, remat, slope_repr, adapter_rank, zero1, mb_override
+    return (model_kw, policy, remat, slope_repr, adapter_rank, zero1,
+            mb_override, backend)
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str = "base",
@@ -109,11 +116,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str = "base",
     cfg = get_config(arch)
     shape = shape_by_name(shape_name)
     (model_kw, policy, remat, slope_repr, adapter_rank, zero1,
-     mb_override) = _variant_kwargs(variant)
+     mb_override, backend) = _variant_kwargs(variant)
     if remat:
         cfg = cfg.replace(remat=remat)
     if slope_repr:
         cfg = cfg.replace(slope=dataclasses.replace(cfg.slope, enabled=False))
+    if backend:
+        cfg = cfg.replace(slope=dataclasses.replace(cfg.slope, backend=backend))
     multi = mesh_kind == "multi"
     mesh = make_production_mesh(multi_pod=multi)
     chips = int(np.prod(list(mesh.shape.values())))
@@ -198,6 +207,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str = "base",
         t_compile = time.time()
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # older jax returns [dict] per device
+        cost = cost[0] if cost else {}
     mem = {}
     try:
         ma = compiled.memory_analysis()
@@ -255,6 +266,7 @@ def main() -> None:
 
     archs = [args.arch] if args.arch else list(ARCH_NAMES)
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    os.makedirs(args.out, exist_ok=True)  # failures.log needs it on first FAIL
     n_ok = n_fail = n_skip = 0
     for arch in archs:
         cfg = get_config(arch)

@@ -20,14 +20,24 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
+    from repro.kernels.ops import BACKENDS
+
+    ap.add_argument("--backend", default="auto", choices=BACKENDS,
+                    help="kernels/ops.py dispatch for every linear")
+    ap.add_argument("--no-freeze", action="store_true",
+                    help="serve the training representation (reference path)")
     args = ap.parse_args()
 
+    import dataclasses
+
     from repro.configs import get_config, get_smoke_config
+    from repro.core.repr import tree_nbytes
     from repro.ft import restore_checkpoint
     from repro.models import build_model
     from repro.serve import ServeEngine
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = cfg.replace(slope=dataclasses.replace(cfg.slope, backend=args.backend))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     if args.ckpt_dir:
@@ -40,7 +50,13 @@ def main() -> None:
         except (FileNotFoundError, KeyError) as e:
             print(f"[serve] no usable checkpoint ({e}); serving fresh init")
 
-    eng = ServeEngine(model, params, cache_len=args.cache_len)
+    train_bytes = tree_nbytes(params)
+    eng = ServeEngine(model, params, cache_len=args.cache_len,
+                      freeze=not args.no_freeze)
+    frozen_bytes = tree_nbytes(eng.params)
+    print(f"[serve] backend={args.backend} frozen={not args.no_freeze} "
+          f"params {train_bytes / 1e6:.2f}MB -> {frozen_bytes / 1e6:.2f}MB "
+          f"({frozen_bytes / max(train_bytes, 1):.2f}x)")
     rng = np.random.default_rng(0)
     prompts = [list(map(int, rng.integers(2, cfg.vocab_size, rng.integers(4, 12))))
                for _ in range(args.batch)]

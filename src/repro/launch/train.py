@@ -29,6 +29,12 @@ def main() -> None:
     ap.add_argument("--lazy-fraction", type=float, default=0.01)
     ap.add_argument("--dense", action="store_true", help="disable SLoPe")
     ap.add_argument("--srste", action="store_true", help="Extended SR-STE baseline")
+    from repro.kernels.ops import BACKENDS
+
+    ap.add_argument("--representation", default=None,
+                    help="linear representation (core.repr registry name)")
+    ap.add_argument("--backend", default="auto", choices=BACKENDS,
+                    help="kernels/ops.py dispatch for every linear")
     ap.add_argument("--grad-compression", default="none", choices=("none", "int8_ef"))
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
@@ -47,6 +53,10 @@ def main() -> None:
         slope_kw["enabled"] = False
     if args.srste:
         slope_kw["representation"] = "srste"
+    if args.representation:
+        slope_kw["representation"] = args.representation
+    if args.backend != "auto":
+        slope_kw["backend"] = args.backend
     if args.adapter_rank:
         slope_kw["adapter_rank"] = args.adapter_rank
         slope_kw["lazy_fraction"] = args.lazy_fraction
@@ -62,6 +72,7 @@ def main() -> None:
                        seed=args.seed)
     print(f"[train] arch={cfg.name} devices={len(jax.devices())} "
           f"slope={'off' if not cfg.slope.enabled else cfg.slope.representation} "
+          f"backend={cfg.slope.backend} "
           f"N:M={cfg.slope.n}:{cfg.slope.m} adapter_rank={cfg.slope.adapter_rank}")
     state, report = train_loop(model, tcfg, data, ckpt_dir=args.ckpt_dir)
     print(f"[train] done. first-loss={report.losses[0]:.4f} "

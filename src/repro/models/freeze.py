@@ -1,0 +1,111 @@
+"""``freeze_for_inference``: map training pytrees onto serving representations.
+
+Phase-1/phase-2 training params store each sparse linear in its *training*
+form (dense_masked with static masks, packed compressed with the ``rc``
+backward bitmap, or SR-STE dense). Serving wants the paper's inference
+layout: compressed N:M values + packed indices, with lazy adapters riding
+along for the fused sparse+LoRA kernel (Eq. 11), and **no** backward
+metadata. This module performs that conversion structurally:
+
+  * the layer plan (``plan_layers``) says which segments are sparse (the
+    first-layer-dense rule and the Table-6 mixed-N:M boundary included);
+  * inside sparse segments, linears are recognised by their param signature
+    (``mask_r`` → dense_masked, ``values``+``rc_packed`` → compressed) and
+    converted via the representation registry's ``to_inference``;
+  * SR-STE layers store a bare ``{"w"}`` like dense layers, so they are
+    identified positionally: inside a sparse segment, under an attention /
+    MLP subtree whose prune flag is on (the MoE router always stays dense);
+  * scanned segments and MoE experts carry stacked leaves — conversions are
+    ``vmap``'d over every leading axis.
+
+Everything else (embeddings, norms, heads, dense layers, caches) passes
+through untouched, so ``model.decode_step`` runs on the frozen pytree with
+the same closures — ``make_linear.apply`` detects the frozen structure.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.configs.base import ModelConfig, SlopeConfig
+from repro.core.repr import get_repr
+from .transformer import plan_layers
+
+__all__ = ["freeze_for_inference"]
+
+# Block-dict keys that open an attention-ish / MLP-ish linear subtree.
+_SUBTREE = {"attn": "attn", "xattn": "attn", "mixer": "attn", "mlp": "mlp"}
+
+
+def freeze_for_inference(model, params: dict) -> dict:
+    """Convert a training params pytree to the inference representation.
+
+    Returns a new pytree with the same top-level structure; only sparse
+    linear layers change shape. The result is what ``ServeEngine`` consumes
+    (and what ``make_linear.apply`` recognises as frozen).
+    """
+    cfg: ModelConfig = model.cfg
+    out = dict(params)
+    out["stack"] = _freeze_stack(cfg, params["stack"])
+    if cfg.is_encoder_decoder and "encoder" in params:
+        from .model_zoo import encoder_config  # deferred: model_zoo imports layers
+
+        enc = dict(params["encoder"])
+        enc["stack"] = _freeze_stack(encoder_config(cfg), params["encoder"]["stack"])
+        out["encoder"] = enc
+    return out
+
+
+def _freeze_stack(cfg: ModelConfig, stack_params: dict) -> dict:
+    segs = plan_layers(cfg)
+    assert len(segs) == len(stack_params["segments"]), \
+        "params do not match this model's layer plan"
+    segments = []
+    for seg, seg_p in zip(segs, stack_params["segments"]):
+        if not seg.sparse:
+            segments.append(seg_p)
+            continue
+        # The Table-6 mixed-N:M boundary applies to MLP linears only — the
+        # attention/mixer projections are always built with the config-level
+        # N:M (make_attention takes no ``nm``), so conversion must mirror
+        # that split or the compressed shapes disagree with the closures.
+        nm = {"attn": (cfg.slope.n, cfg.slope.m),
+              "mlp": seg.nm if seg.nm is not None else (cfg.slope.n, cfg.slope.m)}
+        segments.append(_convert(seg_p, cfg.slope, nm, under=None))
+    return {"segments": segments}
+
+
+def _convert(node: Any, slope: SlopeConfig, nm: dict, under: str | None):
+    n, m = nm[under] if under in nm else (slope.n, slope.m)
+    if isinstance(node, dict):
+        if n != m:
+            if "mask_r" in node and "w" in node:
+                return _freeze_linear(node, "dense_masked", n, m, slope)
+            if "values" in node and "idx_packed" in node:
+                kind = ("compressed" if "rc_packed" in node
+                        else "compressed_inference")
+                return _freeze_linear(node, kind, n, m, slope)
+            if ("w" in node and slope.representation == "srste"
+                    and under is not None and _prunable(slope, under)
+                    and set(node) <= {"w", "b", "lora"}):
+                return _freeze_linear(node, "srste", n, m, slope)
+        return {k: _convert(v, slope, nm,
+                            None if k == "router" else _SUBTREE.get(k, under))
+                for k, v in node.items()}
+    if isinstance(node, (tuple, list)):
+        return type(node)(_convert(v, slope, nm, under) for v in node)
+    return node
+
+
+def _prunable(slope: SlopeConfig, under: str) -> bool:
+    return slope.prune_attention if under == "attn" else slope.prune_mlp
+
+
+def _freeze_linear(node: dict, kind: str, n: int, m: int, slope: SlopeConfig):
+    rep = get_repr(kind, n=n, m=m, srste_decay=slope.srste_decay)
+    ref_leaf = node["w"] if "w" in node else node["values"]
+    convert = lambda p: rep.to_inference(p)[1]
+    for _ in range(ref_leaf.ndim - 2):   # scan / expert stacking
+        convert = jax.vmap(convert)
+    return convert(node)

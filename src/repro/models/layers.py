@@ -14,16 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SlopeConfig
-from repro.core.adapters import LowRankAdapter, adapter_apply, init_adapter
-from repro.core.slope_linear import (
-    CompressedSlope,
-    SlopeWeights,
-    compressed_from_dense_masked,
-    init_slope_weights,
-    slope_matmul,
-    compressed_slope_matmul,
-    srste_linear,
-)
+from repro.core.repr import dense_init, get_repr
 
 Params = dict
 Initializer = Callable[..., Params]
@@ -38,65 +29,39 @@ __all__ = ["make_linear", "rms_norm", "layer_norm", "make_norm", "make_embedding
 # ---------------------------------------------------------------------------
 
 
-def dense_init(key, d_out, d_in, dtype, scale=None):
-    if scale is None:
-        scale = (2.0 / (d_in + d_out)) ** 0.5
-    return (jax.random.normal(key, (d_out, d_in)) * scale).astype(dtype)
-
-
 def make_linear(cfg: SlopeConfig, d_out: int, d_in: int, *, sparse: bool,
                 dtype=jnp.bfloat16, use_bias: bool = False,
                 nm: tuple[int, int] | None = None):
     """Return ``(init, apply)`` for one linear layer.
 
     ``sparse=False`` (or SLoPe disabled) → dense. Otherwise the representation
-    is taken from ``cfg.representation``. ``apply(params, x)`` detects lazy
-    adapters by the presence of ``params["lora"]`` — so phase-1 and phase-2
-    use the same closure on different pytree structures (no flags in-graph).
+    is looked up in the ``core.repr`` registry by ``cfg.representation``
+    (unknown names raise ``ValueError`` here, at build time). All matmuls
+    dispatch through ``kernels/ops.py`` according to ``cfg.backend``.
+
+    ``apply(params, x)`` dispatches on the *params structure*, so one closure
+    serves three pytrees: phase-1 (no adapters), phase-2 (``params["lora"]``
+    present), and frozen inference layouts from ``freeze_for_inference``
+    (compressed values without the ``rc_packed`` backward metadata — routed
+    to the fused sparse+LoRA serving representation).
     """
     n, m = nm if nm is not None else (cfg.n, cfg.m)
     kind = cfg.representation if (sparse and cfg.enabled) else "dense"
     if kind == "dense" or n == m:
         kind = "dense"
+    backend = cfg.backend
+    rep = get_repr(kind, n=n, m=m, srste_decay=cfg.srste_decay)
+    frozen_rep = (get_repr(rep.inference_name, n=n, m=m)
+                  if rep.inference_name != kind else rep)
 
     def init(key, *, adapter_rank: int = 0) -> Params:
-        kw, kb, ka = jax.random.split(key, 3)
-        p: Params = {}
-        if kind == "dense":
-            p["w"] = dense_init(kw, d_out, d_in, dtype)
-        elif kind == "dense_masked":
-            sw = init_slope_weights(kw, d_out, d_in, n, m, dtype=dtype)
-            p["w"], p["mask_r"], p["mask_rc"] = sw.w, sw.mask_r, sw.mask_rc
-        elif kind == "compressed":
-            sw = init_slope_weights(kw, d_out, d_in, n, m, dtype=dtype)
-            cs = compressed_from_dense_masked(sw, n, m)
-            p["values"], p["idx_packed"], p["rc_packed"] = cs
-        elif kind == "srste":
-            p["w"] = dense_init(kw, d_out, d_in, dtype)
-        else:
-            raise ValueError(f"unknown linear kind {kind!r}")
-        if use_bias:
-            p["b"] = jnp.zeros((d_out,), dtype)
-        if adapter_rank > 0 and kind != "dense":
-            ad = init_adapter(ka, d_out, d_in, adapter_rank, dtype=dtype)
-            p["lora"] = {"l": ad.l, "r": ad.r}
-        return p
+        return rep.init(key, d_out, d_in, dtype=dtype, use_bias=use_bias,
+                        adapter_rank=adapter_rank)
 
     def apply(p: Params, x: jax.Array) -> jax.Array:
-        if kind == "dense":
-            y = x @ p["w"].T
-        elif kind == "dense_masked":
-            y = slope_matmul(x, p["w"], p["mask_r"], p["mask_rc"])
-        elif kind == "compressed":
-            cs = CompressedSlope(p["values"], p["idx_packed"], p["rc_packed"])
-            y = compressed_slope_matmul(x, cs, n=n, m=m)
-        elif kind == "srste":
-            y = srste_linear(p["w"], x, n, m, decay=cfg.srste_decay)
-        if "lora" in p:
-            y = y + adapter_apply(LowRankAdapter(p["lora"]["l"], p["lora"]["r"]), x)
-        if "b" in p:
-            y = y + p["b"]
-        return y
+        if "values" in p and "rc_packed" not in p:
+            return frozen_rep.apply(p, x, backend=backend)
+        return rep.apply(p, x, backend=backend)
 
     return init, apply
 

@@ -27,7 +27,15 @@ from repro.configs.base import ModelConfig
 from .layers import dense_init, make_embedding, make_norm
 from .transformer import make_decoder_stack
 
-__all__ = ["Model", "build_model", "cross_entropy_loss"]
+__all__ = ["Model", "build_model", "cross_entropy_loss", "encoder_config"]
+
+
+def encoder_config(cfg: ModelConfig) -> ModelConfig:
+    """Config of the encoder stack of an encoder-decoder model. Shared by
+    ``build_model`` and ``freeze_for_inference`` so both always plan the
+    same encoder segments."""
+    return cfg.replace(num_layers=cfg.encoder_layers,
+                       block_pattern=("attn",), attention="full", window=0)
 
 
 class Model(NamedTuple):
@@ -61,10 +69,9 @@ def build_model(cfg: ModelConfig, *, q_chunk: int = 1024, kv_chunk: int = 1024,
                                kv_chunk=kv_chunk, triangular=triangular)
     enc_stack = None
     if cfg.is_encoder_decoder:
-        enc_cfg = cfg.replace(num_layers=cfg.encoder_layers,
-                              block_pattern=("attn",), attention="full", window=0)
-        enc_stack = make_decoder_stack(enc_cfg, causal=False, dtype=dtype,
-                                       q_chunk=q_chunk, kv_chunk=kv_chunk)
+        enc_stack = make_decoder_stack(encoder_config(cfg), causal=False,
+                                       dtype=dtype, q_chunk=q_chunk,
+                                       kv_chunk=kv_chunk)
 
     max_pos = 1 << 16  # learned-position table bound (dry-run shapes cap at 32k+)
 

@@ -29,14 +29,24 @@ __all__ = ["ServeEngine"]
 
 @dataclass
 class ServeEngine:
+    """``freeze=True`` (default) converts training params to the inference
+    representation at construction (``models.freeze.freeze_for_inference``):
+    dense_masked/srste layers are compressed, ``rc`` backward metadata is
+    dropped, and phase-2 adapters move to the fused sparse+LoRA layout. Pass
+    ``freeze=False`` to serve the training pytree as-is (reference path)."""
+
     model: Model
     params: dict
     cache_len: int
     prefill_chunk: int = 256
     eos: int = 1
+    freeze: bool = True
 
     def __post_init__(self):
         self.prefill_chunk = min(self.prefill_chunk, self.cache_len)
+        if self.freeze:
+            from repro.models.freeze import freeze_for_inference
+            self.params = freeze_for_inference(self.model, self.params)
         self._decode = jax.jit(self.model.decode_step)
 
     def _prefill(self, tokens: np.ndarray, lengths: np.ndarray, enc_out=None):

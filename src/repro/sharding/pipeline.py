@@ -19,13 +19,29 @@ for a lowered example.
 """
 from __future__ import annotations
 
+import inspect
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-shard_map = jax.shard_map
+# jax >= 0.6 promotes shard_map to jax.shard_map (kwarg ``check_vma``);
+# 0.4.x only has jax.experimental.shard_map.shard_map (kwarg ``check_rep``).
+_shard_map_impl = getattr(jax, "shard_map", None)
+if _shard_map_impl is None:
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+_SM_KWARGS = set(inspect.signature(_shard_map_impl).parameters)
+
+
+def shard_map(f, **kw):
+    """Version-portable shard_map (translates check_vma <-> check_rep)."""
+    if "check_vma" in kw and "check_vma" not in _SM_KWARGS:
+        kw["check_rep"] = kw.pop("check_vma")
+    elif "check_rep" in kw and "check_rep" not in _SM_KWARGS:
+        kw["check_vma"] = kw.pop("check_rep")
+    return _shard_map_impl(f, **kw)
+
 
 __all__ = ["pipeline_apply", "bubble_fraction"]
 

@@ -14,9 +14,13 @@ Logical roles:
   * ep      → "model" on the expert dim when num_experts % model == 0.
 
 Rules are path-regex + shape driven; any dim not divisible by its axis size
-degrades to replication (e.g. whisper's 51865 vocab). Compressed SLoPe leaves
-(values/idx_packed/rc_packed) inherit the sharding of the dense weight they
-replace — this is what shrinks the FSDP all-gather bytes by ~N/M.
+degrades to replication (e.g. whisper's 51865 vocab). Which leaf names count
+as "matrix-like" comes from the linear-representation registry
+(``core.repr.matrix_param_names``): every representation's matrix leaves
+(w / masks / values / idx_packed / rc_packed) inherit the sharding of the
+dense weight they replace — this is what shrinks the FSDP all-gather bytes
+by ~N/M, and it means a newly registered representation shards correctly
+without touching this module.
 """
 from __future__ import annotations
 
@@ -27,6 +31,8 @@ from typing import Any
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.repr import matrix_param_names
 
 __all__ = ["param_specs", "batch_specs", "cache_specs", "activation_policy",
            "constrain", "named_shardings", "logical_axes"]
@@ -92,7 +98,8 @@ def _role(path: str) -> str | None:
     return None
 
 
-def _leaf_spec(path: str, shape, mesh: Mesh, ax: dict, moe_ep: bool) -> P:
+def _leaf_spec(path: str, shape, mesh: Mesh, ax: dict, moe_ep: bool,
+               matrix_leaves: frozenset[str]) -> P:
     tp, fsdp = ax["tp"], ax["fsdp"]
     nd = len(shape)
     role = _role(path)
@@ -115,8 +122,7 @@ def _leaf_spec(path: str, shape, mesh: Mesh, ax: dict, moe_ep: bool) -> P:
     if path.endswith("/b/"):  # linear bias (d_out,)
         return _guard(mesh, shape, [tp if role == "col" else None])
 
-    is_mat = any(f"/{k}/" in path for k in
-                 ("w", "values", "idx_packed", "rc_packed"))
+    is_mat = any(f"/{k}/" in path for k in matrix_leaves)
     if is_mat and role is not None and nd >= 2:
         if in_expert:
             e_ax = tp if moe_ep else None
@@ -145,8 +151,12 @@ def param_specs(params, mesh: Mesh, *, moe_ep: bool = False, mode: str = "train"
     ax = logical_axes(mesh)
     if mode in ("serve", "zero1"):
         ax = dict(ax, fsdp=None)
+    # Snapshot per call, not per import: representations registered after this
+    # module loads (user plugins) must still shard like the weight they replace.
+    mat = matrix_param_names()
     return jax.tree_util.tree_map_with_path(
-        lambda path, leaf: _leaf_spec(_path_str(path), leaf.shape, mesh, ax, moe_ep),
+        lambda path, leaf: _leaf_spec(_path_str(path), leaf.shape, mesh, ax,
+                                      moe_ep, mat),
         params)
 
 

@@ -1,0 +1,68 @@
+"""Optional-``hypothesis`` shim so tier-1 collection never needs the dep.
+
+When ``hypothesis`` is installed (see requirements-dev.txt) this re-exports
+the real ``given``/``settings``/``strategies``. Otherwise it provides a tiny
+fallback that draws a bounded number of pseudo-random examples from a fixed
+seed — property tests keep running (with less adversarial search) instead of
+failing collection.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _MAX_SHIM_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 - mimic `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def settings(**kw):
+        max_examples = kw.get("max_examples", _MAX_SHIM_EXAMPLES)
+
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # No functools.wraps: pytest must see a zero-arg signature, not
+            # the wrapped function's strategy parameters (they'd be treated
+            # as missing fixtures).
+            def wrapper():
+                rng = random.Random(0)
+                n = min(getattr(wrapper, "_shim_max_examples",
+                                _MAX_SHIM_EXAMPLES), _MAX_SHIM_EXAMPLES)
+                for _ in range(n):
+                    fn(*[s.draw(rng) for s in strategies])
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

@@ -11,6 +11,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess multi-device runs
+
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 

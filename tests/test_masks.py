@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_shim import given, settings, st
 
 from repro.core.masks import (density, double_prune_mask, expected_extra_sparsity,
                               index_bits_per_group, magnitude_nm_mask,

@@ -3,6 +3,10 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.slow  # subprocess multi-device runs
+
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 

@@ -2,7 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_shim import given, settings, st
 
 from repro.core.sparse import (compress, decompress, decompress_select,
                                group_compress_select, pack_bools, pack_indices,

@@ -12,6 +12,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow  # end-to-end smoke-scale training runs
 
 from repro.configs import get_smoke_config
 from repro.configs.base import TrainConfig
