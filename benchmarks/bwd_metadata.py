@@ -1,0 +1,111 @@
+"""Micro-benchmark: per-step recompression vs cached-metadata backward.
+
+Measures the double-pruned backward (Eq. 5–6) of one linear layer two ways:
+
+  * ``recompress`` — the pre-cache behaviour: ``compress(w_rc.T, ...)``
+    (argsort over every M-group) runs inside every backward;
+  * ``cached``     — the idxT/rcT params are built once at init; the per-step
+    transposed work is a single compare-select value extraction.
+
+Also times the isolated metadata construction vs extraction (the exact op
+the cache removes from the hot path). Emits CSV rows through the shared
+harness and writes ``BENCH_bwd_metadata.json`` next to the repo root.
+
+Run directly (``python -m benchmarks.bwd_metadata``) or via
+``python -m benchmarks.run --only bwd_metadata``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .common import emit, median_time_us
+
+
+def _grad_fns(d_out, d_in, n, m, backend):
+    from repro.configs.base import SlopeConfig
+    from repro.models.layers import make_linear
+
+    cfg = SlopeConfig(representation="compressed", backend=backend, n=n, m=m)
+    init, apply = make_linear(cfg, d_out, d_in, sparse=True, dtype=jnp.float32)
+    p = init(jax.random.PRNGKey(0))
+    p_nocache = {k: v for k, v in p.items()
+                 if k not in ("idxT_packed", "rcT_packed")}
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, d_in))
+
+    def loss(pp, xx):
+        return jnp.sum(apply(pp, xx) ** 2)
+
+    g = jax.jit(jax.grad(loss, argnums=(0, 1), allow_int=True))
+    return g, p, p_nocache, x
+
+
+def _metadata_ops(d_out, d_in, n, m):
+    from repro.core.masks import double_prune_mask, random_nm_mask
+    from repro.core.sparse import (compress, compress_support,
+                                   select_on_support, unpack_bools,
+                                   unpack_indices)
+
+    kw, km = jax.random.split(jax.random.PRNGKey(2))
+    w = jax.random.normal(kw, (d_out, d_in), jnp.float32)
+    mask_r = random_nm_mask(km, (d_out, d_in), n, m, axis=1)
+    mask_rc = double_prune_mask(mask_r, w, n, m, row_axis=0)
+    w_rc = (w * mask_rc).T
+    mt = mask_rc.T.astype(bool)
+    kT = d_out * n // m
+    idxT_p, rcT_p = compress_support(mt, n, m)
+    idxT = unpack_indices(idxT_p, m, kT)
+    keepT = unpack_bools(rcT_p, kT)
+
+    build = jax.jit(lambda wt: compress(wt, mt, n, m).values)
+    extract = jax.jit(lambda wt: select_on_support(wt, idxT, keepT, n, m))
+    return build, extract, w_rc
+
+
+def main(fast: bool = True) -> None:
+    n, m = 2, 4
+    d = 512 if fast else 2048
+    iters = 10 if fast else 30
+    results = {"n": n, "m": m, "d_out": d, "d_in": d, "iters": iters,
+               "backend_note": ("pallas_interpret is the kernel path in "
+                                "interpret mode on this host; run on TPU "
+                                "with backend='pallas' for hardware numbers")}
+
+    # Full backward: cached metadata vs per-step recompression. The XLA
+    # backend never recompresses (dense BWD-2), so the comparison runs on the
+    # kernel dispatch path.
+    backend = "pallas_interpret" if jax.default_backend() != "tpu" else "pallas"
+    g, p, p_nocache, x = _grad_fns(d, d, n, m, backend)
+    t_cached = median_time_us(g, p, x, iters=iters, warmup=2)
+    t_redo = median_time_us(g, p_nocache, x, iters=iters, warmup=2)
+    emit("bwd_metadata", f"bwd_cached_{backend}_{d}", t_cached)
+    emit("bwd_metadata", f"bwd_recompress_{backend}_{d}", t_redo,
+         derived=f"speedup={t_redo / t_cached:.2f}x")
+    results["bwd_cached_us"] = t_cached
+    results["bwd_recompress_us"] = t_redo
+    results["bwd_speedup"] = t_redo / t_cached
+
+    # Isolated transposed-copy preparation: argsort-compress vs cached-index
+    # compare-select extraction (the exact work the cache removes per step).
+    build, extract, w_rc = _metadata_ops(d, d, n, m)
+    t_build = median_time_us(build, w_rc, iters=iters, warmup=2)
+    t_extract = median_time_us(extract, w_rc, iters=iters, warmup=2)
+    emit("bwd_metadata", f"metadata_compress_{d}", t_build)
+    emit("bwd_metadata", f"metadata_select_{d}", t_extract,
+         derived=f"speedup={t_build / t_extract:.2f}x")
+    results["metadata_compress_us"] = t_build
+    results["metadata_select_us"] = t_extract
+    results["metadata_speedup"] = t_build / t_extract
+
+    out_path = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_bwd_metadata.json")
+    with open(os.path.abspath(out_path), "w") as f:
+        json.dump(results, f, indent=2)
+    emit("bwd_metadata", "json", None, derived="BENCH_bwd_metadata.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,9 +22,10 @@ def main() -> None:
     args = ap.parse_args()
     fast = not args.full
 
-    from . import (appj_prune_target, fig2_convergence, lemma21_density,
-                   perf_iterations, roofline_table, table2_speedup,
-                   table3_memory, table45_adapters, table6_mixed_sparsity)
+    from . import (appj_prune_target, bwd_metadata, fig2_convergence,
+                   lemma21_density, perf_iterations, roofline_table,
+                   table2_speedup, table3_memory, table45_adapters,
+                   table6_mixed_sparsity)
 
     benches = {
         "lemma21": lemma21_density.main,
@@ -36,6 +37,7 @@ def main() -> None:
         "appj": appj_prune_target.main,
         "roofline": roofline_table.main,
         "perf": perf_iterations.main,
+        "bwd_metadata": bwd_metadata.main,
     }
     if args.only:
         keep = set(args.only.split(","))

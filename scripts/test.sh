@@ -1,9 +1,21 @@
 #!/usr/bin/env bash
 # Tier-1 test entry point. Usage:
 #   scripts/test.sh                 # full tier-1 suite
-#   scripts/test.sh -m "not slow"   # skip subprocess/distributed tests
+#   scripts/test.sh --fast          # fast lane: skip subprocess/distributed
+#                                   # tests (same as -m "not slow")
+#   scripts/test.sh -m "not slow"   # explicit marker expression
 #   scripts/test.sh tests/test_repr.py -k parity
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+args=()
+for a in "$@"; do
+  if [[ "$a" == "--fast" ]]; then
+    args+=(-m "not slow")
+  else
+    args+=("$a")
+  fi
+done
+# ${args[@]+...}: empty-array expansion is an "unbound variable" under
+# set -u on bash < 4.4 (macOS ships 3.2)
+exec python -m pytest -x -q ${args[@]+"${args[@]}"}

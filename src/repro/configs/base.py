@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
+from fnmatch import fnmatch
 
 
 @dataclass(frozen=True)
@@ -25,6 +26,24 @@ class SlopeConfig:
     srste_decay: float = 6e-6
     # Mixed N:M (paper Table 6): optional (n, m) for the last half of blocks.
     tail_nm: tuple[int, int] | None = None
+    # Per-layer mixed representations: ordered (pattern, repr_name) pairs
+    # matched (fnmatch) against the linear's qualified name — "attn.q",
+    # "mlp.down", "mixer.out", … — or against its first component alone, so
+    # ("attn", "compressed") covers the self-attention projections. Note the
+    # name prefixes are distinct per mixer flavour: cross-attention is
+    # "xattn.*" and recurrent/xLSTM mixers are "mixer.*" — a bare "attn"
+    # pattern does NOT cover those. First match wins; unnamed linears and
+    # non-matches use ``representation``.
+    repr_overrides: tuple[tuple[str, str], ...] = ()
+
+    def repr_for(self, name: str | None) -> str:
+        """Effective representation for the linear called ``name``."""
+        if name:
+            head = name.split(".", 1)[0]
+            for pat, rep in self.repr_overrides:
+                if fnmatch(name, pat) or fnmatch(head, pat):
+                    return rep
+        return self.representation
 
 
 @dataclass(frozen=True)
@@ -120,6 +139,12 @@ class TrainConfig:
     eps: float = 1e-8
     microbatches: int = 1                  # gradient accumulation
     seed: int = 0
+    # Magnitude mask re-selection cadence for dense-storage sparse layers
+    # (0 = static masks for the whole run, the paper's setting). The Alg. 1
+    # gradient is masked to the support, so the support only shrinks and the
+    # update is effectively one-shot (see optim.mask_update). Every update
+    # also refreshes the cached idxT/rcT backward metadata.
+    mask_update_every: int = 0
     # distributed-optimization tricks
     grad_compression: str = "none"         # "none" | "int8_ef"
     # fault tolerance

@@ -19,17 +19,56 @@ Every representation implements the ``LinearRepr`` protocol:
     the whole model between the XLA reference and the Pallas TPU kernels.
   * ``to_inference(params)`` → ``(repr_name, params)`` — the serving form
     (dense_masked/srste → compressed; adapters ride along for the fused
-    sparse+LoRA kernel). Backward metadata (``rc_packed``) is dropped.
+    sparse+LoRA kernel). Backward metadata (``rc_packed`` and the cached
+    ``idxT_packed``/``rcT_packed``) is dropped.
   * ``param_roles()`` — leaf name → role ("matrix" leaves inherit the
-    sharding of the dense weight they replace; consumed by
+    sharding of the dense weight they replace, "matrix_t" leaves the same
+    with the tail swapped — they live in the W^T layout; consumed by
     ``sharding/specs.py``).
   * ``nbytes(params)`` — actual bytes of the stored pytree (the honest
     runtime footprint that ``core/metrics.py`` compares against the paper's
     analytic bit counts).
 
+Cached double-pruned backward metadata (Alg. 1 precomputation)
+--------------------------------------------------------------
+The kernel-path BWD-2 streams the transposed-compressed copy ``W^{R,C,T}``.
+Its N:M support is static between mask updates, so ``dense_masked`` and
+``compressed`` params carry ``idxT_packed``/``rcT_packed`` — packed indices
++ survivor bitmap of ``mask_rc.T``'s support — built once at ``init`` by
+:func:`transposed_backward_metadata` and refreshed only by
+``optim.mask_update``. Each training step then extracts the current values
+with one compare-select (``core.sparse.select_on_support``) and feeds the
+packed indices straight to ``ops.nm_spmm_packed`` — no per-step
+``compress(w.T, ...)``; bit-for-bit identical to the recompress fallback
+(which still runs when the cache leaves are absent or the geometry can't
+pack).
+
+Per-layer mixed representations (``SlopeConfig.repr_overrides``)
+----------------------------------------------------------------
+Every model linear is built with a qualified name ("attn.q", "mlp.down",
+"mixer.out", "xattn.v", …) and resolves its representation through
+``SlopeConfig.repr_for(name)``. Ordered ``(pattern, repr_name)`` pairs are
+fnmatch'd against the full name and against its first component, so::
+
+    slope = SlopeConfig(
+        representation="compressed",             # default for everything
+        repr_overrides=(("attn", "compressed"),  # self-attention projections
+                        ("mlp.down", "srste"),   # just the down projection
+                        ("mlp", "dense_masked")),# remaining MLP linears
+    )
+
+trains self-attention on the packed kernel path while the MLPs keep dense
+storage — the mixed-sparsity scenario of "Enabling High-Sparsity
+Foundational Llama Models" / LoRS. Prefixes are per mixer flavour:
+cross-attention linears are ``xattn.*`` and recurrent/xLSTM mixers are
+``mixer.*``, so a bare ``"attn"`` pattern does not cover them.
+``freeze_for_inference`` and ``optim.mask_update`` resolve the same names,
+so mixed models freeze, serve and mask-update without extra configuration.
+
 Param-dict key names are stable across representations ("w", "mask_r",
-"mask_rc", "values", "idx_packed", "rc_packed", "b", "lora/{l,r}") so
-checkpoint paths and sharding rules survive representation changes.
+"mask_rc", "values", "idx_packed", "rc_packed", "idxT_packed", "rcT_packed",
+"b", "lora/{l,r}") so checkpoint paths and sharding rules survive
+representation changes.
 """
 from __future__ import annotations
 
@@ -48,9 +87,12 @@ from .masks import magnitude_nm_mask
 from .slope_linear import compressed_from_dense_masked, init_slope_weights
 from .sparse import (
     compress,
+    compress_support,
     decompress_select,
     group_compress_select,
     pack_indices,
+    select_on_support,
+    supports_packed_support,
     unpack_bools,
     unpack_indices,
 )
@@ -61,6 +103,7 @@ __all__ = [
     "LinearRepr", "DenseRepr", "DenseMaskedRepr", "CompressedRepr",
     "SrsteRepr", "CompressedInferenceRepr",
     "register_repr", "get_repr", "available_reprs", "matrix_param_names",
+    "matrix_t_param_names", "transposed_backward_metadata",
     "dense_init", "tree_nbytes",
 ]
 
@@ -103,6 +146,31 @@ def matrix_param_names() -> frozenset[str]:
     return frozenset(names)
 
 
+def matrix_t_param_names() -> frozenset[str]:
+    """Leaf names that shard like the *transposed* weight (d_in, d_out·N/M…):
+    the cached ``idxT``/``rcT`` backward metadata lives in the W^T layout, so
+    its leading axis follows the weight's d_in sharding."""
+    names: set[str] = set()
+    for cls in _REGISTRY.values():
+        names.update(k for k, role in cls.param_roles().items()
+                     if role == "matrix_t")
+    return frozenset(names)
+
+
+def transposed_backward_metadata(mask_rc, n: int, m: int) -> dict:
+    """Cached static metadata of the transposed double-pruned copy W^{R,C,T}
+    (paper Alg. 1): packed in-group indices + survivor bitmap of
+    ``mask_rc.T``'s N:M support along d_out. Built once at ``init`` and on
+    mask updates (``optim.mask_update``); consumed by the kernel backward in
+    place of a per-step ``compress(w.T, ...)``. Empty dict when the geometry
+    cannot pack (partial groups along d_out)."""
+    d_out = mask_rc.shape[0]
+    if not supports_packed_support(d_out, n, m):
+        return {}
+    idxT, rcT = compress_support(mask_rc.T, n, m)
+    return {"idxT_packed": idxT, "rcT_packed": rcT}
+
+
 def dense_init(key, d_out, d_in, dtype, scale=None):
     if scale is None:
         scale = (2.0 / (d_in + d_out)) ** 0.5
@@ -124,9 +192,33 @@ def tree_nbytes(params) -> int:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
-def _masked_matmul(x, w, mask_r, mask_rc, static):
-    """``x @ (w ⊙ mask_r)^T`` with the Eq. 5–6 double-pruned backward."""
+def _cached_bwd2_dx(dy, w_rc, idxT_packed, rcT_packed, n, m, backend):
+    """BWD-2 input gradient on cached metadata (Alg. 1's precomputation).
+
+    The N:M support of W^{R,C,T} is static between mask updates, so the
+    per-step work is one compare-select value extraction — no
+    argsort/compress here — and the packed indices stream straight into the
+    kernel. Shared by the dense_masked and compressed backwards.
+    """
+    d_out = w_rc.shape[0]
+    lead = dy.shape[:-1]
+    kT = d_out * n // m
+    idxT = unpack_indices(idxT_packed, m, kT)
+    keepT = unpack_bools(rcT_packed, kT)
+    valsT = select_on_support(w_rc.T, idxT, keepT, n, m)
+    dx = ops.nm_spmm_packed(dy.reshape(-1, d_out), valsT, idxT_packed,
+                            n=n, m=m, backend=backend)
+    return dx.reshape(*lead, -1)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _masked_matmul(x, w, mask_r, mask_rc, idxT_packed, rcT_packed, static):
+    """``x @ (w ⊙ mask_r)^T`` with the Eq. 5–6 double-pruned backward.
+
+    ``idxT_packed``/``rcT_packed`` are the cached static metadata of the
+    transposed double-pruned copy (``transposed_backward_metadata``); they
+    only matter in BWD-2 and may be ``None`` (per-step recompress fallback).
+    """
     n, m, backend = static
     if ops.resolve_backend(backend) == "xla":
         return x @ (w * mask_r).T
@@ -139,36 +231,40 @@ def _masked_matmul(x, w, mask_r, mask_rc, static):
     return y.reshape(*lead, -1)
 
 
-def _masked_matmul_fwd(x, w, mask_r, mask_rc, static):
-    return _masked_matmul(x, w, mask_r, mask_rc, static), (x, w, mask_r, mask_rc)
+def _masked_matmul_fwd(x, w, mask_r, mask_rc, idxT_packed, rcT_packed, static):
+    y = _masked_matmul(x, w, mask_r, mask_rc, idxT_packed, rcT_packed, static)
+    return y, (x, w, mask_r, mask_rc, idxT_packed, rcT_packed)
 
 
 def _masked_matmul_bwd(static, res, dy):
     n, m, backend = static
-    x, w, mask_r, mask_rc = res
+    x, w, mask_r, mask_rc, idxT_packed, rcT_packed = res
     d_out = w.shape[0]
     w_rc = w * mask_rc
-    if ops.resolve_backend(backend) != "xla" and d_out % m == 0:
-        # BWD-2 through the transposed-compressed double-pruned copy (Alg. 1
-        # keeps both copies resident): column groups of mask_rc carry ≤ N
-        # survivors, so W^{R,C,T} is itself N:M along d_out.
+    kernel = ops.resolve_backend(backend) != "xla"
+    lead = dy.shape[:-1]
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    if kernel and idxT_packed is not None:
+        dx = _cached_bwd2_dx(dy, w_rc, idxT_packed, rcT_packed, n, m, backend)
+    elif kernel and d_out % m == 0:
+        # Fallback (no cached metadata, e.g. unpackable geometry): recompress
+        # the transposed double-pruned copy every step.
         ct = compress(w_rc.T, mask_rc.T.astype(bool), n, m)
-        lead = dy.shape[:-1]
-        dx = ops.nm_spmm(dy.reshape(-1, d_out), ct.values, ct.indices,
+        dx = ops.nm_spmm(dy2, ct.values, ct.indices,
                          n=n, m=m, backend=backend).reshape(*lead, -1)
     else:
         dx = dy @ w_rc
-    dy2 = dy.reshape(-1, dy.shape[-1])
     x2 = x.reshape(-1, x.shape[-1])
     dw = (dy2.T @ x2) * mask_r
-    return dx, dw, None, None
+    return dx, dw, None, None, None, None
 
 
 _masked_matmul.defvjp(_masked_matmul_fwd, _masked_matmul_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
-def _compressed_matmul(x, values, idx_packed, rc_packed, static):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _compressed_matmul(x, values, idx_packed, rc_packed, idxT_packed,
+                       rcT_packed, static):
     """``x @ W^T`` on the packed compressed layout, Eq. 5–6 backward."""
     n, m, k, backend = static
     idx = unpack_indices(idx_packed, m, k)
@@ -178,33 +274,38 @@ def _compressed_matmul(x, values, idx_packed, rc_packed, static):
     return y.reshape(*lead, -1)
 
 
-def _compressed_matmul_fwd(x, values, idx_packed, rc_packed, static):
-    return _compressed_matmul(x, values, idx_packed, rc_packed, static), (
-        x, values, idx_packed, rc_packed)
+def _compressed_matmul_fwd(x, values, idx_packed, rc_packed, idxT_packed,
+                           rcT_packed, static):
+    y = _compressed_matmul(x, values, idx_packed, rc_packed, idxT_packed,
+                           rcT_packed, static)
+    return y, (x, values, idx_packed, rc_packed, idxT_packed, rcT_packed)
 
 
 def _compressed_matmul_bwd(static, res, dy):
     n, m, k, backend = static
-    x, values, idx_packed, rc_packed = res
+    x, values, idx_packed, rc_packed, idxT_packed, rcT_packed = res
     idx = unpack_indices(idx_packed, m, k)
     rc = unpack_bools(rc_packed, k)
     # BWD-2: survivors that lost the column prune are zeroed before the
     # input-gradient matmul (the lossy double-pruned weight of Eq. 6).
     w_rc = decompress_select(jnp.where(rc, values, 0), idx, n, m)
     d_out = w_rc.shape[0]
-    if ops.resolve_backend(backend) != "xla" and d_out % m == 0:
+    kernel = ops.resolve_backend(backend) != "xla"
+    lead = dy.shape[:-1]
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    if kernel and idxT_packed is not None:
+        dx = _cached_bwd2_dx(dy, w_rc, idxT_packed, rcT_packed, n, m, backend)
+    elif kernel and d_out % m == 0:
         ct = compress(w_rc.T, w_rc.T != 0, n, m)
-        lead = dy.shape[:-1]
-        dx = ops.nm_spmm(dy.reshape(-1, d_out), ct.values, ct.indices,
+        dx = ops.nm_spmm(dy2, ct.values, ct.indices,
                          n=n, m=m, backend=backend).reshape(*lead, -1)
     else:
         dx = dy @ w_rc
     # BWD-1: dense outer product, compressed onto the static support
     # (compare-select, no gather).
-    dy2 = dy.reshape(-1, dy.shape[-1])
     x2 = x.reshape(-1, x.shape[-1])
     dvalues = group_compress_select(dy2.T @ x2, idx, n, m).astype(values.dtype)
-    return dx, dvalues, None, None
+    return dx, dvalues, None, None, None, None
 
 
 _compressed_matmul.defvjp(_compressed_matmul_fwd, _compressed_matmul_bwd)
@@ -348,10 +449,13 @@ class DenseMaskedRepr(LinearRepr):
 
     def _init_core(self, key, d_out, d_in, dtype):
         sw = init_slope_weights(key, d_out, d_in, self.n, self.m, dtype=dtype)
-        return {"w": sw.w, "mask_r": sw.mask_r, "mask_rc": sw.mask_rc}
+        p = {"w": sw.w, "mask_r": sw.mask_r, "mask_rc": sw.mask_rc}
+        p.update(transposed_backward_metadata(sw.mask_rc, self.n, self.m))
+        return p
 
     def _matmul(self, p, x, backend):
         return _masked_matmul(x, p["w"], p["mask_r"], p["mask_rc"],
+                              p.get("idxT_packed"), p.get("rcT_packed"),
                               (self.n, self.m, backend))
 
     def to_inference(self, params):
@@ -361,7 +465,8 @@ class DenseMaskedRepr(LinearRepr):
 
     @classmethod
     def param_roles(cls):
-        return {"w": "matrix", "mask_r": "matrix", "mask_rc": "matrix"}
+        return {"w": "matrix", "mask_r": "matrix", "mask_rc": "matrix",
+                "idxT_packed": "matrix_t", "rcT_packed": "matrix_t"}
 
 
 @register_repr
@@ -371,26 +476,35 @@ class CompressedRepr(LinearRepr):
     name = "compressed"
     inference_name = "compressed_inference"
 
+    #: leaves that exist only for the double-pruned backward — all dropped by
+    #: the serving conversion.
+    _BWD_ONLY = ("rc_packed", "idxT_packed", "rcT_packed")
+
     def _init_core(self, key, d_out, d_in, dtype):
         sw = init_slope_weights(key, d_out, d_in, self.n, self.m, dtype=dtype)
         cs = compressed_from_dense_masked(sw, self.n, self.m)
-        return {"values": cs.values, "idx_packed": cs.idx_packed,
-                "rc_packed": cs.rc_packed}
+        p = {"values": cs.values, "idx_packed": cs.idx_packed,
+             "rc_packed": cs.rc_packed}
+        p.update(transposed_backward_metadata(sw.mask_rc, self.n, self.m))
+        return p
 
     def _matmul(self, p, x, backend):
         k = p["values"].shape[-1]
         return _compressed_matmul(x, p["values"], p["idx_packed"],
-                                  p["rc_packed"], (self.n, self.m, k, backend))
+                                  p["rc_packed"], p.get("idxT_packed"),
+                                  p.get("rcT_packed"),
+                                  (self.n, self.m, k, backend))
 
     def to_inference(self, params):
-        # rc_packed is pure backward metadata; the serving layout drops it.
-        out = {k: v for k, v in params.items() if k != "rc_packed"}
+        # rc/idxT/rcT are pure backward metadata; the serving layout drops them.
+        out = {k: v for k, v in params.items() if k not in self._BWD_ONLY}
         return ("compressed_inference", out)
 
     @classmethod
     def param_roles(cls):
         return {"values": "matrix", "idx_packed": "matrix",
-                "rc_packed": "matrix"}
+                "rc_packed": "matrix",
+                "idxT_packed": "matrix_t", "rcT_packed": "matrix_t"}
 
 
 @register_repr

@@ -33,6 +33,7 @@ __all__ = [
     "CompressedNM", "compress", "decompress", "compressed_nbytes",
     "index_bits", "pack_indices", "unpack_indices",
     "pack_bools", "unpack_bools", "decompress_select", "group_compress_select",
+    "compress_support", "select_on_support", "supports_packed_support",
 ]
 
 
@@ -184,6 +185,58 @@ def group_compress_select(dense: jax.Array, idx: jax.Array, n: int, m: int) -> j
         sel = pos == i[..., j : j + 1]
         outs.append(jnp.sum(jnp.where(sel, dg, 0), axis=-1))
     return jnp.stack(outs, axis=-1).reshape(*lead, g * n)
+
+
+# ---------------------------------------------------------------------------
+# Static-support metadata (SLoPe Alg. 1 precomputation). The N:M support of a
+# mask is fixed between mask updates, so its compressed *indices* can be built
+# once and cached as (non-trainable) params; each training step then extracts
+# the current values with one compare-select pass instead of re-running the
+# argsort-based ``compress``. Used for the transposed double-pruned copy
+# (W^{R,C,T}) consumed by the kernel backward.
+# ---------------------------------------------------------------------------
+
+
+def supports_packed_support(d: int, n: int, m: int) -> bool:
+    """Can a support along a length-``d`` axis be cached in packed form?
+    Needs whole groups and a pack-aligned survivor count (``k % 8 == 0``
+    covers both ``pack_indices`` and ``pack_bools``)."""
+    return d % m == 0 and (d // m * n) % 8 == 0
+
+
+def compress_support(mask: jax.Array, n: int, m: int) -> tuple[jax.Array, jax.Array]:
+    """Compressed metadata of an N:M *support* (indices only, no values).
+
+    ``mask``: (rows, d) bool-ish with ≤ N nonzeros per group of M along the
+    last axis (groups may have fewer survivors after double pruning).
+    Returns ``(idx_packed, keep_packed)``: packed in-group offsets of the
+    survivors (same ordering as :func:`compress`) and a packed bitmap marking
+    which of the N slots per group are real — pad slots alias offset 0 and
+    must contribute zero when values are extracted.
+    """
+    rows, d = mask.shape
+    assert d % m == 0, (d, m)
+    groups = d // m
+    k = groups * n
+    mg = mask.astype(bool).reshape(rows, groups, m)
+    order = jnp.argsort(~mg, axis=-1, stable=True)  # survivors sort first
+    top = order[..., :n]
+    keep = jnp.take_along_axis(mg, top, axis=-1)
+    idx = jnp.where(keep, top, 0).astype(jnp.uint8)
+    return pack_indices(idx.reshape(rows, k), m), pack_bools(keep.reshape(rows, k))
+
+
+def select_on_support(dense: jax.Array, idx: jax.Array, keep: jax.Array,
+                      n: int, m: int) -> jax.Array:
+    """Extract compressed values from ``dense`` on a cached support.
+
+    Bit-for-bit identical to ``compress(dense, support, n, m).values`` (same
+    survivor ordering, pad slots zeroed), but gather/argsort-free — the
+    per-step cost of the cached-metadata backward. ``idx``/``keep`` are the
+    *unpacked* outputs of :func:`compress_support`.
+    """
+    vals = group_compress_select(dense, idx, n, m)
+    return jnp.where(keep, vals, 0).astype(dense.dtype)
 
 
 def compressed_nbytes(c: CompressedNM, *, analytic_index_bits: int | None = None) -> dict:

@@ -7,4 +7,5 @@
 Each kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the jit'd
 wrappers with backend dispatch (pallas / pallas_interpret / xla).
 """
-from .ops import nm_spmm, sparse_lora_matmul, nm_prune, default_backend
+from .ops import (nm_spmm, nm_spmm_packed, sparse_lora_matmul, nm_prune,
+                  default_backend)

@@ -29,7 +29,24 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["nm_spmm_pallas", "decompress_block"]
+__all__ = ["nm_spmm_pallas", "decompress_block", "index_pack_ratio"]
+
+
+def index_pack_ratio(m: int) -> int:
+    """Indices per packed byte, per ``core.sparse.index_bits`` (deferred
+    import — repro.core may be mid-import when kernels load)."""
+    from repro.core.sparse import index_bits
+    return 8 // index_bits(m)
+
+
+def unpack_idx_block(packed: jax.Array, m: int) -> jax.Array:
+    """Expand packed in-group offsets to uint8 inside the kernel: pure VPU
+    shift/mask work on the streamed bytes — the index operand moves
+    ``log2(M)`` bits per kept element HBM→VMEM instead of 8. Delegates to
+    ``core.sparse.unpack_indices`` (jnp-only, Pallas-traceable) so exactly
+    one decoder of the ``pack_indices`` layout exists."""
+    from repro.core.sparse import unpack_indices
+    return unpack_indices(packed, m, packed.shape[-1] * index_pack_ratio(m))
 
 
 def decompress_block(vals: jax.Array, idx: jax.Array, n: int, m: int) -> jax.Array:
@@ -49,14 +66,16 @@ def decompress_block(vals: jax.Array, idx: jax.Array, n: int, m: int) -> jax.Arr
     return dense.reshape(rows, g * m)
 
 
-def _nm_spmm_kernel(x_ref, val_ref, idx_ref, o_ref, acc_ref, *, n: int, m: int, nk: int):
+def _nm_spmm_kernel(x_ref, val_ref, idx_ref, o_ref, acc_ref, *, n: int, m: int,
+                    nk: int, packed: bool = False):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    w_dense = decompress_block(val_ref[...], idx_ref[...], n, m)  # (bo, bk)
+    idx = unpack_idx_block(idx_ref[...], m) if packed else idx_ref[...]
+    w_dense = decompress_block(val_ref[...], idx, n, m)  # (bo, bk)
     acc_ref[...] += jax.lax.dot_general(
         x_ref[...], w_dense,
         dimension_numbers=(((1,), (1,)), ((), ())),  # x @ w_dense.T
@@ -70,12 +89,13 @@ def _nm_spmm_kernel(x_ref, val_ref, idx_ref, o_ref, acc_ref, *, n: int, m: int, 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n", "m", "block_b", "block_o", "block_k", "interpret"),
+    static_argnames=("n", "m", "block_b", "block_o", "block_k", "interpret",
+                     "packed"),
 )
 def nm_spmm_pallas(
     x: jax.Array,           # (B, d_in)
     values: jax.Array,      # (d_out, d_in * n // m)
-    indices: jax.Array,     # (d_out, d_in * n // m) uint8
+    indices: jax.Array,     # (d_out, d_in*n//m) uint8 — or packed (see below)
     *,
     n: int,
     m: int,
@@ -83,8 +103,17 @@ def nm_spmm_pallas(
     block_o: int = 128,
     block_k: int = 512,
     interpret: bool = False,
+    packed: bool = False,
 ) -> jax.Array:
-    """``Y = X @ decompress(values, indices)^T`` — returns ``(B, d_out)``."""
+    """``Y = X @ decompress(values, indices)^T`` — returns ``(B, d_out)``.
+
+    ``packed=True``: ``indices`` is the ``core.sparse.pack_indices`` layout
+    (``index_bits(M)`` bits per element, ``(d_out, d_in·N/M·bits/8)``) and is
+    unpacked in-kernel — the cached-metadata backward streams its ``idxT``
+    params straight into the kernel with no XLA-level unpack and at the
+    packed byte width. Per-block packed columns must divide evenly
+    (``block_k·N/M %% (8/bits) == 0``).
+    """
     B, d_in = x.shape
     d_out, k_comp = values.shape
     assert k_comp * m == d_in * n, (x.shape, values.shape, n, m)
@@ -94,15 +123,21 @@ def nm_spmm_pallas(
     assert d_in % block_k == 0 and block_k % m == 0, (d_in, block_k, m)
     assert B % block_b == 0 and d_out % block_o == 0
     bk_comp = block_k * n // m
+    bk_idx = bk_comp
+    if packed:
+        per = index_pack_ratio(m)
+        assert bk_comp % per == 0, (bk_comp, per)
+        assert indices.shape == (d_out, k_comp // per), (indices.shape, per)
+        bk_idx = bk_comp // per
     nk = d_in // block_k
     grid = (B // block_b, d_out // block_o, nk)
     return pl.pallas_call(
-        functools.partial(_nm_spmm_kernel, n=n, m=m, nk=nk),
+        functools.partial(_nm_spmm_kernel, n=n, m=m, nk=nk, packed=packed),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_b, block_k), lambda i, j, k: (i, k)),
             pl.BlockSpec((block_o, bk_comp), lambda i, j, k: (j, k)),
-            pl.BlockSpec((block_o, bk_comp), lambda i, j, k: (j, k)),
+            pl.BlockSpec((block_o, bk_idx), lambda i, j, k: (j, k)),
         ],
         out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((B, d_out), x.dtype),

@@ -21,11 +21,11 @@ import jax.numpy as jnp
 
 from . import ref
 from .nm_prune import nm_prune_pallas
-from .nm_spmm import nm_spmm_pallas
+from .nm_spmm import index_pack_ratio, nm_spmm_pallas
 from .sparse_lora import sparse_lora_pallas
 
-__all__ = ["nm_spmm", "sparse_lora_matmul", "nm_prune", "dense_matmul",
-           "default_backend", "resolve_backend", "BACKENDS"]
+__all__ = ["nm_spmm", "nm_spmm_packed", "sparse_lora_matmul", "nm_prune",
+           "dense_matmul", "default_backend", "resolve_backend", "BACKENDS"]
 
 BACKENDS = ("auto", "xla", "pallas", "pallas_interpret")
 
@@ -76,6 +76,31 @@ def nm_spmm(x, values, indices, *, n: int, m: int, backend: str = "auto",
     else:
         y = ref.nm_spmm_ref(x2, values, indices, n=n, m=m)
     return y.reshape(*lead, -1)
+
+
+def nm_spmm_packed(x, values, idx_packed, *, n: int, m: int,
+                   backend: str = "auto", **block_kw) -> jax.Array:
+    """``X @ W_compressed^T`` taking *packed* indices (the cached ``idxT``
+    params of the double-pruned backward, ``core.sparse.pack_indices``
+    layout). On the kernel path the packed bytes stream straight into
+    ``nm_spmm_pallas(packed=True)`` — no XLA-level unpack, ~``8/index_bits``×
+    fewer index bytes HBM→VMEM; block shapes that would straddle a packed
+    byte (or the XLA reference) fall back to unpacking outside the kernel."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    b = resolve_backend(backend)
+    d_out = values.shape[0]
+    k_comp = values.shape[-1]
+    if b in ("pallas", "pallas_interpret"):
+        per = index_pack_ratio(m)
+        kw = _fit_blocks(block_kw, x2.shape[0], d_out, x2.shape[1], m)
+        if (kw["block_k"] * n // m) % per == 0:
+            y = nm_spmm_pallas(x2, values, idx_packed, n=n, m=m, packed=True,
+                               interpret=(b == "pallas_interpret"), **kw)
+            return y.reshape(*lead, -1)
+    from repro.core.sparse import unpack_indices  # deferred: no import cycle
+    idx = unpack_indices(idx_packed, m, k_comp)
+    return nm_spmm(x, values, idx, n=n, m=m, backend=backend, **block_kw)
 
 
 def sparse_lora_matmul(x, values, indices, l, r, *, n: int, m: int,

@@ -155,10 +155,15 @@ def make_attention(cfg: ModelConfig, *, sparse: bool, cross: bool = False,
     causal = causal and not cross
     window = cfg.window if cfg.attention == "swa" else 0
 
-    lin_q = make_linear(cfg.slope, h * dh, d, sparse=sparse, dtype=dtype, use_bias=cfg.qkv_bias)
-    lin_k = make_linear(cfg.slope, kvh * dh, d, sparse=sparse, dtype=dtype, use_bias=cfg.qkv_bias)
-    lin_v = make_linear(cfg.slope, kvh * dh, d, sparse=sparse, dtype=dtype, use_bias=cfg.qkv_bias)
-    lin_o = make_linear(cfg.slope, d, h * dh, sparse=sparse, dtype=dtype)
+    pre = "xattn" if cross else "attn"
+    lin_q = make_linear(cfg.slope, h * dh, d, sparse=sparse, dtype=dtype,
+                        use_bias=cfg.qkv_bias, name=f"{pre}.q")
+    lin_k = make_linear(cfg.slope, kvh * dh, d, sparse=sparse, dtype=dtype,
+                        use_bias=cfg.qkv_bias, name=f"{pre}.k")
+    lin_v = make_linear(cfg.slope, kvh * dh, d, sparse=sparse, dtype=dtype,
+                        use_bias=cfg.qkv_bias, name=f"{pre}.v")
+    lin_o = make_linear(cfg.slope, d, h * dh, sparse=sparse, dtype=dtype,
+                        name=f"{pre}.o")
 
     def init(key, *, adapter_rank: int = 0):
         ks = jax.random.split(key, 4)

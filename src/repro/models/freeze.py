@@ -5,7 +5,8 @@ form (dense_masked with static masks, packed compressed with the ``rc``
 backward bitmap, or SR-STE dense). Serving wants the paper's inference
 layout: compressed N:M values + packed indices, with lazy adapters riding
 along for the fused sparse+LoRA kernel (Eq. 11), and **no** backward
-metadata. This module performs that conversion structurally:
+metadata (``rc_packed`` and the cached ``idxT_packed``/``rcT_packed``
+transposed-support params are all dropped). The conversion is structural:
 
   * the layer plan (``plan_layers``) says which segments are sparse (the
     first-layer-dense rule and the Table-6 mixed-N:M boundary included);
@@ -14,28 +15,35 @@ metadata. This module performs that conversion structurally:
     converted via the representation registry's ``to_inference``;
   * SR-STE layers store a bare ``{"w"}`` like dense layers, so they are
     identified positionally: inside a sparse segment, under an attention /
-    MLP subtree whose prune flag is on (the MoE router always stays dense);
+    MLP subtree whose prune flag is on (the MoE router always stays dense),
+    when the layer's *effective* representation — ``slope.repr_for`` of its
+    qualified name, so ``repr_overrides`` mixes are honoured — is srste;
   * scanned segments and MoE experts carry stacked leaves — conversions are
     ``vmap``'d over every leading axis.
 
-Everything else (embeddings, norms, heads, dense layers, caches) passes
-through untouched, so ``model.decode_step`` runs on the frozen pytree with
-the same closures — ``make_linear.apply`` detects the frozen structure.
+The same structural walk is exposed as :func:`map_sparse_linears` and reused
+by ``optim.mask_update`` to refresh masks / cached backward metadata without
+re-deriving the layer plan. Everything else (embeddings, norms, heads, dense
+layers, caches) passes through untouched, so ``model.decode_step`` runs on
+the frozen pytree with the same closures — ``make_linear.apply`` detects the
+frozen structure.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Callable
 
 import jax
 
 from repro.configs.base import ModelConfig, SlopeConfig
 from repro.core.repr import get_repr
-from .transformer import plan_layers
 
-__all__ = ["freeze_for_inference"]
+__all__ = ["freeze_for_inference", "map_sparse_linears"]
 
 # Block-dict keys that open an attention-ish / MLP-ish linear subtree.
 _SUBTREE = {"attn": "attn", "xattn": "attn", "mixer": "attn", "mlp": "mlp"}
+
+# fn(node, kind, n, m) -> node, called on every sparse linear param dict.
+LinearFn = Callable[[dict, str, int, int], dict]
 
 
 def freeze_for_inference(model, params: dict) -> dict:
@@ -45,19 +53,36 @@ def freeze_for_inference(model, params: dict) -> dict:
     linear layers change shape. The result is what ``ServeEngine`` consumes
     (and what ``make_linear.apply`` recognises as frozen).
     """
-    cfg: ModelConfig = model.cfg
+    slope = model.cfg.slope
+
+    def fn(node: dict, kind: str, n: int, m: int) -> dict:
+        rep = get_repr(kind, n=n, m=m, srste_decay=slope.srste_decay)
+        return rep.to_inference(node)[1]
+
+    return map_sparse_linears(model.cfg, params, fn)
+
+
+def map_sparse_linears(cfg: ModelConfig, params: dict, fn: LinearFn) -> dict:
+    """Structurally map ``fn`` over every sparse linear param dict.
+
+    ``fn(node, kind, n, m)`` receives one *unstacked* linear param dict and
+    its detected representation kind; scan / expert stacking is handled here
+    (``fn`` is vmapped over every leading axis).
+    """
     out = dict(params)
-    out["stack"] = _freeze_stack(cfg, params["stack"])
+    out["stack"] = _map_stack(cfg, params["stack"], fn)
     if cfg.is_encoder_decoder and "encoder" in params:
         from .model_zoo import encoder_config  # deferred: model_zoo imports layers
 
         enc = dict(params["encoder"])
-        enc["stack"] = _freeze_stack(encoder_config(cfg), params["encoder"]["stack"])
+        enc["stack"] = _map_stack(encoder_config(cfg), params["encoder"]["stack"], fn)
         out["encoder"] = enc
     return out
 
 
-def _freeze_stack(cfg: ModelConfig, stack_params: dict) -> dict:
+def _map_stack(cfg: ModelConfig, stack_params: dict, fn: LinearFn) -> dict:
+    from .transformer import plan_layers  # deferred: transformer imports layers
+
     segs = plan_layers(cfg)
     assert len(segs) == len(stack_params["segments"]), \
         "params do not match this model's layer plan"
@@ -72,29 +97,40 @@ def _freeze_stack(cfg: ModelConfig, stack_params: dict) -> dict:
         # that split or the compressed shapes disagree with the closures.
         nm = {"attn": (cfg.slope.n, cfg.slope.m),
               "mlp": seg.nm if seg.nm is not None else (cfg.slope.n, cfg.slope.m)}
-        segments.append(_convert(seg_p, cfg.slope, nm, under=None))
+        segments.append(_walk(seg_p, cfg.slope, nm, None, None, fn))
     return {"segments": segments}
 
 
-def _convert(node: Any, slope: SlopeConfig, nm: dict, under: str | None):
+def _walk(node: Any, slope: SlopeConfig, nm: dict, under: str | None,
+          lname: str | None, fn: LinearFn):
     n, m = nm[under] if under in nm else (slope.n, slope.m)
     if isinstance(node, dict):
         if n != m:
             if "mask_r" in node and "w" in node:
-                return _freeze_linear(node, "dense_masked", n, m, slope)
+                return _apply_linear(node, "dense_masked", n, m, fn)
             if "values" in node and "idx_packed" in node:
                 kind = ("compressed" if "rc_packed" in node
                         else "compressed_inference")
-                return _freeze_linear(node, kind, n, m, slope)
-            if ("w" in node and slope.representation == "srste"
+                return _apply_linear(node, kind, n, m, fn)
+            if ("w" in node and slope.repr_for(lname) == "srste"
                     and under is not None and _prunable(slope, under)
                     and set(node) <= {"w", "b", "lora"}):
-                return _freeze_linear(node, "srste", n, m, slope)
-        return {k: _convert(v, slope, nm,
-                            None if k == "router" else _SUBTREE.get(k, under))
-                for k, v in node.items()}
+                return _apply_linear(node, "srste", n, m, fn)
+        out = {}
+        for k, v in node.items():
+            if k == "router":
+                child_under, child_lname = None, None
+            elif k in _SUBTREE:
+                child_under, child_lname = _SUBTREE[k], k
+            elif k == "experts":    # structural: expert linears are "mlp.gate" &c.
+                child_under, child_lname = under, lname
+            else:
+                child_under = under
+                child_lname = f"{lname}.{k}" if lname else None
+            out[k] = _walk(v, slope, nm, child_under, child_lname, fn)
+        return out
     if isinstance(node, (tuple, list)):
-        return type(node)(_convert(v, slope, nm, under) for v in node)
+        return type(node)(_walk(v, slope, nm, under, lname, fn) for v in node)
     return node
 
 
@@ -102,10 +138,9 @@ def _prunable(slope: SlopeConfig, under: str) -> bool:
     return slope.prune_attention if under == "attn" else slope.prune_mlp
 
 
-def _freeze_linear(node: dict, kind: str, n: int, m: int, slope: SlopeConfig):
-    rep = get_repr(kind, n=n, m=m, srste_decay=slope.srste_decay)
+def _apply_linear(node: dict, kind: str, n: int, m: int, fn: LinearFn):
     ref_leaf = node["w"] if "w" in node else node["values"]
-    convert = lambda p: rep.to_inference(p)[1]
+    convert = lambda p: fn(p, kind, n, m)
     for _ in range(ref_leaf.ndim - 2):   # scan / expert stacking
         convert = jax.vmap(convert)
     return convert(node)

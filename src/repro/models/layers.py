@@ -31,22 +31,26 @@ __all__ = ["make_linear", "rms_norm", "layer_norm", "make_norm", "make_embedding
 
 def make_linear(cfg: SlopeConfig, d_out: int, d_in: int, *, sparse: bool,
                 dtype=jnp.bfloat16, use_bias: bool = False,
-                nm: tuple[int, int] | None = None):
+                nm: tuple[int, int] | None = None, name: str | None = None):
     """Return ``(init, apply)`` for one linear layer.
 
     ``sparse=False`` (or SLoPe disabled) → dense. Otherwise the representation
-    is looked up in the ``core.repr`` registry by ``cfg.representation``
-    (unknown names raise ``ValueError`` here, at build time). All matmuls
-    dispatch through ``kernels/ops.py`` according to ``cfg.backend``.
+    is looked up in the ``core.repr`` registry by ``cfg.repr_for(name)`` —
+    ``cfg.representation`` unless a ``cfg.repr_overrides`` pattern matches the
+    layer's qualified ``name`` ("attn.q", "mlp.down", "mixer.out", …), which
+    is how e.g. attention projections run ``compressed`` while MLPs stay
+    ``dense_masked``. Unknown names raise ``ValueError`` here, at build time.
+    All matmuls dispatch through ``kernels/ops.py`` according to
+    ``cfg.backend``.
 
     ``apply(params, x)`` dispatches on the *params structure*, so one closure
     serves three pytrees: phase-1 (no adapters), phase-2 (``params["lora"]``
     present), and frozen inference layouts from ``freeze_for_inference``
-    (compressed values without the ``rc_packed`` backward metadata — routed
-    to the fused sparse+LoRA serving representation).
+    (compressed values without the ``rc``/``idxT``/``rcT`` backward metadata
+    — routed to the fused sparse+LoRA serving representation).
     """
     n, m = nm if nm is not None else (cfg.n, cfg.m)
-    kind = cfg.representation if (sparse and cfg.enabled) else "dense"
+    kind = cfg.repr_for(name) if (sparse and cfg.enabled) else "dense"
     if kind == "dense" or n == m:
         kind = "dense"
     backend = cfg.backend

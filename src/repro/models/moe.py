@@ -32,9 +32,12 @@ def make_moe_mlp(cfg: ModelConfig, *, sparse: bool, dtype=jnp.bfloat16,
     """Top-k MoE MLP. apply(p, x) → (y, aux_loss)."""
     d, d_ff, E, k = cfg.d_model, cfg.d_ff, cfg.num_experts, cfg.experts_per_token
     assert E > 0 and 0 < k <= E
-    lin_gate = make_linear(cfg.slope, d_ff, d, sparse=sparse, dtype=dtype, nm=nm)
-    lin_up = make_linear(cfg.slope, d_ff, d, sparse=sparse, dtype=dtype, nm=nm)
-    lin_down = make_linear(cfg.slope, d, d_ff, sparse=sparse, dtype=dtype, nm=nm)
+    lin_gate = make_linear(cfg.slope, d_ff, d, sparse=sparse, dtype=dtype,
+                           nm=nm, name="mlp.gate")
+    lin_up = make_linear(cfg.slope, d_ff, d, sparse=sparse, dtype=dtype,
+                         nm=nm, name="mlp.up")
+    lin_down = make_linear(cfg.slope, d, d_ff, sparse=sparse, dtype=dtype,
+                           nm=nm, name="mlp.down")
 
     def init(key, *, adapter_rank: int = 0):
         kr, ke = jax.random.split(key)

@@ -39,11 +39,16 @@ def make_rglru_block(cfg: ModelConfig, *, sparse: bool, dtype=jnp.bfloat16):
     dr = cfg.rglru_d_rnn or cfg.d_model
     w = cfg.conv_width
 
-    lin_x = make_linear(cfg.slope, dr, d, sparse=sparse, dtype=dtype)
-    lin_gate = make_linear(cfg.slope, dr, d, sparse=sparse, dtype=dtype)
-    lin_out = make_linear(cfg.slope, d, dr, sparse=sparse, dtype=dtype)
-    lin_r = make_linear(cfg.slope, dr, dr, sparse=sparse, dtype=dtype)
-    lin_i = make_linear(cfg.slope, dr, dr, sparse=sparse, dtype=dtype)
+    lin_x = make_linear(cfg.slope, dr, d, sparse=sparse, dtype=dtype,
+                        name="mixer.x")
+    lin_gate = make_linear(cfg.slope, dr, d, sparse=sparse, dtype=dtype,
+                           name="mixer.gate")
+    lin_out = make_linear(cfg.slope, d, dr, sparse=sparse, dtype=dtype,
+                          name="mixer.out")
+    lin_r = make_linear(cfg.slope, dr, dr, sparse=sparse, dtype=dtype,
+                        name="mixer.r")
+    lin_i = make_linear(cfg.slope, dr, dr, sparse=sparse, dtype=dtype,
+                        name="mixer.i")
 
     def init(key, *, adapter_rank: int = 0):
         ks = jax.random.split(key, 7)

@@ -42,9 +42,12 @@ __all__ = ["make_block", "make_decoder_stack", "Segment", "plan_layers"]
 def make_mlp(cfg: ModelConfig, *, sparse: bool, dtype, nm=None):
     d, d_ff = cfg.d_model, cfg.d_ff
     if cfg.act == "swiglu":
-        lin_g = make_linear(cfg.slope, d_ff, d, sparse=sparse, dtype=dtype, nm=nm)
-        lin_u = make_linear(cfg.slope, d_ff, d, sparse=sparse, dtype=dtype, nm=nm)
-        lin_d = make_linear(cfg.slope, d, d_ff, sparse=sparse, dtype=dtype, nm=nm)
+        lin_g = make_linear(cfg.slope, d_ff, d, sparse=sparse, dtype=dtype,
+                            nm=nm, name="mlp.gate")
+        lin_u = make_linear(cfg.slope, d_ff, d, sparse=sparse, dtype=dtype,
+                            nm=nm, name="mlp.up")
+        lin_d = make_linear(cfg.slope, d, d_ff, sparse=sparse, dtype=dtype,
+                            nm=nm, name="mlp.down")
 
         def init(key, *, adapter_rank=0):
             k1, k2, k3 = jax.random.split(key, 3)
@@ -56,9 +59,9 @@ def make_mlp(cfg: ModelConfig, *, sparse: bool, dtype, nm=None):
             return lin_d[1](p["down"], swiglu(lin_g[1](p["gate"], x), lin_u[1](p["up"], x)))
     else:  # gelu MLP (GPT2/OPT/whisper style)
         lin_u = make_linear(cfg.slope, d_ff, d, sparse=sparse, dtype=dtype,
-                            use_bias=True, nm=nm)
+                            use_bias=True, nm=nm, name="mlp.up")
         lin_d = make_linear(cfg.slope, d, d_ff, sparse=sparse, dtype=dtype,
-                            use_bias=True, nm=nm)
+                            use_bias=True, nm=nm, name="mlp.down")
 
         def init(key, *, adapter_rank=0):
             k1, k2 = jax.random.split(key)

@@ -86,10 +86,14 @@ def make_mlstm_block(cfg: ModelConfig, *, sparse: bool, dtype=jnp.bfloat16,
     d = cfg.d_model
     h = cfg.num_heads
     dh = d // h
-    lin_q = make_linear(cfg.slope, d, d, sparse=sparse, dtype=dtype)
-    lin_k = make_linear(cfg.slope, d, d, sparse=sparse, dtype=dtype)
-    lin_v = make_linear(cfg.slope, d, d, sparse=sparse, dtype=dtype)
-    lin_o = make_linear(cfg.slope, d, d, sparse=sparse, dtype=dtype)
+    lin_q = make_linear(cfg.slope, d, d, sparse=sparse, dtype=dtype,
+                        name="mixer.q")
+    lin_k = make_linear(cfg.slope, d, d, sparse=sparse, dtype=dtype,
+                        name="mixer.k")
+    lin_v = make_linear(cfg.slope, d, d, sparse=sparse, dtype=dtype,
+                        name="mixer.v")
+    lin_o = make_linear(cfg.slope, d, d, sparse=sparse, dtype=dtype,
+                        name="mixer.o")
 
     def init(key, *, adapter_rank: int = 0):
         ks = jax.random.split(key, 6)
@@ -172,8 +176,10 @@ def make_slstm_block(cfg: ModelConfig, *, sparse: bool, dtype=jnp.bfloat16):
     d = cfg.d_model
     h = cfg.num_heads
     dh = d // h
-    lin_in = make_linear(cfg.slope, 4 * d, d, sparse=sparse, dtype=dtype)
-    lin_o = make_linear(cfg.slope, d, d, sparse=sparse, dtype=dtype)
+    lin_in = make_linear(cfg.slope, 4 * d, d, sparse=sparse, dtype=dtype,
+                         name="mixer.in")
+    lin_o = make_linear(cfg.slope, d, d, sparse=sparse, dtype=dtype,
+                        name="mixer.o")
 
     def init(key, *, adapter_rank: int = 0):
         k1, k2, k3 = jax.random.split(key, 3)

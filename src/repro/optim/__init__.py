@@ -1,3 +1,4 @@
 from .adamw import AdamWState, init_adamw, adamw_update, clip_by_global_norm
 from .schedules import warmup_cosine
 from .compression import ef_int8_compress, init_ef_state
+from .mask_update import update_masks, refresh_backward_metadata

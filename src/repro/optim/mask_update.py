@@ -1,0 +1,84 @@
+"""Mask re-selection + cached backward-metadata refresh (SLoPe Alg. 1).
+
+The double-pruned backward's transposed-compressed metadata (``idxT_packed``/
+``rcT_packed`` in ``core.repr``) is static *between mask updates*: it is
+built once at ``init`` and must be refreshed exactly when a mask changes —
+never per step (that per-step recompression is the overhead the paper's
+precomputed formulation avoids).
+
+Two entry points, both pure/jittable and structural (they reuse the
+``models.freeze.map_sparse_linears`` walk, so scan/expert stacking and the
+Table-6 / ``repr_overrides`` mixes are handled identically to freezing):
+
+  * :func:`update_masks` — re-select magnitude N:M masks for dense-storage
+    (``dense_masked``) layers from the current weights, re-derive the
+    double-pruned mask, zero the newly pruned weights, and refresh the
+    cached metadata. Wired into ``train/step.py`` via
+    ``TrainConfig.mask_update_every`` (0 = static masks, the paper's
+    setting). Note the Alg. 1 gradient is masked to the support
+    (``dw ⊙ mask_R``), so off-support weights never regrow: the support can
+    only *shrink*, and once an update zeroes the pruned weights, repeated
+    updates are idempotent — this is a one-shot refinement (e.g. magnitude
+    re-selection of a random init after warmup), not SR-STE-style dynamic
+    sparsity (use ``representation="srste"`` for that). ``compressed``
+    layers keep their storage support — their survivors are fixed by the
+    packed layout.
+  * :func:`refresh_backward_metadata` — recompute only the cached
+    ``idxT``/``rcT`` params from the *current* masks (both dense_masked and
+    compressed), e.g. after loading a checkpoint that predates the cache or
+    after externally editing masks.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.masks import double_prune_mask, magnitude_nm_mask
+from repro.core.repr import transposed_backward_metadata
+from repro.core.sparse import decompress_select, unpack_bools, unpack_indices
+
+__all__ = ["update_masks", "refresh_backward_metadata"]
+
+
+def _rc_support_dense(node: dict, n: int, m: int):
+    """Dense (d_out, d_in) bool support of the double-pruned copy of a
+    *compressed* layer, reconstructed from its packed rc bitmap."""
+    k = node["values"].shape[-1]
+    idx = unpack_indices(node["idx_packed"], m, k)
+    rc = unpack_bools(node["rc_packed"], k)
+    return decompress_select(rc.astype(jnp.float32), idx, n, m) > 0.5
+
+
+def update_masks(cfg_model, params: dict) -> dict:
+    """Magnitude mask update for every dense-storage sparse linear."""
+    from repro.models.freeze import map_sparse_linears  # deferred: no cycle
+
+    def fn(node: dict, kind: str, n: int, m: int) -> dict:
+        if kind != "dense_masked":
+            return node
+        w = node["w"]
+        mask_r = magnitude_nm_mask(w, n, m, axis=1).astype(w.dtype)
+        mask_rc = double_prune_mask(mask_r, w, n, m, row_axis=0).astype(w.dtype)
+        out = dict(node, w=w * mask_r, mask_r=mask_r, mask_rc=mask_rc)
+        # the cached transposed support is stale the moment mask_rc moves
+        out.update(transposed_backward_metadata(mask_rc, n, m))
+        return out
+
+    return map_sparse_linears(cfg_model, params, fn)
+
+
+def refresh_backward_metadata(cfg_model, params: dict) -> dict:
+    """Recompute cached ``idxT``/``rcT`` from the current masks only."""
+    from repro.models.freeze import map_sparse_linears  # deferred: no cycle
+
+    def fn(node: dict, kind: str, n: int, m: int) -> dict:
+        # No "idxT_packed in node" guard: a checkpoint predating the cache
+        # *gains* it here (transposed_backward_metadata returns {} when the
+        # geometry can't pack, so this never invents bad leaves).
+        if kind == "dense_masked":
+            return dict(node, **transposed_backward_metadata(node["mask_rc"], n, m))
+        if kind == "compressed":
+            support = _rc_support_dense(node, n, m)
+            return dict(node, **transposed_backward_metadata(support, n, m))
+        return node
+
+    return map_sparse_linears(cfg_model, params, fn)

@@ -124,10 +124,15 @@ def _parse_computations(hlo: str):
     return comps, shapes, entry
 
 
-def _args_of(ins: _Instr) -> list[str]:
-    """Operand names of an instruction (scheduled HLO prints bare names)."""
-    depth = 1
-    out = []
+def _operand_tokens(ins: _Instr) -> list[str]:
+    """Split the operand list of ``opcode(...)`` on top-level commas only.
+
+    Optimized HLO prints typed operands — ``f32[128,256]{1,0} %name`` — whose
+    shape/layout commas must not split the token, so ``[]``/``{}`` nest too.
+    """
+    depth = 1          # we enter after the opcode's "("
+    nest = 0           # [] / {} nesting inside one operand
+    out: list[str] = []
     token = ""
     for ch in ins.rest:
         if ch == "(":
@@ -136,14 +141,34 @@ def _args_of(ins: _Instr) -> list[str]:
             depth -= 1
             if depth == 0:
                 break
-        if depth >= 1 and ch != ",":
-            token += ch
-        elif depth >= 1:
+        elif ch in "[{":
+            nest += 1
+        elif ch in "]}":
+            nest -= 1
+        if ch == "," and depth == 1 and nest == 0:
             out.append(token)
             token = ""
+        else:
+            token += ch
     if token:
         out.append(token)
-    return [t.strip().lstrip("%") for t in out if t.strip()]
+    return [t.strip() for t in out if t.strip()]
+
+
+def _args_of(ins: _Instr) -> list[str]:
+    """Operand names (typed tokens keep only the trailing ``%name``)."""
+    return [t.split()[-1].lstrip("%") for t in _operand_tokens(ins)]
+
+
+def _operand_shape(token: str, shapes: dict[str, str]) -> str:
+    """Shape string of one operand: inline type if printed, else by name."""
+    if _SHAPE_RE.search(token):
+        return token
+    return shapes.get(token.split()[-1].lstrip("%"), "")
+
+
+def _operand_shapes(ins: _Instr, shapes: dict[str, str]) -> list[str]:
+    return [_operand_shape(t, shapes) for t in _operand_tokens(ins)]
 
 
 def _trip_count(cond: list[_Instr]) -> int | None:
@@ -171,11 +196,10 @@ def _trip_count(cond: list[_Instr]) -> int | None:
 
 def _dot_flops(ins: _Instr, shapes: dict[str, str]) -> float:
     out_elems, _ = _shape_elems_bytes(ins.out_shape)
-    args = _args_of(ins)
-    if not args:
+    op_shapes = _operand_shapes(ins, shapes)
+    if not op_shapes:
         return 0.0
-    lhs_shape = shapes.get(args[0], "")
-    lm = _SHAPE_RE.search(lhs_shape)
+    lm = _SHAPE_RE.search(op_shapes[0])
     if lm is None:
         return 0.0
     lhs_dims = [int(d) for d in lm.group(2).split(",") if d]
@@ -192,8 +216,8 @@ def _dot_flops(ins: _Instr, shapes: dict[str, str]) -> float:
 def _instr_bytes(ins: _Instr, shapes: dict[str, str]) -> int:
     _, out_b = _shape_elems_bytes(ins.out_shape)
     in_b = 0
-    for a in _args_of(ins):
-        _, b = _shape_elems_bytes(shapes.get(a, ""))
+    for s in _operand_shapes(ins, shapes):
+        _, b = _shape_elems_bytes(s)
         in_b += b
     return out_b + in_b
 
@@ -211,8 +235,8 @@ def _aliasing_bytes(ins: _Instr, shapes: dict[str, str]) -> int:
     """
     _, out_b = _shape_elems_bytes(ins.out_shape)
     op_bytes = []
-    for a in _args_of(ins):
-        _, b = _shape_elems_bytes(shapes.get(a, ""))
+    for s in _operand_shapes(ins, shapes):
+        _, b = _shape_elems_bytes(s)
         op_bytes.append(b)
     big = max(op_bytes, default=0)
     rest = sorted(op_bytes)[:-1] if op_bytes else []
@@ -226,6 +250,26 @@ def _aliasing_bytes(ins: _Instr, shapes: dict[str, str]) -> int:
 
 def _fusion_is_aliasing(comp: list[_Instr]) -> bool:
     return any(i.opcode in _ALIASING for i in comp)
+
+
+def _fused_dot_flops(name: str, comps: dict, shapes: dict,
+                     seen: frozenset = frozenset()) -> float:
+    """Total dot FLOPs inside a fusion computation, recursing into nested
+    fusions / called computations (so MXU work fused by XLA is still
+    attributed to ``dot_flops`` rather than vanishing into the fusion's
+    ~1-flop-per-element estimate)."""
+    if name not in comps or name in seen:
+        return 0.0
+    seen = seen | {name}
+    total = 0.0
+    for sub in comps[name]:
+        if sub.opcode == "dot":
+            total += _dot_flops(sub, shapes)
+        elif sub.opcode == "fusion":
+            fm = re.search(r"calls=%?([\w\.\-]+)", sub.rest)
+            if fm:
+                total += _fused_dot_flops(fm.group(1), comps, shapes, seen)
+    return total
 
 
 _SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
@@ -293,12 +337,11 @@ def analyze_hlo(hlo: str) -> HloCost:
                 out_elems, _ = _shape_elems_bytes(ins.out_shape)
                 cost.flops += out_elems * mult  # ~1 flop/output element
                 if fm and fm.group(1) in comps:
-                    # dots inside fusions contribute their full flops
-                    for sub in comps[fm.group(1)]:
-                        if sub.opcode == "dot":
-                            f = _dot_flops(sub, shapes) * mult
-                            cost.dot_flops += f
-                            cost.flops += f
+                    # dots inside fusions (at any nesting depth) contribute
+                    # their full flops, scaled by the enclosing multiplicity
+                    f = _fused_dot_flops(fm.group(1), comps, shapes) * mult
+                    cost.dot_flops += f
+                    cost.flops += f
                 continue
             if op == "dot":
                 f = _dot_flops(ins, shapes) * mult

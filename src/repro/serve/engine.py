@@ -100,7 +100,6 @@ class ServeEngine:
         outs: list[list[int]] = [[] for _ in range(b)]
         done = np.zeros(b, bool)
         pos = lengths.copy()
-        cur = None
         for t in range(max_new_tokens):
             lg = logits[:, -1, :]
             if temperature > 0:
@@ -118,5 +117,10 @@ class ServeEngine:
                 break
             logits, caches = self._decode(self.params, jnp.asarray(nxt[:, None]),
                                           caches, jnp.asarray(pos), enc_out=enc_out)
-            pos += 1
+            # Rebind, never mutate: jnp.asarray zero-copies 64-byte-aligned
+            # host buffers, so an in-place ``pos += 1`` here races with the
+            # still-in-flight async decode above (it reads shifted positions
+            # → wrong attention mask/RoPE → batched decode silently diverges
+            # from single-request decode a few tokens in, load-dependent).
+            pos = pos + 1
         return outs

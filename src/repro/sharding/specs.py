@@ -20,7 +20,9 @@ as "matrix-like" comes from the linear-representation registry
 (w / masks / values / idx_packed / rc_packed) inherit the sharding of the
 dense weight they replace — this is what shrinks the FSDP all-gather bytes
 by ~N/M, and it means a newly registered representation shards correctly
-without touching this module.
+without touching this module. ``matrix_t`` leaves (the cached ``idxT``/
+``rcT`` backward metadata, stored in the W^T layout) get the same spec with
+its matrix tail swapped, so the cache shards with its weight.
 """
 from __future__ import annotations
 
@@ -32,7 +34,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.repr import matrix_param_names
+from repro.core.repr import matrix_param_names, matrix_t_param_names
 
 __all__ = ["param_specs", "batch_specs", "cache_specs", "activation_policy",
            "constrain", "named_shardings", "logical_axes"]
@@ -99,7 +101,8 @@ def _role(path: str) -> str | None:
 
 
 def _leaf_spec(path: str, shape, mesh: Mesh, ax: dict, moe_ep: bool,
-               matrix_leaves: frozenset[str]) -> P:
+               matrix_leaves: frozenset[str],
+               matrix_t_leaves: frozenset[str]) -> P:
     tp, fsdp = ax["tp"], ax["fsdp"]
     nd = len(shape)
     role = _role(path)
@@ -121,6 +124,23 @@ def _leaf_spec(path: str, shape, mesh: Mesh, ax: dict, moe_ep: bool,
 
     if path.endswith("/b/"):  # linear bias (d_out,)
         return _guard(mesh, shape, [tp if role == "col" else None])
+
+    is_mat_t = any(f"/{k}/" in path for k in matrix_t_leaves)
+    if is_mat_t and role is not None and nd >= 2:
+        # Transposed backward metadata (idxT/rcT): leading axis is the
+        # weight's d_in, so the weight's spec applies with its tail swapped —
+        # the cache shards *with* the weight it serves (FSDP gathers move the
+        # packed bytes, not a replicated copy). Packed trailing dims usually
+        # fail divisibility and degrade to replication via _guard.
+        if in_expert:
+            e_ax = tp if moe_ep else None
+            inner_tp = None if moe_ep else tp
+            if role == "col":   # weight (..., E, d_ff, d_in) → cache (..., E, d_in, kT')
+                return _guard(mesh, shape, [e_ax, fsdp, inner_tp])
+            return _guard(mesh, shape, [e_ax, inner_tp, fsdp])
+        if role == "col":       # weight (d_out=tp, d_in=fsdp) → cache (d_in=fsdp, …=tp)
+            return _guard(mesh, shape, [fsdp, tp])
+        return _guard(mesh, shape, [tp, fsdp])
 
     is_mat = any(f"/{k}/" in path for k in matrix_leaves)
     if is_mat and role is not None and nd >= 2:
@@ -154,9 +174,10 @@ def param_specs(params, mesh: Mesh, *, moe_ep: bool = False, mode: str = "train"
     # Snapshot per call, not per import: representations registered after this
     # module loads (user plugins) must still shard like the weight they replace.
     mat = matrix_param_names()
+    mat_t = matrix_t_param_names()
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: _leaf_spec(_path_str(path), leaf.shape, mesh, ax,
-                                      moe_ep, mat),
+                                      moe_ep, mat, mat_t),
         params)
 
 

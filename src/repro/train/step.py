@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import TrainConfig
 from repro.optim import (adamw_update, clip_by_global_norm, ef_int8_compress,
-                         warmup_cosine)
+                         update_masks, warmup_cosine)
 from .state import TrainState
 
 __all__ = ["make_train_step", "float_grads"]
@@ -92,6 +92,16 @@ def make_train_step(model, tcfg: TrainConfig):
         lr = warmup_cosine(state.step, base_lr=tcfg.learning_rate,
                            warmup=tcfg.warmup_steps, total=tcfg.total_steps)
         new_params, new_opt = adamw_update(params, grads, state.opt, lr, tcfg)
+        if tcfg.mask_update_every > 0:
+            # Periodic magnitude mask re-selection (dense-storage layers).
+            # This is the ONLY place the cached idxT/rcT backward metadata is
+            # refreshed — every other step consumes it as-is, which is what
+            # keeps the per-step compress out of the double-pruned backward.
+            new_params = jax.lax.cond(
+                (state.step + 1) % tcfg.mask_update_every == 0,
+                lambda p: update_masks(model.cfg, p),
+                lambda p: p,
+                new_params)
         new_state = TrainState(new_params, new_opt, ef, state.step + 1)
         return new_state, {"loss": loss, "ce": ce, "grad_norm": gnorm, "lr": lr}
 

@@ -1,0 +1,260 @@
+"""Cached double-pruned backward metadata (idxT/rcT) + per-layer mixed reprs.
+
+The tentpole guarantees:
+  * the kernel-path backward consumes cached ``idxT_packed``/``rcT_packed``
+    params and matches the per-step-recompress fallback **bit for bit**;
+  * no ``compress(w.T, ...)`` (argsort) runs inside a training step when the
+    cache is present — it runs only at init and on mask updates;
+  * mask updates refresh the cache (``optim.mask_update``);
+  * ``SlopeConfig.repr_overrides`` trains + freezes + serves per-layer mixed
+    representations.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.repr as repr_mod
+from repro.configs import get_smoke_config
+from repro.configs.base import SlopeConfig, TrainConfig
+from repro.core.repr import transposed_backward_metadata
+from repro.core.sparse import compress_support, pack_indices, unpack_indices
+from repro.models import build_model
+from repro.models.layers import make_linear
+from repro.optim import refresh_backward_metadata, update_masks
+from repro.serve import ServeEngine
+
+D_OUT, D_IN, B = 32, 64, 8
+
+
+def _layer(kind, backend="pallas_interpret", overrides=()):
+    cfg = SlopeConfig(representation=kind, backend=backend,
+                      repr_overrides=tuple(overrides))
+    return make_linear(cfg, D_OUT, D_IN, sparse=True, dtype=jnp.float32)
+
+
+def _strip_cache(p):
+    return {k: v for k, v in p.items()
+            if k not in ("idxT_packed", "rcT_packed")}
+
+
+# ---------------------------------------------------------------------------
+# Parity: cached-metadata backward == per-step-recompress backward, bitwise.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+@pytest.mark.parametrize("kind", ["dense_masked", "compressed"])
+def test_cached_backward_matches_recompress_bitwise(kind, backend):
+    init, apply = _layer(kind, backend)
+    p = init(jax.random.PRNGKey(0), adapter_rank=4)
+    assert "idxT_packed" in p and "rcT_packed" in p
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, D_IN))
+
+    def grads(pp):
+        gp = jax.grad(lambda q: jnp.sum(apply(q, x) ** 2), allow_int=True)(pp)
+        gx = jax.grad(lambda xx: jnp.sum(apply(pp, xx) ** 2))(x)
+        return gp, gx
+
+    g_cached, gx_cached = grads(p)
+    g_redo, gx_redo = grads(_strip_cache(p))
+    np.testing.assert_array_equal(np.asarray(gx_cached), np.asarray(gx_redo))
+    wkey = "w" if kind == "dense_masked" else "values"
+    np.testing.assert_array_equal(np.asarray(g_cached[wkey]),
+                                  np.asarray(g_redo[wkey]))
+    # forward too (same compressed operands either way)
+    np.testing.assert_array_equal(np.asarray(apply(p, x)),
+                                  np.asarray(apply(_strip_cache(p), x)))
+
+
+def test_no_transposed_compress_inside_training_step(monkeypatch):
+    """With the cache present, the argsort-based ``compress`` never sees the
+    transposed (d_in, d_out) operand during fwd+bwd — the static cost was
+    paid at init. The compressed representation calls compress not at all."""
+    calls = []
+    real = repr_mod.compress
+
+    def spy(w, mask, n, m):
+        calls.append(tuple(w.shape))
+        return real(w, mask, n, m)
+
+    monkeypatch.setattr(repr_mod, "compress", spy)
+
+    for kind, allowed in [("compressed", set()),
+                          ("dense_masked", {(D_OUT, D_IN)})]:  # fwd stream only
+        calls.clear()
+        init, apply = _layer(kind)
+        p = init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, D_IN))
+        calls.clear()   # init may legitimately compress
+        jax.grad(lambda q: jnp.sum(apply(q, x) ** 2), allow_int=True)(p)
+        assert set(calls) <= allowed, (kind, calls)
+        assert (D_IN, D_OUT) not in set(calls), "transposed recompress ran"
+
+
+def test_cache_survives_jit_and_matches_support():
+    """idxT/rcT of a fresh layer equal compress_support of mask_rc.T."""
+    init, _ = _layer("dense_masked")
+    p = init(jax.random.PRNGKey(3))
+    idxT, rcT = compress_support(p["mask_rc"].T, 2, 4)
+    np.testing.assert_array_equal(np.asarray(p["idxT_packed"]), np.asarray(idxT))
+    np.testing.assert_array_equal(np.asarray(p["rcT_packed"]), np.asarray(rcT))
+
+
+# ---------------------------------------------------------------------------
+# Mask updates refresh the cache.
+# ---------------------------------------------------------------------------
+
+
+def _smoke_model(kind, **slope_kw):
+    base = get_smoke_config("gpt2-small")
+    cfg = base.replace(slope=dataclasses.replace(
+        base.slope, representation=kind, **slope_kw))
+    return cfg, build_model(cfg)
+
+
+def test_update_masks_refreshes_cache():
+    cfg, model = _smoke_model("dense_masked")
+    params = model.init(jax.random.PRNGKey(0))
+    # perturb weights so the magnitude masks genuinely move
+    params = jax.tree_util.tree_map(
+        lambda a: (a + 17.0 * jax.random.normal(jax.random.PRNGKey(7), a.shape)
+                   .astype(a.dtype)) if jnp.issubdtype(a.dtype, jnp.floating)
+        else a, params)
+    updated = update_masks(cfg, params)
+
+    changed = []
+    for (path, new), (_, old) in zip(
+            jax.tree_util.tree_leaves_with_path(updated),
+            jax.tree_util.tree_leaves_with_path(params)):
+        s = jax.tree_util.keystr(path)
+        if "idxT_packed" in s or "rcT_packed" in s:
+            changed.append(not np.array_equal(np.asarray(new), np.asarray(old)))
+    assert changed and any(changed), "no cached metadata leaves were touched"
+    # refreshed cache must be self-consistent with the refreshed masks
+    again = refresh_backward_metadata(cfg, updated)
+    for (path, a), (_, b) in zip(jax.tree_util.tree_leaves_with_path(again),
+                                 jax.tree_util.tree_leaves_with_path(updated)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=jax.tree_util.keystr(path))
+
+
+def test_refresh_adds_cache_to_pre_cache_checkpoint():
+    """A params tree from before the cache existed (no idxT/rcT leaves)
+    gains the metadata on refresh, bitwise equal to a fresh init's."""
+    cfg, model = _smoke_model("compressed")
+    params = model.init(jax.random.PRNGKey(0))
+
+    def strip(node):
+        if isinstance(node, dict):
+            return {k: strip(v) for k, v in node.items()
+                    if k not in ("idxT_packed", "rcT_packed")}
+        if isinstance(node, (tuple, list)):
+            return type(node)(strip(v) for v in node)
+        return node
+
+    restored = refresh_backward_metadata(cfg, strip(params))
+    ref = {jax.tree_util.keystr(p): l for p, l in
+           jax.tree_util.tree_leaves_with_path(params)}
+    got = {jax.tree_util.keystr(p): l for p, l in
+           jax.tree_util.tree_leaves_with_path(restored)}
+    assert set(got) == set(ref)
+    for k in ref:
+        if "idxT_packed" in k or "rcT_packed" in k:
+            np.testing.assert_array_equal(np.asarray(got[k]),
+                                          np.asarray(ref[k]), err_msg=k)
+
+
+def test_train_step_mask_update_keeps_cache_consistent():
+    from repro.train.step import make_train_step
+    from repro.train.state import TrainState
+    from repro.optim import init_adamw
+
+    cfg, model = _smoke_model("dense_masked")
+    params = model.init(jax.random.PRNGKey(0))
+    tcfg = TrainConfig(total_steps=4, warmup_steps=1, mask_update_every=2)
+    step = jax.jit(make_train_step(model, tcfg))
+    state = TrainState(params, init_adamw(params), None, jnp.zeros((), jnp.int32))
+    batch = {"tokens": jnp.arange(64, dtype=jnp.int32).reshape(4, 16) % 256,
+             "labels": jnp.arange(64, dtype=jnp.int32).reshape(4, 16) % 256}
+    for _ in range(2):   # step 2 triggers the update
+        state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    refreshed = refresh_backward_metadata(cfg, state.params)
+    for (path, a), (_, b) in zip(
+            jax.tree_util.tree_leaves_with_path(refreshed),
+            jax.tree_util.tree_leaves_with_path(state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=jax.tree_util.keystr(path))
+
+
+# ---------------------------------------------------------------------------
+# repr_overrides: per-layer mixed representations.
+# ---------------------------------------------------------------------------
+
+
+def test_repr_overrides_selects_per_layer_kinds():
+    cfg = SlopeConfig(representation="compressed",
+                      repr_overrides=(("attn", "compressed"),
+                                      ("mlp.*", "dense_masked")))
+    assert cfg.repr_for("attn.q") == "compressed"
+    assert cfg.repr_for("mlp.down") == "dense_masked"
+    assert cfg.repr_for("mixer.out") == "compressed"   # no match → default
+    assert cfg.repr_for(None) == "compressed"
+    # first match wins
+    cfg2 = SlopeConfig(repr_overrides=(("mlp.up", "srste"), ("mlp", "dense")))
+    assert cfg2.repr_for("mlp.up") == "srste"
+    assert cfg2.repr_for("mlp.down") == "dense"
+
+
+def test_repr_overrides_mixed_model_trains_freezes_serves():
+    """attention compressed / MLP dense_masked: init has the right per-layer
+    leaf structure, a train step runs, and freeze+serve greedy tokens match
+    the unfrozen engine exactly."""
+    cfg, model = _smoke_model(
+        "compressed", repr_overrides=(("mlp", "dense_masked"),))
+    params = model.init(jax.random.PRNGKey(0), adapter_rank=2)
+    leaves = {jax.tree_util.keystr(p)
+              for p, _ in jax.tree_util.tree_leaves_with_path(params)}
+    assert any("attn" in s and "values" in s for s in leaves)
+    assert not any("attn" in s and "mask_r" in s for s in leaves)
+    assert any("mlp" in s and "mask_r" in s for s in leaves)
+    assert not any("mlp" in s and "'values'" in s for s in leaves)
+
+    # one training step (grads flow through both representations)
+    batch = {"tokens": jnp.arange(32, dtype=jnp.int32).reshape(2, 16) % 256,
+             "labels": jnp.arange(32, dtype=jnp.int32).reshape(2, 16) % 256}
+    g = jax.grad(lambda p: model.loss(p, batch)[0], allow_int=True)(params)
+    gn = sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree_util.tree_leaves(g)
+             if jnp.issubdtype(l.dtype, jnp.floating))
+    assert np.isfinite(gn) and gn > 0
+
+    eng_f = ServeEngine(model, params, cache_len=32, prefill_chunk=8)
+    eng_t = ServeEngine(model, params, cache_len=32, prefill_chunk=8,
+                        freeze=False)
+    frozen_leaves = [jax.tree_util.keystr(p) for p, _ in
+                     jax.tree_util.tree_leaves_with_path(eng_f.params)]
+    assert not any("rc_packed" in s or "idxT_packed" in s or "rcT_packed" in s
+                   for s in frozen_leaves)
+    prompts = [[5, 6, 7], [9, 10]]
+    assert eng_f.generate(prompts, 6) == eng_t.generate(prompts, 6)
+
+
+def test_repr_overrides_srste_mlp_freezes():
+    """srste override under MLP is recognised positionally at freeze time."""
+    cfg, model = _smoke_model(
+        "compressed", repr_overrides=(("mlp", "srste"),))
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.models.freeze import freeze_for_inference
+    frozen = freeze_for_inference(model, params)
+    batch = {"tokens": jnp.arange(32, dtype=jnp.int32).reshape(2, 16) % 256}
+    lg_t, _ = model.forward(params, batch)
+    lg_f, _ = model.forward(frozen, batch)
+    np.testing.assert_allclose(np.asarray(lg_f), np.asarray(lg_t),
+                               rtol=1e-5, atol=1e-5)
+    leaves = [jax.tree_util.keystr(p) for p, _ in
+              jax.tree_util.tree_leaves_with_path(frozen)]
+    # srste MLPs became compressed serving layouts
+    assert any("mlp" in s and "values" in s for s in leaves)

@@ -26,12 +26,17 @@ def test_greedy_generation_deterministic():
 
 def test_ragged_batch_matches_single():
     """Per-request positions: a ragged batch must reproduce the single-prompt
-    continuations exactly (padding must not leak into attention)."""
+    continuations exactly (padding must not leak into attention).
+
+    The second prompt set crosses the prefill-chunk boundary with ragged
+    lengths — the shape that historically exposed the async decode reading
+    an in-place-mutated position buffer (serve/engine.py race)."""
     eng, _ = _engine()
-    prompts = [[5, 6, 7], [9, 10, 11, 12, 13, 14], [3]]
-    batched = eng.generate(prompts, max_new_tokens=5)
-    singles = [eng.generate([p], max_new_tokens=5)[0] for p in prompts]
-    assert batched == singles
+    for prompts in ([[5, 6, 7], [9, 10, 11, 12, 13, 14], [3]],
+                    [[4] * 16, [8] * 9, [5]]):
+        batched = eng.generate(prompts, max_new_tokens=5)
+        singles = [eng.generate([p], max_new_tokens=5)[0] for p in prompts]
+        assert batched == singles
 
 
 def test_swa_rolling_cache_generation():
