@@ -30,6 +30,7 @@ def main() -> None:
     benches = {
         "lemma21": lemma21_density.main,
         "table3": table3_memory.main,
+        "q8_memory": table3_memory.q8_main,
         "table2": table2_speedup.main,
         "fig2": fig2_convergence.main,
         "table45": table45_adapters.main,

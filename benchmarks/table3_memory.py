@@ -5,6 +5,12 @@ Two accountings per arch:
   * runtime  — exact nbytes of our abstract param/optimizer pytrees
     (bf16 values + packed uint8 indices + rc bitmaps), i.e. what
     memory_analysis() sees on device.
+
+Quantized rows (``q8_main`` / ``benchmarks/run.py --only q8_memory``): the
+``freeze_for_inference(quantize="q8")`` serving layout — int8 values +
+per-group f32 scales — emitted per arch and written to
+``BENCH_q8_memory.json`` with the sparse weight-payload ratio vs dense bf16
+(must stay ≤ 0.35×, the sparse+quantized compounding of Table 3's 0.61×).
 """
 from __future__ import annotations
 
@@ -17,8 +23,10 @@ ARCHS = ["gpt2-small", "yi-6b", "phi4-mini-3.8b", "qwen2-72b", "mixtral-8x22b"]
 
 
 def _tree_bytes(tree) -> int:
-    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree)
-               if hasattr(x, "dtype"))
+    # core.repr.tree_nbytes: array/ShapeDtypeStruct leaves only — python
+    # scalars in the state pytrees must not inflate the tables.
+    from repro.core.repr import tree_nbytes
+    return tree_nbytes(tree)
 
 
 def runtime_ratio(arch: str, rank_frac: float = 0.0) -> dict:
@@ -42,6 +50,79 @@ def runtime_ratio(arch: str, rank_frac: float = 0.0) -> dict:
     out["train_sparse"] = _tree_bytes(abstract_state(m_sparse, tcfg, adapter_rank=rank))
     out["train_dense"] = _tree_bytes(abstract_state(m_dense, tcfg))
     return out
+
+
+def q8_ratios(arch: str) -> dict:
+    """Abstract (zero-allocation) nbytes of the bf16 vs q8 serving layouts."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.core.repr import tree_nbytes
+    from repro.launch.specs import abstract_params
+    from repro.models import build_model
+    from repro.models.freeze import freeze_for_inference
+
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    ap = abstract_params(model)
+    frozen_bf = jax.eval_shape(
+        lambda p: freeze_for_inference(model, p), ap)
+    frozen_q8 = jax.eval_shape(
+        lambda p: freeze_for_inference(model, p, quantize="q8"), ap)
+    dense_cfg = cfg.replace(slope=dataclasses.replace(cfg.slope, enabled=False))
+    dense = tree_nbytes(abstract_params(build_model(dense_cfg)))
+
+    # Sparse weight payload (values_q + scales + packed idx) vs the dense
+    # bf16 matrices those linears replace — the ≤0.35× acceptance number.
+    # Per-layer N:M mirrors the freeze walk: the Table-6 tail_nm boundary
+    # applies to MLP linears of tail segments only; attention keeps the
+    # config-level N:M (models/freeze.py:_map_stack).
+    import re
+    from repro.models.transformer import plan_layers
+
+    segs = plan_layers(cfg)
+
+    def leaf_nm(path_str: str) -> tuple[int, int]:
+        seg = re.search(r"segments'\]\[(\d+)", path_str)
+        if (seg and "encoder" not in path_str and "mlp" in path_str
+                and segs[int(seg.group(1))].nm is not None):
+            return segs[int(seg.group(1))].nm
+        return cfg.slope.n, cfg.slope.m
+
+    payload = dense_payload = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(frozen_q8):
+        s = jax.tree_util.keystr(path)
+        if any(k in s for k in ("values_q", "scales", "idx_packed")):
+            payload += leaf.size * jnp.dtype(leaf.dtype).itemsize
+        if "values_q" in s:
+            n, m = leaf_nm(s)
+            dense_payload += (leaf.size * m // n) * 2   # dense bf16 baseline
+    return {
+        "inf_dense": int(dense),
+        "inf_bf16": int(tree_nbytes(frozen_bf)),
+        "inf_q8": int(tree_nbytes(frozen_q8)),
+        "payload_q8": int(payload),
+        "payload_dense_bf16": int(dense_payload),
+        "payload_ratio": payload / max(dense_payload, 1),
+    }
+
+
+def q8_main(fast: bool = True):
+    """Quantized serving-memory rows → BENCH_q8_memory.json."""
+    import json
+
+    results = {}
+    for arch in (ARCHS[:2] if fast else ARCHS):
+        r = q8_ratios(arch)
+        results[arch] = r
+        assert r["payload_ratio"] <= 0.35, (arch, r["payload_ratio"])
+        emit("q8_memory", arch, None,
+             f"inf_q8/dense={r['inf_q8'] / r['inf_dense']:.3f} "
+             f"inf_bf16/dense={r['inf_bf16'] / r['inf_dense']:.3f} "
+             f"payload_q8/dense_bf16={r['payload_ratio']:.3f} "
+             f"(paper 2:4 inf 0.61; q8 compounds to ~0.31-0.33)")
+    with open("BENCH_q8_memory.json", "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    emit("q8_memory", "__artifact__", None, "BENCH_q8_memory.json")
 
 
 def main(fast: bool = True):
@@ -72,3 +153,4 @@ def main(fast: bool = True):
 
 if __name__ == "__main__":
     main(fast=False)
+    q8_main(fast=False)

@@ -16,6 +16,21 @@ for a in "$@"; do
     args+=("$a")
   fi
 done
+# A file that fails to import must make the run red, never silently shrink
+# it. Bare / marker-filtered runs already get this from pytest (markers
+# deselect *after* collection, so import errors exit 2 on their own); only
+# explicit-path invocations (scripts/test.sh tests/test_x.py ...) skip
+# collecting the rest of the suite — guard those with one whole-suite
+# collect-only pass.
+restricted=0
+for a in ${args[@]+"${args[@]}"}; do
+  case "$a" in tests/*|*.py|*.py::*) restricted=1 ;; esac
+done
+if [[ "$restricted" == 1 ]] && ! python -m pytest --collect-only -q >/dev/null 2>&1; then
+  echo "scripts/test.sh: whole-suite pytest collection failed" >&2
+  python -m pytest --collect-only -q 2>&1 | tail -20 >&2 || true
+  exit 2
+fi
 # ${args[@]+...}: empty-array expansion is an "unbound variable" under
 # set -u on bash < 4.4 (macOS ships 3.2)
 exec python -m pytest -x -q ${args[@]+"${args[@]}"}

@@ -35,6 +35,14 @@ class SlopeConfig:
     # pattern does NOT cover those. First match wins; unnamed linears and
     # non-matches use ``representation``.
     repr_overrides: tuple[tuple[str, str], ...] = ()
+    # Serving-time value quantization: "none" | "q8". "q8" makes
+    # freeze_for_inference absmax-quantize every bf16 sparse linear to the
+    # compressed_q8_inference layout (int8 values + per-group scales,
+    # dequantized inside the kernels). Interops with repr_overrides: a layer
+    # trained as "compressed_q8" always serves quantized, so e.g.
+    # repr_overrides=(("mlp", "compressed_q8"),) with quantize="none" serves
+    # q8 MLPs and bf16 attention from one pytree.
+    quantize: str = "none"
 
     def repr_for(self, name: str | None) -> str:
         """Effective representation for the linear called ``name``."""

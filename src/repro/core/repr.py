@@ -2,7 +2,8 @@
 
 One logical SLoPe linear layer has several physical forms — dense, dense with
 static masks for the double-pruned backward (paper Eqs. 4–6), compressed N:M
-for memory/bandwidth, and fused sparse+LoRA for phase-2 inference (Eq. 11).
+for memory/bandwidth, int8-quantized compressed N:M for the sparse+quantized
+deployment recipe, and fused sparse+LoRA for phase-2 inference (Eq. 11).
 This module makes each form a first-class, convertible *representation*:
 
     rep = get_repr("compressed", n=2, m=4)
@@ -29,6 +30,25 @@ Every representation implements the ``LinearRepr`` protocol:
     runtime footprint that ``core/metrics.py`` compares against the paper's
     analytic bit counts).
 
+Registered representations and their weight-payload ``nbytes``
+--------------------------------------------------------------
+With ``E = d_out·d_in`` dense elements, ``k = d_in·N/M`` kept per row,
+``bits = index_bits(M)`` and ``G = q8_group_size(k, N)`` (≤ 64 kept values
+per quantization group); ``it`` = value itemsize (2 for bf16, 4 for f32):
+
+========================  ====================================================
+``dense``                 ``E·it``
+``dense_masked``          ``3·E·it``  (w + mask_R + mask_RC) + cached idxT/rcT
+``srste``                 ``E·it``  (dense storage, magnitude mask per step)
+``compressed``            ``E·(N/M)·it + E·(N/M)·bits/8 + E·(N/M)/8``
+                          (values + packed idx + rc bitmap) + idxT/rcT/permT
+``compressed_q8``         ``E·(N/M)·(1 + bits/8 + 1/8) + 4·E·(N/M)/G``
+                          (int8 values_q + packed idx + rc + f32 scales)
+``compressed_inference``  ``E·(N/M)·it + E·(N/M)·bits/8``  — no bwd metadata
+``compressed_q8_inference``  ``E·(N/M)·(1 + bits/8) + 4·E·(N/M)/G``
+                          (2:4 vs dense bf16: 0.5 + 0.125 + 0.03 ≈ 0.33×)
+========================  ====================================================
+
 Cached double-pruned backward metadata (Alg. 1 precomputation)
 --------------------------------------------------------------
 The kernel-path BWD-2 streams the transposed-compressed copy ``W^{R,C,T}``.
@@ -41,7 +61,28 @@ with one compare-select (``core.sparse.select_on_support``) and feeds the
 packed indices straight to ``ops.nm_spmm_packed`` — no per-step
 ``compress(w.T, ...)``; bit-for-bit identical to the recompress fallback
 (which still runs when the cache leaves are absent or the geometry can't
-pack).
+pack). Packed-storage representations (``compressed``/``compressed_q8``)
+additionally carry ``permT`` — the cached compressed→transposed-compressed
+value permutation (``core.sparse.transposed_value_permutation``) — so their
+BWD-2 value extraction is one O(kT) gather from the forward ``values``
+payload instead of materializing the dense ``w_rc`` copy just to re-select
+its transpose (bit-for-bit identical to the dense-extraction path, which
+remains the fallback for pre-permT checkpoints).
+
+Quantized values (``compressed_q8`` / ``compressed_q8_inference``)
+------------------------------------------------------------------
+``compressed_q8`` stores the surviving N:M values as a *frozen* int8 payload
+(``values_q``) plus per-group f32 absmax ``scales``
+(``core.sparse.quantize_q8``); dequantization happens inside the kernels
+(``ops.nm_spmm(..., scales=...)``), so the int8 bytes are what streams
+HBM→VMEM. The custom VJP is straight-through: the input gradient runs the
+double-pruned backward on the dequantized payload (reusing the cached
+``idxT``/``rcT``/``permT`` metadata), ``values_q`` receives no cotangent,
+and ``scales`` receive their exact gradient (``Σ_group ∇W ⊙ values_q``) so
+phase-2 can fine-tune scales alongside the lazy adapters.
+``compressed_q8_inference`` is the frozen serving form, produced by
+``to_inference`` or by ``freeze_for_inference(..., quantize="q8")`` from any
+bf16 sparse training representation (absmax-quantized at freeze time).
 
 Per-layer mixed representations (``SlopeConfig.repr_overrides``)
 ----------------------------------------------------------------
@@ -77,6 +118,7 @@ from typing import Any, Callable, ClassVar
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # Module object (not names) — repro.kernels may be mid-import when this module
 # loads through core/__init__; attributes are resolved at call time.
@@ -89,10 +131,13 @@ from .sparse import (
     compress,
     compress_support,
     decompress_select,
+    dequantize_q8,
     group_compress_select,
     pack_indices,
+    quantize_q8,
     select_on_support,
     supports_packed_support,
+    transposed_value_permutation,
     unpack_bools,
     unpack_indices,
 )
@@ -101,7 +146,8 @@ Params = dict
 
 __all__ = [
     "LinearRepr", "DenseRepr", "DenseMaskedRepr", "CompressedRepr",
-    "SrsteRepr", "CompressedInferenceRepr",
+    "SrsteRepr", "CompressedInferenceRepr", "CompressedQ8Repr",
+    "CompressedQ8InferenceRepr", "quantize_inference_q8",
     "register_repr", "get_repr", "available_reprs", "matrix_param_names",
     "matrix_t_param_names", "transposed_backward_metadata",
     "dense_init", "tree_nbytes",
@@ -157,18 +203,28 @@ def matrix_t_param_names() -> frozenset[str]:
     return frozenset(names)
 
 
-def transposed_backward_metadata(mask_rc, n: int, m: int) -> dict:
+def transposed_backward_metadata(mask_rc, n: int, m: int, *,
+                                 idx_packed=None) -> dict:
     """Cached static metadata of the transposed double-pruned copy W^{R,C,T}
     (paper Alg. 1): packed in-group indices + survivor bitmap of
     ``mask_rc.T``'s N:M support along d_out. Built once at ``init`` and on
     mask updates (``optim.mask_update``); consumed by the kernel backward in
     place of a per-step ``compress(w.T, ...)``. Empty dict when the geometry
-    cannot pack (partial groups along d_out)."""
-    d_out = mask_rc.shape[0]
+    cannot pack (partial groups along d_out).
+
+    ``idx_packed`` (the *forward* compressed layout of the same weight, for
+    packed-storage representations) additionally derives ``permT`` — the
+    compressed→transposed-compressed value permutation that keeps the BWD-2
+    prep at O(kT) (no dense ``w_rc`` materialization)."""
+    d_out, d_in = mask_rc.shape
     if not supports_packed_support(d_out, n, m):
         return {}
     idxT, rcT = compress_support(mask_rc.T, n, m)
-    return {"idxT_packed": idxT, "rcT_packed": rcT}
+    out = {"idxT_packed": idxT, "rcT_packed": rcT}
+    if idx_packed is not None:
+        out["permT"] = transposed_value_permutation(idx_packed, idxT, rcT,
+                                                    d_out, d_in, n, m)
+    return out
 
 
 def dense_init(key, d_out, d_in, dtype, scale=None):
@@ -178,10 +234,21 @@ def dense_init(key, d_out, d_in, dtype, scale=None):
 
 
 def tree_nbytes(params) -> int:
-    """Actual bytes of every array leaf in ``params``."""
-    return int(sum(leaf.size * leaf.dtype.itemsize
-                   for leaf in jax.tree_util.tree_leaves(params)
-                   if hasattr(leaf, "dtype")))
+    """Actual bytes of every *stored array* leaf in ``params``.
+
+    Counts only leaves with both a dtype and a shape (jax/numpy arrays and
+    ShapeDtypeStruct abstractions). Python scalars and 0-d numpy scalars —
+    static config values riding in params dicts — are skipped: they are not
+    device-stored tensors, and counting them silently over-reports the
+    memory tables."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(params):
+        if not (hasattr(leaf, "dtype") and hasattr(leaf, "shape")):
+            continue
+        if isinstance(leaf, np.generic):
+            continue
+        total += leaf.size * np.dtype(leaf.dtype).itemsize
+    return int(total)
 
 
 # ---------------------------------------------------------------------------
@@ -209,6 +276,43 @@ def _cached_bwd2_dx(dy, w_rc, idxT_packed, rcT_packed, n, m, backend):
     dx = ops.nm_spmm_packed(dy.reshape(-1, d_out), valsT, idxT_packed,
                             n=n, m=m, backend=backend)
     return dx.reshape(*lead, -1)
+
+
+def _compressed_bwd2_dx(dy, values_f, idx_packed, rc_packed, idxT_packed,
+                        rcT_packed, permT, n, m, k, backend):
+    """BWD-2 input gradient for packed-storage representations.
+
+    ``values_f``: the (d_out, k) float forward payload (dequantized for q8).
+    With the cached ``permT`` the per-step prep is one O(kT) gather straight
+    from ``values_f`` (every real transposed slot is an RC survivor, so no
+    rc-zeroing is even needed — pads are zeroed on the ``rcT`` bitmap);
+    without it (pre-permT checkpoints) the dense ``w_rc`` extraction runs,
+    bit-for-bit identical. Recompress / dense-matmul fallbacks as before.
+    """
+    d_out = values_f.shape[0]
+    kT = d_out * n // m
+    lead = dy.shape[:-1]
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    kernel = ops.resolve_backend(backend) != "xla"
+    if kernel and idxT_packed is not None and permT is not None:
+        keepT = unpack_bools(rcT_packed, kT)
+        valsT = jnp.where(keepT, values_f.reshape(-1)[permT],
+                          0).astype(values_f.dtype)
+        dx = ops.nm_spmm_packed(dy2, valsT, idxT_packed,
+                                n=n, m=m, backend=backend)
+        return dx.reshape(*lead, -1)
+    idx = unpack_indices(idx_packed, m, k)
+    rc = unpack_bools(rc_packed, k)
+    # Survivors that lost the column prune are zeroed before the dense
+    # expansion (the lossy double-pruned weight of Eq. 6).
+    w_rc = decompress_select(jnp.where(rc, values_f, 0), idx, n, m)
+    if kernel and idxT_packed is not None:
+        return _cached_bwd2_dx(dy, w_rc, idxT_packed, rcT_packed, n, m, backend)
+    if kernel and d_out % m == 0:
+        ct = compress(w_rc.T, w_rc.T != 0, n, m)
+        dx = ops.nm_spmm(dy2, ct.values, ct.indices, n=n, m=m, backend=backend)
+        return dx.reshape(*lead, -1)
+    return dy @ w_rc
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
@@ -262,9 +366,9 @@ def _masked_matmul_bwd(static, res, dy):
 _masked_matmul.defvjp(_masked_matmul_fwd, _masked_matmul_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7,))
 def _compressed_matmul(x, values, idx_packed, rc_packed, idxT_packed,
-                       rcT_packed, static):
+                       rcT_packed, permT, static):
     """``x @ W^T`` on the packed compressed layout, Eq. 5–6 backward."""
     n, m, k, backend = static
     idx = unpack_indices(idx_packed, m, k)
@@ -275,40 +379,81 @@ def _compressed_matmul(x, values, idx_packed, rc_packed, idxT_packed,
 
 
 def _compressed_matmul_fwd(x, values, idx_packed, rc_packed, idxT_packed,
-                           rcT_packed, static):
+                           rcT_packed, permT, static):
     y = _compressed_matmul(x, values, idx_packed, rc_packed, idxT_packed,
-                           rcT_packed, static)
-    return y, (x, values, idx_packed, rc_packed, idxT_packed, rcT_packed)
+                           rcT_packed, permT, static)
+    return y, (x, values, idx_packed, rc_packed, idxT_packed, rcT_packed, permT)
 
 
 def _compressed_matmul_bwd(static, res, dy):
     n, m, k, backend = static
-    x, values, idx_packed, rc_packed, idxT_packed, rcT_packed = res
-    idx = unpack_indices(idx_packed, m, k)
-    rc = unpack_bools(rc_packed, k)
-    # BWD-2: survivors that lost the column prune are zeroed before the
-    # input-gradient matmul (the lossy double-pruned weight of Eq. 6).
-    w_rc = decompress_select(jnp.where(rc, values, 0), idx, n, m)
-    d_out = w_rc.shape[0]
-    kernel = ops.resolve_backend(backend) != "xla"
-    lead = dy.shape[:-1]
-    dy2 = dy.reshape(-1, dy.shape[-1])
-    if kernel and idxT_packed is not None:
-        dx = _cached_bwd2_dx(dy, w_rc, idxT_packed, rcT_packed, n, m, backend)
-    elif kernel and d_out % m == 0:
-        ct = compress(w_rc.T, w_rc.T != 0, n, m)
-        dx = ops.nm_spmm(dy2, ct.values, ct.indices,
-                         n=n, m=m, backend=backend).reshape(*lead, -1)
-    else:
-        dx = dy @ w_rc
+    x, values, idx_packed, rc_packed, idxT_packed, rcT_packed, permT = res
+    # BWD-2 (Eq. 6): O(kT) permutation gather when cached, dense fallbacks
+    # otherwise.
+    dx = _compressed_bwd2_dx(dy, values, idx_packed, rc_packed, idxT_packed,
+                             rcT_packed, permT, n, m, k, backend)
     # BWD-1: dense outer product, compressed onto the static support
     # (compare-select, no gather).
+    idx = unpack_indices(idx_packed, m, k)
+    dy2 = dy.reshape(-1, dy.shape[-1])
     x2 = x.reshape(-1, x.shape[-1])
     dvalues = group_compress_select(dy2.T @ x2, idx, n, m).astype(values.dtype)
-    return dx, dvalues, None, None, None, None
+    return dx, dvalues, None, None, None, None, None
 
 
 _compressed_matmul.defvjp(_compressed_matmul_fwd, _compressed_matmul_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(8,))
+def _compressed_q8_matmul(x, values_q, scales, idx_packed, rc_packed,
+                          idxT_packed, rcT_packed, permT, static):
+    """``x @ W^T`` on the int8-quantized compressed layout.
+
+    Forward streams the int8 payload + per-group scales into the kernel
+    (dequant-in-kernel; the XLA reference dequantizes the compressed payload,
+    never a dense matrix). Backward is straight-through: double-pruned dx on
+    the dequantized payload, exact dscales, frozen values_q.
+    """
+    n, m, k, backend = static
+    idx = unpack_indices(idx_packed, m, k)
+    lead = x.shape[:-1]
+    y = ops.nm_spmm(x.reshape(-1, x.shape[-1]), values_q, idx, scales=scales,
+                    n=n, m=m, backend=backend)
+    return y.reshape(*lead, -1)
+
+
+def _compressed_q8_matmul_fwd(x, values_q, scales, idx_packed, rc_packed,
+                              idxT_packed, rcT_packed, permT, static):
+    y = _compressed_q8_matmul(x, values_q, scales, idx_packed, rc_packed,
+                              idxT_packed, rcT_packed, permT, static)
+    return y, (x, values_q, scales, idx_packed, rc_packed, idxT_packed,
+               rcT_packed, permT)
+
+
+def _compressed_q8_matmul_bwd(static, res, dy):
+    n, m, k, backend = static
+    x, values_q, scales, idx_packed, rc_packed, idxT_packed, rcT_packed, \
+        permT = res
+    # Dequantize at the cotangent dtype: the backward behaves exactly like a
+    # bf16/f32 weight of the dequantized value (straight-through).
+    values_f = dequantize_q8(values_q, scales).astype(dy.dtype)
+    dx = _compressed_bwd2_dx(dy, values_f, idx_packed, rc_packed, idxT_packed,
+                             rcT_packed, permT, n, m, k, backend)
+    # BWD-1 onto the support, then folded onto the scales: ∂W/∂scale is the
+    # unit int8 payload, so dscale[g] = Σ_{j∈g} ∇W_j · values_q_j. values_q
+    # itself is frozen (int payload — no cotangent).
+    idx = unpack_indices(idx_packed, m, k)
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    x2 = x.reshape(-1, x.shape[-1])
+    dvals = group_compress_select((dy2.T @ x2).astype(jnp.float32), idx, n, m)
+    d_out = values_q.shape[0]
+    q_group = k // scales.shape[-1]
+    dscales = (dvals * values_q.astype(jnp.float32)).reshape(
+        d_out, k // q_group, q_group).sum(-1).astype(scales.dtype)
+    return dx, None, dscales, None, None, None, None, None
+
+
+_compressed_q8_matmul.defvjp(_compressed_q8_matmul_fwd, _compressed_q8_matmul_bwd)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
@@ -478,25 +623,26 @@ class CompressedRepr(LinearRepr):
 
     #: leaves that exist only for the double-pruned backward — all dropped by
     #: the serving conversion.
-    _BWD_ONLY = ("rc_packed", "idxT_packed", "rcT_packed")
+    _BWD_ONLY = ("rc_packed", "idxT_packed", "rcT_packed", "permT")
 
     def _init_core(self, key, d_out, d_in, dtype):
         sw = init_slope_weights(key, d_out, d_in, self.n, self.m, dtype=dtype)
         cs = compressed_from_dense_masked(sw, self.n, self.m)
         p = {"values": cs.values, "idx_packed": cs.idx_packed,
              "rc_packed": cs.rc_packed}
-        p.update(transposed_backward_metadata(sw.mask_rc, self.n, self.m))
+        p.update(transposed_backward_metadata(sw.mask_rc, self.n, self.m,
+                                              idx_packed=cs.idx_packed))
         return p
 
     def _matmul(self, p, x, backend):
         k = p["values"].shape[-1]
         return _compressed_matmul(x, p["values"], p["idx_packed"],
                                   p["rc_packed"], p.get("idxT_packed"),
-                                  p.get("rcT_packed"),
+                                  p.get("rcT_packed"), p.get("permT"),
                                   (self.n, self.m, k, backend))
 
     def to_inference(self, params):
-        # rc/idxT/rcT are pure backward metadata; the serving layout drops them.
+        # rc/idxT/rcT/permT are pure backward metadata; serving drops them.
         out = {k: v for k, v in params.items() if k not in self._BWD_ONLY}
         return ("compressed_inference", out)
 
@@ -504,7 +650,48 @@ class CompressedRepr(LinearRepr):
     def param_roles(cls):
         return {"values": "matrix", "idx_packed": "matrix",
                 "rc_packed": "matrix",
-                "idxT_packed": "matrix_t", "rcT_packed": "matrix_t"}
+                "idxT_packed": "matrix_t", "rcT_packed": "matrix_t",
+                "permT": "matrix_t"}
+
+
+@register_repr
+class CompressedQ8Repr(LinearRepr):
+    """Int8-quantized packed N:M form: frozen ``values_q`` + trainable
+    per-group absmax ``scales`` (sparse+quantized pretraining/fine-tuning à la
+    high-sparsity quantized Llama). Dequant happens inside the kernels."""
+
+    name = "compressed_q8"
+    inference_name = "compressed_q8_inference"
+
+    _BWD_ONLY = CompressedRepr._BWD_ONLY
+
+    def _init_core(self, key, d_out, d_in, dtype):
+        # Same draw as the bf16 compressed form, then quantize the payload —
+        # delegation (not a copied init) keeps the two representations
+        # draw-identical from one key, which the parity grid's analytic
+        # error-bound check relies on.
+        p = CompressedRepr._init_core(self, key, d_out, d_in, dtype)
+        p["values_q"], p["scales"] = quantize_q8(p.pop("values"), self.n)
+        return p
+
+    def _matmul(self, p, x, backend):
+        k = p["values_q"].shape[-1]
+        return _compressed_q8_matmul(x, p["values_q"], p["scales"],
+                                     p["idx_packed"], p["rc_packed"],
+                                     p.get("idxT_packed"), p.get("rcT_packed"),
+                                     p.get("permT"),
+                                     (self.n, self.m, k, backend))
+
+    def to_inference(self, params):
+        out = {k: v for k, v in params.items() if k not in self._BWD_ONLY}
+        return ("compressed_q8_inference", out)
+
+    @classmethod
+    def param_roles(cls):
+        return {"values_q": "matrix", "scales": "matrix",
+                "idx_packed": "matrix", "rc_packed": "matrix",
+                "idxT_packed": "matrix_t", "rcT_packed": "matrix_t",
+                "permT": "matrix_t"}
 
 
 @register_repr
@@ -574,3 +761,62 @@ class CompressedInferenceRepr(LinearRepr):
     @classmethod
     def param_roles(cls):
         return {"values": "matrix", "idx_packed": "matrix"}
+
+
+@register_repr
+class CompressedQ8InferenceRepr(LinearRepr):
+    """Frozen int8 serving layout: ``values_q`` + per-group ``scales`` +
+    packed indices (+ optional fused LoRA). Produced by
+    ``CompressedQ8Repr.to_inference`` or by
+    ``freeze_for_inference(..., quantize="q8")`` from any bf16 sparse
+    training representation. The int8 payload streams into the kernels and
+    dequantizes in VMEM — never materialized as a dense bf16 matrix."""
+
+    name = "compressed_q8_inference"
+    inference_name = "compressed_q8_inference"
+    trainable = False
+
+    def init(self, key, d_out, d_in, *, dtype=jnp.bfloat16, use_bias=False,
+             adapter_rank=0):
+        raise ValueError(
+            "compressed_q8_inference is a frozen serving layout; produce it "
+            "via freeze_for_inference(quantize='q8')/to_inference(), not "
+            "init()")
+
+    def apply(self, params, x, *, backend: str = "auto"):
+        k = params["values_q"].shape[-1]
+        idx = unpack_indices(params["idx_packed"], self.m, k)
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        if "lora" in params:
+            y = ops.sparse_lora_matmul(x2, params["values_q"], idx,
+                                       params["lora"]["l"], params["lora"]["r"],
+                                       scales=params["scales"],
+                                       n=self.n, m=self.m, backend=backend)
+        else:
+            y = ops.nm_spmm(x2, params["values_q"], idx,
+                            scales=params["scales"],
+                            n=self.n, m=self.m, backend=backend)
+        y = y.reshape(*lead, -1)
+        if "b" in params:
+            y = y + params["b"]
+        return y
+
+    def to_inference(self, params):
+        return ("compressed_q8_inference", params)
+
+    @classmethod
+    def param_roles(cls):
+        return {"values_q": "matrix", "scales": "matrix",
+                "idx_packed": "matrix"}
+
+
+def quantize_inference_q8(params: Params, n: int) -> Params:
+    """Absmax-quantize a ``compressed_inference`` params dict to the
+    ``compressed_q8_inference`` layout (freeze-time quantization). Bias and
+    LoRA leaves ride along untouched."""
+    values_q, scales = quantize_q8(params["values"], n)
+    out = {k: v for k, v in params.items() if k != "values"}
+    out["values_q"] = values_q
+    out["scales"] = scales
+    return out

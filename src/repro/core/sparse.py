@@ -34,6 +34,8 @@ __all__ = [
     "index_bits", "pack_indices", "unpack_indices",
     "pack_bools", "unpack_bools", "decompress_select", "group_compress_select",
     "compress_support", "select_on_support", "supports_packed_support",
+    "transposed_value_permutation",
+    "q8_group_size", "quantize_q8", "dequantize_q8",
 ]
 
 
@@ -237,6 +239,100 @@ def select_on_support(dense: jax.Array, idx: jax.Array, keep: jax.Array,
     """
     vals = group_compress_select(dense, idx, n, m)
     return jnp.where(keep, vals, 0).astype(dense.dtype)
+
+
+def transposed_value_permutation(idx_packed: jax.Array, idxT_packed: jax.Array,
+                                 rcT_packed: jax.Array, d_out: int, d_in: int,
+                                 n: int, m: int) -> jax.Array:
+    """Cached compressed → transposed-compressed value permutation.
+
+    For each slot of the transposed double-pruned support (``idxT``/``rcT``,
+    the W^{R,C,T} layout) return the *flat* index of the same weight inside
+    the forward compressed ``values`` array (``idx_packed`` layout, size
+    d_out·k). Every real transposed slot is an RC survivor, hence an R
+    survivor, hence present in the forward layout — so the per-step BWD-2
+    value extraction becomes one O(kT) gather (``values.reshape(-1)[perm]``,
+    zeroed on the ``rcT`` pad bitmap) instead of materializing the dense
+    ``w_rc`` just to re-select kT values from its transpose.
+
+    Built once per mask update (O(d_out·d_in) here is init-time, like
+    ``compress`` itself). Pad slots map to 0 and must be zeroed via ``rcT``.
+    """
+    k = d_in * n // m
+    kT = d_out * n // m
+    idx = unpack_indices(idx_packed, m, k).astype(jnp.int32)       # (d_out, k)
+    g = jnp.arange(k, dtype=jnp.int32) // n
+    cols = g[None, :] * m + idx                                    # dense column per slot
+    rows = jnp.arange(d_out, dtype=jnp.int32)[:, None]
+    flat = rows * k + jnp.arange(k, dtype=jnp.int32)[None, :]
+    # Dense position → forward flat slot. ``min`` keeps the first (real) slot
+    # if a zero-padded slot aliases in-group offset 0 (pads sort after
+    # survivors in the compress layout, so reals always have the smaller flat
+    # index within a row).
+    big = jnp.int32(d_out * k)
+    slot_of = jnp.full((d_out, d_in), big, jnp.int32).at[rows, cols].min(flat)
+    idxT = unpack_indices(idxT_packed, m, kT).astype(jnp.int32)    # (d_in, kT)
+    keepT = unpack_bools(rcT_packed, kT)
+    gT = jnp.arange(kT, dtype=jnp.int32) // n
+    rowsT = gT[None, :] * m + idxT                                 # dense row per T slot
+    perm = jnp.take_along_axis(slot_of.T, rowsT, axis=1)
+    return jnp.where(keepT & (perm < big), perm, 0).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Int8 value quantization of the compressed layout (the ``compressed_q8``
+# representations). Scales are absmax-derived per *quantization group* of
+# contiguous kept values along the compressed k axis — groups larger than one
+# N:M group so the scale bytes amortize (f32 scale / 64 kept values ≈ 0.5
+# bit/element); groups never straddle an N:M group (``q_group % n == 0``).
+# ---------------------------------------------------------------------------
+
+
+Q8_GROUP_TARGET = 64
+
+
+def q8_group_size(k: int, n: int, target: int = Q8_GROUP_TARGET) -> int:
+    """Largest divisor of ``k`` that is ≤ ``target`` and a multiple of ``n``
+    (so a scale group covers whole N:M groups). ``k = groups·n`` so ``n``
+    itself always qualifies."""
+    c = min(target, k)
+    while c > n:
+        if k % c == 0 and c % n == 0:
+            return c
+        c -= 1
+    assert k % n == 0, (k, n)
+    return n
+
+
+def quantize_q8(values: jax.Array, n: int, group: int | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Absmax int8 quantization of compressed N:M values.
+
+    ``values``: (..., k) kept values. Returns ``(values_q int8, scales f32)``
+    with ``scales`` of shape (..., k // group). Round-trip idempotent: the
+    absmax element of every group quantizes to ±127 exactly, so quantizing a
+    dequantized payload reproduces it bit for bit (all-zero groups use scale
+    1.0 and stay zero).
+    """
+    *lead, k = values.shape
+    if group is None:
+        group = q8_group_size(k, n)
+    assert k % group == 0 and group % n == 0, (k, group, n)
+    v = values.astype(jnp.float32).reshape(*lead, k // group, group)
+    absmax = jnp.max(jnp.abs(v), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(*lead, k), scale[..., 0].astype(jnp.float32)
+
+
+def dequantize_q8(values_q: jax.Array, scales: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_q8` → f32 values, compressed layout.
+
+    O(nnz): expands the int8 *compressed* payload only — never a dense
+    (d_out, d_in) matrix (that expansion happens inside the kernels)."""
+    k = values_q.shape[-1]
+    group = k // scales.shape[-1]
+    return values_q.astype(jnp.float32) * jnp.repeat(scales, group, axis=-1)
 
 
 def compressed_nbytes(c: CompressedNM, *, analytic_index_bits: int | None = None) -> dict:

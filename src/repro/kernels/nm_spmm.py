@@ -29,7 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["nm_spmm_pallas", "decompress_block", "index_pack_ratio"]
+__all__ = ["nm_spmm_pallas", "decompress_block", "dequant_block",
+           "index_pack_ratio"]
 
 
 def index_pack_ratio(m: int) -> int:
@@ -66,8 +67,24 @@ def decompress_block(vals: jax.Array, idx: jax.Array, n: int, m: int) -> jax.Arr
     return dense.reshape(rows, g * m)
 
 
-def _nm_spmm_kernel(x_ref, val_ref, idx_ref, o_ref, acc_ref, *, n: int, m: int,
-                    nk: int, packed: bool = False):
+def dequant_block(vals_q: jax.Array, scl: jax.Array) -> jax.Array:
+    """Expand an int8 block ``(rows, kb)`` to f32 with per-group scales
+    ``(rows, kb // q_group)``: pure VPU work (cast + broadcast multiply) on
+    the streamed bytes — the value operand moves 8 bits per kept element
+    HBM→VMEM instead of 16, and the dense bf16 matrix never exists."""
+    rows, kb = vals_q.shape
+    nsc = scl.shape[-1]
+    q_group = kb // nsc
+    s = jnp.broadcast_to(scl[:, :, None], (rows, nsc, q_group)).reshape(rows, kb)
+    return vals_q.astype(jnp.float32) * s
+
+
+def _nm_spmm_kernel(x_ref, val_ref, idx_ref, *rest, n: int, m: int,
+                    nk: int, packed: bool = False, quantized: bool = False):
+    if quantized:
+        scl_ref, o_ref, acc_ref = rest
+    else:
+        o_ref, acc_ref = rest
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -75,9 +92,14 @@ def _nm_spmm_kernel(x_ref, val_ref, idx_ref, o_ref, acc_ref, *, n: int, m: int,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     idx = unpack_idx_block(idx_ref[...], m) if packed else idx_ref[...]
-    w_dense = decompress_block(val_ref[...], idx, n, m)  # (bo, bk)
+    vals = val_ref[...]
+    xb = x_ref[...]
+    if quantized:
+        vals = dequant_block(vals, scl_ref[...])
+        xb = xb.astype(jnp.float32)   # f32 dot against the dequantized tile
+    w_dense = decompress_block(vals, idx, n, m)  # (bo, bk)
     acc_ref[...] += jax.lax.dot_general(
-        x_ref[...], w_dense,
+        xb, w_dense,
         dimension_numbers=(((1,), (1,)), ((), ())),  # x @ w_dense.T
         preferred_element_type=jnp.float32,
     )
@@ -94,8 +116,9 @@ def _nm_spmm_kernel(x_ref, val_ref, idx_ref, o_ref, acc_ref, *, n: int, m: int,
 )
 def nm_spmm_pallas(
     x: jax.Array,           # (B, d_in)
-    values: jax.Array,      # (d_out, d_in * n // m)
+    values: jax.Array,      # (d_out, d_in * n // m) — int8 when scales given
     indices: jax.Array,     # (d_out, d_in*n//m) uint8 — or packed (see below)
+    scales: jax.Array | None = None,   # (d_out, k // q_group) f32
     *,
     n: int,
     m: int,
@@ -113,10 +136,19 @@ def nm_spmm_pallas(
     params straight into the kernel with no XLA-level unpack and at the
     packed byte width. Per-block packed columns must divide evenly
     (``block_k·N/M %% (8/bits) == 0``).
+
+    ``scales`` given: ``values`` is the int8 ``values_q`` payload quantized
+    per contiguous group of ``q_group = k/scales.shape[1]`` kept values
+    (``core.sparse.quantize_q8``); it is dequantized *in-kernel* right before
+    the dense-tile expansion — the weight operand streams at 8 bits/element
+    and a dense bf16 matrix is never materialized. Scale groups must not
+    straddle blocks (``block_k·N/M %% q_group == 0``).
     """
     B, d_in = x.shape
     d_out, k_comp = values.shape
     assert k_comp * m == d_in * n, (x.shape, values.shape, n, m)
+    assert not (packed and scales is not None), \
+        "packed indices + quantized values unsupported"
     block_b = min(block_b, B)
     block_o = min(block_o, d_out)
     block_k = min(block_k, d_in)
@@ -131,16 +163,28 @@ def nm_spmm_pallas(
         bk_idx = bk_comp // per
     nk = d_in // block_k
     grid = (B // block_b, d_out // block_o, nk)
+    in_specs = [
+        pl.BlockSpec((block_b, block_k), lambda i, j, k: (i, k)),
+        pl.BlockSpec((block_o, bk_comp), lambda i, j, k: (j, k)),
+        pl.BlockSpec((block_o, bk_idx), lambda i, j, k: (j, k)),
+    ]
+    operands = [x, values, indices]
+    quantized = scales is not None
+    if quantized:
+        assert values.dtype == jnp.int8, values.dtype
+        assert k_comp % scales.shape[-1] == 0, (k_comp, scales.shape)
+        q_group = k_comp // scales.shape[-1]
+        assert bk_comp % q_group == 0, (bk_comp, q_group)
+        in_specs.append(
+            pl.BlockSpec((block_o, bk_comp // q_group), lambda i, j, k: (j, k)))
+        operands.append(scales)
     return pl.pallas_call(
-        functools.partial(_nm_spmm_kernel, n=n, m=m, nk=nk, packed=packed),
+        functools.partial(_nm_spmm_kernel, n=n, m=m, nk=nk, packed=packed,
+                          quantized=quantized),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, block_k), lambda i, j, k: (i, k)),
-            pl.BlockSpec((block_o, bk_comp), lambda i, j, k: (j, k)),
-            pl.BlockSpec((block_o, bk_idx), lambda i, j, k: (j, k)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((B, d_out), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.float32)],
         interpret=interpret,
-    )(x, values, indices)
+    )(*operands)

@@ -55,26 +55,69 @@ def _fit_block(dim: int, target: int, multiple: int = 1) -> int:
     return min(dim, max(multiple, 1))
 
 
-def _fit_blocks(block_kw: dict, b: int, d_out: int, d_in: int, m: int) -> dict:
+def _fit_blocks(block_kw: dict, b: int, d_out: int, d_in: int, m: int,
+                k_multiple: int | None = None) -> dict:
     kw = dict(block_kw)
     kw.setdefault("block_b", _fit_block(b, 128))
     kw.setdefault("block_o", _fit_block(d_out, 128))
-    kw.setdefault("block_k", _fit_block(d_in, 512, m))
+    kw.setdefault("block_k", _fit_block(d_in, 512, k_multiple or m))
     return kw
 
 
+def _q8_k_multiple(values, scales, n: int, m: int) -> int | None:
+    """block_k constraint that keeps q8 scale groups intra-block:
+    ``bk_comp % q_group == 0`` ⇔ ``block_k % (q_group·M/N) == 0``. Always
+    satisfiable: ``q_group | k`` and ``n | q_group`` imply ``q_group·M/N``
+    divides d_in (and is a multiple of M), so the auto-fit never has to fall
+    back to out-of-kernel dequant — the int8 payload streams on every arch's
+    odd d_ff (11008, 29568, …), not just power-of-two shapes."""
+    if scales is None:
+        return None
+    q_group = values.shape[-1] // scales.shape[-1]
+    return q_group * m // n
+
+
+def _q8_kernel_operands(values, scales, block_k, n, m, like_dtype):
+    """Resolve the (values, scales) pair the kernel should stream.
+
+    Scale groups must not straddle blocks (``bk_comp % q_group == 0``, the
+    same condition the kernels assert); when the fitted ``block_k`` can't
+    satisfy it, dequantize the *compressed* int8 payload outside the kernel
+    — O(nnz), still never a dense (d_out, d_in) matrix — and stream it as a
+    plain float operand (``scales=None``)."""
+    if scales is None:
+        return values, None
+    q_group = values.shape[-1] // scales.shape[-1]
+    if (block_k * n // m) % q_group:
+        from repro.core.sparse import dequantize_q8  # deferred: no cycle
+        return dequantize_q8(values, scales).astype(like_dtype), None
+    return values, scales
+
+
 def nm_spmm(x, values, indices, *, n: int, m: int, backend: str = "auto",
-            **block_kw) -> jax.Array:
-    """``X @ W_compressed^T`` with batch-dim flattening. x: (..., d_in)."""
+            scales=None, **block_kw) -> jax.Array:
+    """``X @ W_compressed^T`` with batch-dim flattening. x: (..., d_in).
+
+    ``scales`` given ⇒ ``values`` is the int8 ``values_q`` payload
+    (``core.sparse.quantize_q8``): the kernel path streams int8 + scales and
+    dequantizes in VMEM. The auto-fitted ``block_k`` is constrained so scale
+    groups never straddle blocks; only an *explicitly passed* straddling
+    ``block_k`` falls back to dequantizing the compressed payload outside
+    the kernel. The XLA path uses the dequant reference.
+    """
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     b = resolve_backend(backend)
     if b in ("pallas", "pallas_interpret"):
-        block_kw = _fit_blocks(block_kw, x2.shape[0], values.shape[0], x2.shape[1], m)
-        y = nm_spmm_pallas(x2, values, indices, n=n, m=m,
+        block_kw = _fit_blocks(block_kw, x2.shape[0], values.shape[0],
+                               x2.shape[1], m,
+                               k_multiple=_q8_k_multiple(values, scales, n, m))
+        values, scales = _q8_kernel_operands(values, scales,
+                                             block_kw["block_k"], n, m, x2.dtype)
+        y = nm_spmm_pallas(x2, values, indices, scales, n=n, m=m,
                            interpret=(b == "pallas_interpret"), **block_kw)
     else:
-        y = ref.nm_spmm_ref(x2, values, indices, n=n, m=m)
+        y = ref.nm_spmm_ref(x2, values, indices, n=n, m=m, scales=scales)
     return y.reshape(*lead, -1)
 
 
@@ -104,17 +147,24 @@ def nm_spmm_packed(x, values, idx_packed, *, n: int, m: int,
 
 
 def sparse_lora_matmul(x, values, indices, l, r, *, n: int, m: int,
-                       backend: str = "auto", **block_kw) -> jax.Array:
-    """Fused ``X @ W_s^T + (X R^T) L^T``. x: (..., d_in)."""
+                       backend: str = "auto", scales=None,
+                       **block_kw) -> jax.Array:
+    """Fused ``X @ W_s^T + (X R^T) L^T``. x: (..., d_in). ``scales`` as in
+    :func:`nm_spmm` (int8 sparse payload, dequant-in-kernel)."""
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     b = resolve_backend(backend)
     if b in ("pallas", "pallas_interpret"):
-        block_kw = _fit_blocks(block_kw, x2.shape[0], values.shape[0], x2.shape[1], m)
-        y = sparse_lora_pallas(x2, values, indices, l, r, n=n, m=m,
+        block_kw = _fit_blocks(block_kw, x2.shape[0], values.shape[0],
+                               x2.shape[1], m,
+                               k_multiple=_q8_k_multiple(values, scales, n, m))
+        values, scales = _q8_kernel_operands(values, scales,
+                                             block_kw["block_k"], n, m, x2.dtype)
+        y = sparse_lora_pallas(x2, values, indices, l, r, scales, n=n, m=m,
                                interpret=(b == "pallas_interpret"), **block_kw)
     else:
-        y = ref.sparse_lora_ref(x2, values, indices, l, r, n=n, m=m)
+        y = ref.sparse_lora_ref(x2, values, indices, l, r, n=n, m=m,
+                                scales=scales)
     return y.reshape(*lead, -1)
 
 

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.masks import magnitude_nm_mask
-from repro.core.sparse import CompressedNM, compress, decompress
+from repro.core.sparse import CompressedNM, compress, decompress, dequantize_q8
 
 __all__ = ["nm_spmm_ref", "sparse_lora_ref", "nm_prune_ref", "flash_attention_ref"]
 
@@ -28,17 +28,29 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
-def nm_spmm_ref(x: jax.Array, values: jax.Array, indices: jax.Array, *, n: int, m: int) -> jax.Array:
-    """Decompress-then-dense-matmul oracle for ``nm_spmm_pallas``."""
+def nm_spmm_ref(x: jax.Array, values: jax.Array, indices: jax.Array, *, n: int,
+                m: int, scales: jax.Array | None = None) -> jax.Array:
+    """Decompress-then-dense-matmul oracle for ``nm_spmm_pallas``.
+
+    ``scales`` present ⇒ ``values`` is the int8 ``values_q`` payload: the
+    oracle dequantizes (f32), matmuls in f32 and casts back to ``x.dtype`` —
+    the exact semantics of the kernel's in-VMEM dequant + f32 accumulator.
+    """
     d_out, k_comp = values.shape
     d_in = k_comp * m // n
+    if scales is not None:
+        w = decompress(CompressedNM(dequantize_q8(values, scales), indices,
+                                    n, m, d_in))
+        return (x.astype(jnp.float32) @ w.T).astype(x.dtype)
     w = decompress(CompressedNM(values, indices, n, m, d_in))
     return x @ w.T
 
 
-def sparse_lora_ref(x, values, indices, l, r, *, n: int, m: int) -> jax.Array:
+def sparse_lora_ref(x, values, indices, l, r, *, n: int, m: int,
+                    scales: jax.Array | None = None) -> jax.Array:
     """Unfused oracle: sparse part + factored low-rank part."""
-    return nm_spmm_ref(x, values, indices, n=n, m=m) + (x @ r.T) @ l.T
+    sparse = nm_spmm_ref(x, values, indices, n=n, m=m, scales=scales)
+    return sparse + ((x @ r.T) @ l.T).astype(sparse.dtype)
 
 
 def nm_prune_ref(w: jax.Array, *, n: int, m: int):

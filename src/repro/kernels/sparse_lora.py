@@ -24,13 +24,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .nm_spmm import decompress_block
+from .nm_spmm import decompress_block, dequant_block
 
 __all__ = ["sparse_lora_pallas"]
 
 
-def _kernel(x_ref, val_ref, idx_ref, l_ref, r_ref, o_ref, acc_ref, xr_ref,
-            *, n: int, m: int, nk: int):
+def _kernel(x_ref, val_ref, idx_ref, l_ref, r_ref, *rest,
+            n: int, m: int, nk: int, quantized: bool = False):
+    if quantized:
+        scl_ref, o_ref, acc_ref, xr_ref = rest
+    else:
+        o_ref, acc_ref, xr_ref = rest
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -38,9 +42,14 @@ def _kernel(x_ref, val_ref, idx_ref, l_ref, r_ref, o_ref, acc_ref, xr_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
         xr_ref[...] = jnp.zeros_like(xr_ref)
 
-    w_dense = decompress_block(val_ref[...], idx_ref[...], n, m)  # (bo, bk)
+    vals = val_ref[...]
+    xb = x_ref[...]
+    if quantized:
+        vals = dequant_block(vals, scl_ref[...])   # int8 → f32 in VMEM
+        xb = xb.astype(jnp.float32)
+    w_dense = decompress_block(vals, idx_ref[...], n, m)  # (bo, bk)
     acc_ref[...] += jax.lax.dot_general(
-        x_ref[...], w_dense, (((1,), (1,)), ((), ())),
+        xb, w_dense, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)
     xr_ref[...] += jax.lax.dot_general(
         x_ref[...], r_ref[...], (((1,), (1,)), ((), ())),
@@ -60,10 +69,11 @@ def _kernel(x_ref, val_ref, idx_ref, l_ref, r_ref, o_ref, acc_ref, xr_ref,
 )
 def sparse_lora_pallas(
     x: jax.Array,        # (B, d_in)
-    values: jax.Array,   # (d_out, d_in*n//m)
+    values: jax.Array,   # (d_out, d_in*n//m) — int8 when scales given
     indices: jax.Array,  # (d_out, d_in*n//m) uint8
     l: jax.Array,        # (d_out, r)
     r: jax.Array,        # (r, d_in)
+    scales: jax.Array | None = None,   # (d_out, k // q_group) f32
     *,
     n: int,
     m: int,
@@ -72,6 +82,9 @@ def sparse_lora_pallas(
     block_k: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
+    """``scales`` given: int8 ``values_q`` payload dequantized in-kernel
+    (same layout/constraints as ``nm_spmm_pallas``); the LoRA accumulation is
+    unchanged — the q8 serving path keeps the single fused launch."""
     B, d_in = x.shape
     d_out, k_comp = values.shape
     rank = l.shape[1]
@@ -85,16 +98,27 @@ def sparse_lora_pallas(
     bk_comp = block_k * n // m
     nk = d_in // block_k
     grid = (B // block_b, d_out // block_o, nk)
+    in_specs = [
+        pl.BlockSpec((block_b, block_k), lambda i, j, k: (i, k)),
+        pl.BlockSpec((block_o, bk_comp), lambda i, j, k: (j, k)),
+        pl.BlockSpec((block_o, bk_comp), lambda i, j, k: (j, k)),
+        pl.BlockSpec((block_o, rank), lambda i, j, k: (j, 0)),
+        pl.BlockSpec((rank, block_k), lambda i, j, k: (0, k)),
+    ]
+    operands = [x, values, indices, l, r]
+    quantized = scales is not None
+    if quantized:
+        assert values.dtype == jnp.int8, values.dtype
+        assert k_comp % scales.shape[-1] == 0, (k_comp, scales.shape)
+        q_group = k_comp // scales.shape[-1]
+        assert bk_comp % q_group == 0, (bk_comp, q_group)
+        in_specs.append(
+            pl.BlockSpec((block_o, bk_comp // q_group), lambda i, j, k: (j, k)))
+        operands.append(scales)
     return pl.pallas_call(
-        functools.partial(_kernel, n=n, m=m, nk=nk),
+        functools.partial(_kernel, n=n, m=m, nk=nk, quantized=quantized),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, block_k), lambda i, j, k: (i, k)),
-            pl.BlockSpec((block_o, bk_comp), lambda i, j, k: (j, k)),
-            pl.BlockSpec((block_o, bk_comp), lambda i, j, k: (j, k)),
-            pl.BlockSpec((block_o, rank), lambda i, j, k: (j, 0)),
-            pl.BlockSpec((rank, block_k), lambda i, j, k: (0, k)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((B, d_out), x.dtype),
         scratch_shapes=[
@@ -102,4 +126,4 @@ def sparse_lora_pallas(
             pltpu.VMEM((block_b, rank), jnp.float32),
         ],
         interpret=interpret,
-    )(x, values, indices, l, r)
+    )(*operands)

@@ -26,6 +26,8 @@ def main() -> None:
                     help="kernels/ops.py dispatch for every linear")
     ap.add_argument("--no-freeze", action="store_true",
                     help="serve the training representation (reference path)")
+    ap.add_argument("--quantize", default=None, choices=["none", "q8"],
+                    help="freeze-time value quantization (default: config)")
     args = ap.parse_args()
 
     import dataclasses
@@ -50,11 +52,16 @@ def main() -> None:
         except (FileNotFoundError, KeyError) as e:
             print(f"[serve] no usable checkpoint ({e}); serving fresh init")
 
+    if args.no_freeze and args.quantize not in (None, "none"):
+        raise SystemExit("--quantize requires freezing (drop --no-freeze): "
+                         "quantization happens at freeze time")
     train_bytes = tree_nbytes(params)
     eng = ServeEngine(model, params, cache_len=args.cache_len,
-                      freeze=not args.no_freeze)
+                      freeze=not args.no_freeze, quantize=args.quantize)
     frozen_bytes = tree_nbytes(eng.params)
+    quant = "none" if args.no_freeze else (args.quantize or cfg.slope.quantize)
     print(f"[serve] backend={args.backend} frozen={not args.no_freeze} "
+          f"quantize={quant} "
           f"params {train_bytes / 1e6:.2f}MB -> {frozen_bytes / 1e6:.2f}MB "
           f"({frozen_bytes / max(train_bytes, 1):.2f}x)")
     rng = np.random.default_rng(0)

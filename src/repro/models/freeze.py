@@ -11,8 +11,9 @@ transposed-support params are all dropped). The conversion is structural:
   * the layer plan (``plan_layers``) says which segments are sparse (the
     first-layer-dense rule and the Table-6 mixed-N:M boundary included);
   * inside sparse segments, linears are recognised by their param signature
-    (``mask_r`` → dense_masked, ``values``+``rc_packed`` → compressed) and
-    converted via the representation registry's ``to_inference``;
+    (``mask_r`` → dense_masked, ``values``+``rc_packed`` → compressed,
+    ``values_q`` → compressed_q8 / its frozen form) and converted via the
+    representation registry's ``to_inference``;
   * SR-STE layers store a bare ``{"w"}`` like dense layers, so they are
     identified positionally: inside a sparse segment, under an attention /
     MLP subtree whose prune flag is on (the MoE router always stays dense),
@@ -35,7 +36,7 @@ from typing import Any, Callable
 import jax
 
 from repro.configs.base import ModelConfig, SlopeConfig
-from repro.core.repr import get_repr
+from repro.core.repr import get_repr, quantize_inference_q8
 
 __all__ = ["freeze_for_inference", "map_sparse_linears"]
 
@@ -46,18 +47,35 @@ _SUBTREE = {"attn": "attn", "xattn": "attn", "mixer": "attn", "mlp": "mlp"}
 LinearFn = Callable[[dict, str, int, int], dict]
 
 
-def freeze_for_inference(model, params: dict) -> dict:
+def freeze_for_inference(model, params: dict, *,
+                         quantize: str | None = None) -> dict:
     """Convert a training params pytree to the inference representation.
 
     Returns a new pytree with the same top-level structure; only sparse
     linear layers change shape. The result is what ``ServeEngine`` consumes
     (and what ``make_linear.apply`` recognises as frozen).
+
+    ``quantize`` (default: ``model.cfg.slope.quantize``): ``"q8"`` absmax-
+    quantizes every bf16 sparse linear to the ``compressed_q8_inference``
+    layout at freeze time (int8 values + per-group scales, dequant-in-kernel
+    at serve). Layers whose *training* representation is already
+    ``compressed_q8`` (e.g. via ``repr_overrides``) freeze quantized either
+    way, so per-layer q8/bf16 mixes resolve consistently with the training
+    names. ``"none"`` leaves bf16 layers at ``compressed_inference``.
     """
     slope = model.cfg.slope
+    if quantize is None:
+        quantize = slope.quantize
+    if quantize not in ("none", "q8"):
+        raise ValueError(f"unknown quantize mode {quantize!r}; "
+                         "expected 'none' or 'q8'")
 
     def fn(node: dict, kind: str, n: int, m: int) -> dict:
         rep = get_repr(kind, n=n, m=m, srste_decay=slope.srste_decay)
-        return rep.to_inference(node)[1]
+        name, out = rep.to_inference(node)
+        if quantize == "q8" and name == "compressed_inference":
+            out = quantize_inference_q8(out, n)
+        return out
 
     return map_sparse_linears(model.cfg, params, fn)
 
@@ -108,6 +126,10 @@ def _walk(node: Any, slope: SlopeConfig, nm: dict, under: str | None,
         if n != m:
             if "mask_r" in node and "w" in node:
                 return _apply_linear(node, "dense_masked", n, m, fn)
+            if "values_q" in node and "idx_packed" in node:
+                kind = ("compressed_q8" if "rc_packed" in node
+                        else "compressed_q8_inference")
+                return _apply_linear(node, kind, n, m, fn)
             if "values" in node and "idx_packed" in node:
                 kind = ("compressed" if "rc_packed" in node
                         else "compressed_inference")
@@ -139,7 +161,7 @@ def _prunable(slope: SlopeConfig, under: str) -> bool:
 
 
 def _apply_linear(node: dict, kind: str, n: int, m: int, fn: LinearFn):
-    ref_leaf = node["w"] if "w" in node else node["values"]
+    ref_leaf = node.get("w", node.get("values", node.get("values_q")))
     convert = lambda p: fn(p, kind, n, m)
     for _ in range(ref_leaf.ndim - 2):   # scan / expert stacking
         convert = jax.vmap(convert)

@@ -46,8 +46,11 @@ def make_linear(cfg: SlopeConfig, d_out: int, d_in: int, *, sparse: bool,
     ``apply(params, x)`` dispatches on the *params structure*, so one closure
     serves three pytrees: phase-1 (no adapters), phase-2 (``params["lora"]``
     present), and frozen inference layouts from ``freeze_for_inference``
-    (compressed values without the ``rc``/``idxT``/``rcT`` backward metadata
-    — routed to the fused sparse+LoRA serving representation).
+    (compressed values without the ``rc``/``idxT``/``rcT``/``permT`` backward
+    metadata — routed to the fused sparse+LoRA serving representation; an
+    int8 ``values_q`` payload routes to the quantized serving representation,
+    so ``freeze_for_inference(quantize="q8")`` pytrees serve through the same
+    closures).
     """
     n, m = nm if nm is not None else (cfg.n, cfg.m)
     kind = cfg.repr_for(name) if (sparse and cfg.enabled) else "dense"
@@ -57,14 +60,18 @@ def make_linear(cfg: SlopeConfig, d_out: int, d_in: int, *, sparse: bool,
     rep = get_repr(kind, n=n, m=m, srste_decay=cfg.srste_decay)
     frozen_rep = (get_repr(rep.inference_name, n=n, m=m)
                   if rep.inference_name != kind else rep)
+    q8_rep = get_repr("compressed_q8_inference", n=n, m=m)
 
     def init(key, *, adapter_rank: int = 0) -> Params:
         return rep.init(key, d_out, d_in, dtype=dtype, use_bias=use_bias,
                         adapter_rank=adapter_rank)
 
     def apply(p: Params, x: jax.Array) -> jax.Array:
-        if "values" in p and "rc_packed" not in p:
-            return frozen_rep.apply(p, x, backend=backend)
+        if "rc_packed" not in p:
+            if "values_q" in p:
+                return q8_rep.apply(p, x, backend=backend)
+            if "values" in p:
+                return frozen_rep.apply(p, x, backend=backend)
         return rep.apply(p, x, backend=backend)
 
     return init, apply

@@ -41,8 +41,10 @@ __all__ = ["update_masks", "refresh_backward_metadata"]
 
 def _rc_support_dense(node: dict, n: int, m: int):
     """Dense (d_out, d_in) bool support of the double-pruned copy of a
-    *compressed* layer, reconstructed from its packed rc bitmap."""
-    k = node["values"].shape[-1]
+    *compressed* (or compressed_q8) layer, reconstructed from its packed rc
+    bitmap."""
+    payload = node["values"] if "values" in node else node["values_q"]
+    k = payload.shape[-1]
     idx = unpack_indices(node["idx_packed"], m, k)
     rc = unpack_bools(node["rc_packed"], k)
     return decompress_select(rc.astype(jnp.float32), idx, n, m) > 0.5
@@ -73,12 +75,15 @@ def refresh_backward_metadata(cfg_model, params: dict) -> dict:
     def fn(node: dict, kind: str, n: int, m: int) -> dict:
         # No "idxT_packed in node" guard: a checkpoint predating the cache
         # *gains* it here (transposed_backward_metadata returns {} when the
-        # geometry can't pack, so this never invents bad leaves).
+        # geometry can't pack, so this never invents bad leaves). Packed
+        # representations also pass their forward layout so the O(kT)
+        # ``permT`` value permutation is (re)derived alongside idxT/rcT.
         if kind == "dense_masked":
             return dict(node, **transposed_backward_metadata(node["mask_rc"], n, m))
-        if kind == "compressed":
+        if kind in ("compressed", "compressed_q8"):
             support = _rc_support_dense(node, n, m)
-            return dict(node, **transposed_backward_metadata(support, n, m))
+            return dict(node, **transposed_backward_metadata(
+                support, n, m, idx_packed=node["idx_packed"]))
         return node
 
     return map_sparse_linears(cfg_model, params, fn)

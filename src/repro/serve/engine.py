@@ -33,7 +33,13 @@ class ServeEngine:
     representation at construction (``models.freeze.freeze_for_inference``):
     dense_masked/srste layers are compressed, ``rc`` backward metadata is
     dropped, and phase-2 adapters move to the fused sparse+LoRA layout. Pass
-    ``freeze=False`` to serve the training pytree as-is (reference path)."""
+    ``freeze=False`` to serve the training pytree as-is (reference path).
+
+    ``quantize="q8"`` additionally absmax-quantizes every bf16 sparse linear
+    to int8 values + per-group scales at freeze time (dequant-in-kernel; the
+    weight payload drops to ~0.33× of dense bf16). Default ``None`` follows
+    ``model.cfg.slope.quantize``; layers trained as ``compressed_q8`` serve
+    quantized regardless."""
 
     model: Model
     params: dict
@@ -41,12 +47,20 @@ class ServeEngine:
     prefill_chunk: int = 256
     eos: int = 1
     freeze: bool = True
+    quantize: str | None = None
 
     def __post_init__(self):
         self.prefill_chunk = min(self.prefill_chunk, self.cache_len)
         if self.freeze:
             from repro.models.freeze import freeze_for_inference
-            self.params = freeze_for_inference(self.model, self.params)
+            self.params = freeze_for_inference(self.model, self.params,
+                                               quantize=self.quantize)
+        elif self.quantize not in (None, "none"):
+            # Quantization happens at freeze time; silently serving bf16
+            # while the caller asked for q8 would corrupt benchmarks.
+            raise ValueError(
+                f"quantize={self.quantize!r} requires freeze=True "
+                "(freeze-time quantization)")
         self._decode = jax.jit(self.model.decode_step)
 
     def _prefill(self, tokens: np.ndarray, lengths: np.ndarray, enc_out=None):

@@ -17,12 +17,16 @@ Rules are path-regex + shape driven; any dim not divisible by its axis size
 degrades to replication (e.g. whisper's 51865 vocab). Which leaf names count
 as "matrix-like" comes from the linear-representation registry
 (``core.repr.matrix_param_names``): every representation's matrix leaves
-(w / masks / values / idx_packed / rc_packed) inherit the sharding of the
-dense weight they replace — this is what shrinks the FSDP all-gather bytes
-by ~N/M, and it means a newly registered representation shards correctly
+(w / masks / values / idx_packed / rc_packed, and the q8 family's
+``values_q``/``scales`` — the per-group quantization scales shard *with*
+the int8 weight payload they rescale) inherit the sharding of the dense
+weight they replace — this is what shrinks the FSDP all-gather bytes by
+~N/M, and it means a newly registered representation shards correctly
 without touching this module. ``matrix_t`` leaves (the cached ``idxT``/
-``rcT`` backward metadata, stored in the W^T layout) get the same spec with
-its matrix tail swapped, so the cache shards with its weight.
+``rcT``/``permT`` backward metadata, stored in the W^T layout) get the same
+spec with its matrix tail swapped, so the cache shards with its weight.
+Narrow packed/scale tails that don't divide the axis degrade to replication
+on that dim only (``_guard``).
 """
 from __future__ import annotations
 

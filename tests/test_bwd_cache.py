@@ -37,7 +37,7 @@ def _layer(kind, backend="pallas_interpret", overrides=()):
 
 def _strip_cache(p):
     return {k: v for k, v in p.items()
-            if k not in ("idxT_packed", "rcT_packed")}
+            if k not in ("idxT_packed", "rcT_packed", "permT")}
 
 
 # ---------------------------------------------------------------------------
@@ -101,6 +101,66 @@ def test_cache_survives_jit_and_matches_support():
     idxT, rcT = compress_support(p["mask_rc"].T, 2, 4)
     np.testing.assert_array_equal(np.asarray(p["idxT_packed"]), np.asarray(idxT))
     np.testing.assert_array_equal(np.asarray(p["rcT_packed"]), np.asarray(rcT))
+
+
+# ---------------------------------------------------------------------------
+# O(kT) transposed prep: the cached permT value permutation replaces the
+# dense w_rc materialization in the packed representations' BWD-2.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+@pytest.mark.parametrize("kind", ["compressed", "compressed_q8"])
+def test_permT_gather_matches_dense_extraction_bitwise(kind, backend):
+    """Grads via the O(kT) permutation gather == grads via the (kept) dense
+    w_rc extraction path, bit for bit — the permT cache is a pure-speed
+    change."""
+    init, apply = _layer(kind, backend)
+    p = init(jax.random.PRNGKey(0), adapter_rank=4)
+    assert "permT" in p, sorted(p)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, D_IN))
+
+    def grads(pp):
+        gp = jax.grad(lambda q: jnp.sum(apply(q, x) ** 2), allow_int=True)(pp)
+        gx = jax.grad(lambda xx: jnp.sum(apply(pp, xx) ** 2))(x)
+        return gp, gx
+
+    p_noperm = {k: v for k, v in p.items() if k != "permT"}
+    g_perm, gx_perm = grads(p)
+    g_dense, gx_dense = grads(p_noperm)
+    np.testing.assert_array_equal(np.asarray(gx_perm), np.asarray(gx_dense))
+    for leaf in ("values", "scales"):
+        if leaf in g_perm:
+            np.testing.assert_array_equal(np.asarray(g_perm[leaf]),
+                                          np.asarray(g_dense[leaf]),
+                                          err_msg=leaf)
+
+
+def test_no_dense_wrc_materialization_with_permT(monkeypatch):
+    """With permT cached, the packed BWD-2 never expands a dense w_rc:
+    ``decompress_select`` (the only dense expansion in core.repr) must not
+    run during a kernel-path fwd+bwd."""
+    calls = []
+    real = repr_mod.decompress_select
+
+    def spy(values, idx, n, m):
+        calls.append(tuple(values.shape))
+        return real(values, idx, n, m)
+
+    monkeypatch.setattr(repr_mod, "decompress_select", spy)
+    for kind in ("compressed", "compressed_q8"):
+        init, apply = _layer(kind)
+        p = init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, D_IN))
+        calls.clear()
+        jax.grad(lambda q: jnp.sum(apply(q, x) ** 2), allow_int=True)(p)
+        jax.grad(lambda xx: jnp.sum(apply(p, xx) ** 2))(x)
+        assert not calls, (kind, calls)
+        # ... and stripping permT re-enables the dense-extraction fallback
+        calls.clear()
+        p_noperm = {k: v for k, v in p.items() if k != "permT"}
+        jax.grad(lambda q: jnp.sum(apply(q, x) ** 2), allow_int=True)(p_noperm)
+        assert calls, f"{kind}: dense fallback did not run without permT"
 
 
 # ---------------------------------------------------------------------------
@@ -237,7 +297,7 @@ def test_repr_overrides_mixed_model_trains_freezes_serves():
     frozen_leaves = [jax.tree_util.keystr(p) for p, _ in
                      jax.tree_util.tree_leaves_with_path(eng_f.params)]
     assert not any("rc_packed" in s or "idxT_packed" in s or "rcT_packed" in s
-                   for s in frozen_leaves)
+                   or "permT" in s for s in frozen_leaves)
     prompts = [[5, 6, 7], [9, 10]]
     assert eng_f.generate(prompts, 6) == eng_t.generate(prompts, 6)
 

@@ -1,10 +1,11 @@
-"""Representation registry: backend parity, freeze round-trip, registry API.
+"""Representation registry: model-level parity, freeze round-trip, registry API.
 
-The core guarantee of the pluggable linear-representation API: for every
-training representation, forward AND backward (dx, dw/dvalues) agree between
-the XLA reference and the Pallas kernels (interpret mode on CPU), against
-the dense-reference math of each form; and ``freeze_for_inference`` maps
-training pytrees onto serving layouts that produce the same outputs.
+Layer-level repr × backend forward/backward parity lives in
+``tests/test_parity_grid.py`` now — a property-based grid over *every*
+registered representation and backend (this file used to hand-enumerate
+those cases). What stays here: whole-transformer backend parity, the
+``freeze_for_inference`` round trips, and the registry/error-path API
+guarantees.
 """
 import dataclasses
 
@@ -15,14 +16,12 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.configs.base import SlopeConfig
-from repro.core.masks import magnitude_nm_mask
 from repro.core.repr import (
     available_reprs,
     get_repr,
     matrix_param_names,
     tree_nbytes,
 )
-from repro.core.sparse import decompress_select, unpack_indices
 from repro.models import build_model
 from repro.models.freeze import freeze_for_inference
 from repro.models.layers import make_linear
@@ -36,79 +35,6 @@ D_OUT, D_IN, B = 32, 64, 8
 def _layer(kind, backend, n=2, m=4):
     cfg = SlopeConfig(representation=kind, n=n, m=m, backend=backend)
     return make_linear(cfg, D_OUT, D_IN, sparse=True, dtype=jnp.float32)
-
-
-def _grads(apply, p, x):
-    def loss_p(pp):
-        return jnp.sum(apply(pp, x) ** 2)
-
-    def loss_x(xx):
-        return jnp.sum(apply(p, xx) ** 2)
-
-    gp = jax.grad(loss_p, allow_int=True)(p)
-    gx = jax.grad(loss_x)(x)
-    floats = {k: v for k, v in gp.items()
-              if hasattr(v, "dtype") and jnp.issubdtype(v.dtype, jnp.floating)}
-    return floats, gx
-
-
-def _dense_reference(kind, p, x, n=2, m=4):
-    """The representation's semantics spelled out as plain dense math."""
-    if kind == "dense_masked":
-        return x @ (p["w"] * p["mask_r"]).T
-    if kind == "compressed":
-        k = p["values"].shape[-1]
-        idx = unpack_indices(p["idx_packed"], m, k)
-        return x @ decompress_select(p["values"], idx, n, m).T
-    if kind == "srste":
-        mask = magnitude_nm_mask(p["w"], n, m, axis=1)
-        return x @ jnp.where(mask, p["w"], 0.0).T
-    raise AssertionError(kind)
-
-
-# ---------------------------------------------------------------------------
-# Layer-level parity: representation × backend vs the dense reference,
-# forward and backward.
-# ---------------------------------------------------------------------------
-
-
-@pytest.mark.parametrize("backend", BACKENDS)
-@pytest.mark.parametrize("kind", KINDS)
-@pytest.mark.parametrize("n,m", [(2, 4), (1, 2)])
-def test_forward_matches_dense_reference(kind, backend, n, m):
-    init, apply = _layer(kind, backend, n, m)
-    p = init(jax.random.PRNGKey(0))
-    x = jax.random.normal(jax.random.PRNGKey(1), (B, D_IN))
-    y = apply(p, x)
-    y_ref = _dense_reference(kind, p, x, n, m)
-    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
-                               rtol=1e-5, atol=1e-5)
-
-
-@pytest.mark.parametrize("kind", KINDS)
-@pytest.mark.parametrize("n,m", [(2, 4), (1, 2)])
-def test_backward_backend_parity(kind, n, m):
-    """dx and dw/dvalues of the pallas_interpret path == the XLA path.
-
-    Init is backend-independent, so the same params feed both closures; this
-    is exactly the double-pruned backward (Eqs. 5-6) running through the
-    transposed-compressed kernel copy vs the XLA reference.
-    """
-    _, apply_x = _layer(kind, "xla", n, m)
-    init, apply_i = _layer(kind, "pallas_interpret", n, m)
-    p = init(jax.random.PRNGKey(2), adapter_rank=4)
-    x = jax.random.normal(jax.random.PRNGKey(3), (B, D_IN))
-
-    gp_x, gx_x = _grads(apply_x, p, x)
-    gp_i, gx_i = _grads(apply_i, p, x)
-    np.testing.assert_allclose(np.asarray(gx_i), np.asarray(gx_x),
-                               rtol=1e-4, atol=1e-4)
-    assert gp_x.keys() == gp_i.keys()
-    for k in gp_x:
-        np.testing.assert_allclose(
-            np.asarray(jax.tree_util.tree_leaves(gp_i[k])[0]),
-            np.asarray(jax.tree_util.tree_leaves(gp_x[k])[0]),
-            rtol=1e-4, atol=1e-4, err_msg=f"{kind} grad[{k}]")
 
 
 def test_weight_grad_stays_on_static_support():

@@ -1,4 +1,6 @@
-"""Serving engine: batched generation, ragged prompts, SWA rolling cache."""
+"""Serving engine: batched generation, ragged prompts, SWA cache, q8 freeze."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -58,3 +60,108 @@ def test_temperature_sampling_runs():
     eng, _ = _engine()
     out = eng.generate([[5, 6]], max_new_tokens=4, temperature=1.0, seed=1)
     assert len(out[0]) <= 4
+
+
+# ---------------------------------------------------------------------------
+# Quantized serving (freeze_for_inference(quantize="q8")).
+# ---------------------------------------------------------------------------
+
+
+def _snap_to_q8_grid(model, params):
+    """Quantize→dequantize every bf16 sparse linear once, so a subsequent
+    freeze-time quantization is value-exact (absmax round trips are
+    idempotent) and greedy tokens compare deterministically."""
+    from repro.core.sparse import dequantize_q8, quantize_q8
+    from repro.models.freeze import map_sparse_linears
+
+    def fn(node, kind, n, m):
+        if "values" in node:
+            vq, sc = quantize_q8(node["values"], n)
+            return dict(node, values=dequantize_q8(vq, sc).astype(
+                node["values"].dtype))
+        return node
+
+    return map_sparse_linears(model.cfg, params, fn)
+
+
+def test_q8_freeze_roundtrip_serve():
+    """q8-frozen serving: greedy tokens equal the bf16 engine on a q8-snapped
+    model (freeze-time quantization is then value-exact), teacher-forced
+    logits stay within a loose quantization tolerance on the *unsnapped*
+    model, and the q8 weight payload is ≤ 0.35× of dense bf16."""
+    from repro.core.sparse import q8_group_size
+    cfg = get_smoke_config("gpt2-small")   # representation="compressed"
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), adapter_rank=4)
+
+    # --- exact path: snapped weights → identical greedy tokens ------------
+    snapped = _snap_to_q8_grid(model, params)
+    eng_q8 = ServeEngine(model, snapped, cache_len=64, prefill_chunk=8,
+                         quantize="q8")
+    eng_bf = ServeEngine(model, snapped, cache_len=64, prefill_chunk=8)
+    prompts = [[5, 6, 7], [9, 10, 11, 12]]
+    assert eng_q8.generate(prompts, 8) == eng_bf.generate(prompts, 8)
+
+    # --- unsnapped: teacher-forced logits within quantization tolerance ---
+    frozen_q8 = ServeEngine(model, params, cache_len=64, prefill_chunk=8,
+                            quantize="q8").params
+    frozen_bf = ServeEngine(model, params, cache_len=64, prefill_chunk=8).params
+    batch = {"tokens": jnp.arange(32, dtype=jnp.int32).reshape(2, 16)
+             % cfg.vocab_size}
+    lg_q8, _ = model.forward(frozen_q8, batch)
+    lg_bf, _ = model.forward(frozen_bf, batch)
+    scale = float(jnp.abs(lg_bf).max())
+    assert float(jnp.abs(lg_q8 - lg_bf).max()) < 0.05 * max(scale, 1.0)
+
+    # --- layout + payload accounting --------------------------------------
+    leaves = {jax.tree_util.keystr(p): l for p, l in
+              jax.tree_util.tree_leaves_with_path(frozen_q8)}
+    assert any("values_q" in s for s in leaves)
+    assert any("scales" in s for s in leaves)
+    assert not any("rc_packed" in s or "permT" in s for s in leaves)
+    q8_payload = dense_bf16 = 0
+    n, m = cfg.slope.n, cfg.slope.m
+    for s, leaf in leaves.items():
+        if "values_q" in s:
+            *_, d_out, k = leaf.shape
+            q8_payload += leaf.size                       # int8 values
+            q8_payload += leaf.size // 4                  # 2-bit packed idx
+            g = q8_group_size(k, n)
+            q8_payload += (leaf.size // g) * 4            # f32 scales
+            dense_bf16 += (leaf.size * m // n) * 2        # bf16 dense
+    assert q8_payload and dense_bf16
+    assert q8_payload / dense_bf16 <= 0.35, q8_payload / dense_bf16
+
+
+def test_q8_mixed_repr_overrides_serving_resolves_per_layer():
+    """repr_overrides + quantize interop: MLPs trained compressed_q8 serve
+    quantized while attention stays bf16 compressed, from one pytree, with
+    frozen generation exactly matching the unfrozen engine (both layouts are
+    value-preserving conversions)."""
+    cfg = get_smoke_config("gpt2-small")
+    cfg = cfg.replace(slope=dataclasses.replace(
+        cfg.slope, representation="compressed",
+        repr_overrides=(("mlp", "compressed_q8"),)))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng_f = ServeEngine(model, params, cache_len=32, prefill_chunk=8)
+    eng_t = ServeEngine(model, params, cache_len=32, prefill_chunk=8,
+                        freeze=False)
+    leaves = {jax.tree_util.keystr(p) for p, _ in
+              jax.tree_util.tree_leaves_with_path(eng_f.params)}
+    assert any("mlp" in s and "values_q" in s for s in leaves)
+    assert any("mlp" in s and "scales" in s for s in leaves)
+    assert any("attn" in s and "'values'" in s for s in leaves)
+    assert not any("attn" in s and "values_q" in s for s in leaves)
+    prompts = [[5, 6, 7], [9, 10]]
+    assert eng_f.generate(prompts, 6) == eng_t.generate(prompts, 6)
+
+    # global knob on top: quantize="q8" converts the remaining bf16 layers too
+    eng_all = ServeEngine(model, params, cache_len=32, prefill_chunk=8,
+                          quantize="q8")
+    leaves_all = {jax.tree_util.keystr(p) for p, _ in
+                  jax.tree_util.tree_leaves_with_path(eng_all.params)}
+    assert any("attn" in s and "values_q" in s for s in leaves_all)
+    assert not any("'values'" in s for s in leaves_all)
+    out = eng_all.generate(prompts, 6)
+    assert all(len(o) <= 6 for o in out)
