@@ -24,8 +24,8 @@ def main() -> None:
 
     from . import (appj_prune_target, bwd_metadata, fig2_convergence,
                    lemma21_density, perf_iterations, roofline_table,
-                   table2_speedup, table3_memory, table45_adapters,
-                   table6_mixed_sparsity)
+                   serve_throughput, table2_speedup, table3_memory,
+                   table45_adapters, table6_mixed_sparsity)
 
     benches = {
         "lemma21": lemma21_density.main,
@@ -39,6 +39,7 @@ def main() -> None:
         "roofline": roofline_table.main,
         "perf": perf_iterations.main,
         "bwd_metadata": bwd_metadata.main,
+        "serve_throughput": serve_throughput.main,
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -71,6 +71,27 @@ def main():
     print(f"q8 greedy continuations matching bf16: {same}/{len(prompts)} "
           f"(quantization may legitimately flip near-tie tokens)")
 
+    # 4. Request-stream serving: a fixed slot pool, requests submitted while
+    # the engine runs. The scheduler admits each one as soon as a slot frees
+    # (no batch barrier) and evicts on EOS/length — tokens are bitwise the
+    # same as running each request alone.
+    eng_stream = ServeEngine(model, state.params, cache_len=128,
+                             prefill_chunk=16, max_slots=2)
+    eng_stream.start()
+    stream = [[5, 6, 7], [9, 10, 11, 12], [3, 4], [8] * 7]
+    reqs = [eng_stream.submit(stream[0], 8)]
+    ticks = 0
+    while eng_stream.step() or len(reqs) < len(stream):
+        ticks += 1
+        if ticks % 3 == 0 and len(reqs) < len(stream):   # mid-stream arrival
+            reqs.append(eng_stream.submit(stream[len(reqs)], 8))
+    for r in reqs:
+        print(f"stream req{r.rid} slot={r.slot} {r.finish_reason:>6}: {r.out}")
+    st = eng_stream.stats
+    print(f"stream: {st.decode_steps} decode steps, {st.prefill_chunks} "
+          f"prefill chunks, {st.decode_lane_count()} active decode lanes "
+          f"for {sum(len(r.out) for r in reqs)} tokens over 2 slots")
+
 
 if __name__ == "__main__":
     main()

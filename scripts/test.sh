@@ -3,15 +3,21 @@
 #   scripts/test.sh                 # full tier-1 suite
 #   scripts/test.sh --fast          # fast lane: skip subprocess/distributed
 #                                   # tests (same as -m "not slow")
+#   scripts/test.sh --bench-smoke   # additionally run the serve-throughput
+#                                   # bench smoke and fail unless it emits
+#                                   # a valid BENCH_serve_throughput.json
 #   scripts/test.sh -m "not slow"   # explicit marker expression
 #   scripts/test.sh tests/test_repr.py -k parity
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+bench_smoke=0
 args=()
 for a in "$@"; do
   if [[ "$a" == "--fast" ]]; then
     args+=(-m "not slow")
+  elif [[ "$a" == "--bench-smoke" ]]; then
+    bench_smoke=1
   else
     args+=("$a")
   fi
@@ -33,4 +39,31 @@ if [[ "$restricted" == 1 ]] && ! python -m pytest --collect-only -q >/dev/null 2
 fi
 # ${args[@]+...}: empty-array expansion is an "unbound variable" under
 # set -u on bash < 4.4 (macOS ships 3.2)
-exec python -m pytest -x -q ${args[@]+"${args[@]}"}
+if [[ "$bench_smoke" == 0 ]]; then
+  exec python -m pytest -x -q ${args[@]+"${args[@]}"}
+fi
+python -m pytest -x -q ${args[@]+"${args[@]}"}
+# Scheduler-throughput smoke: a bench that runs but emits no artifact (or an
+# artifact with no results) must turn the lane red, not silently pass.
+rm -f BENCH_serve_throughput.json
+python -m benchmarks.serve_throughput --smoke
+python - <<'PY'
+import json
+import sys
+
+try:
+    with open("BENCH_serve_throughput.json") as f:
+        data = json.load(f)
+except (FileNotFoundError, json.JSONDecodeError) as e:
+    sys.exit(f"scripts/test.sh: bench smoke emitted no usable JSON: {e}")
+rows = data.get("results") or []
+if not rows:
+    sys.exit("scripts/test.sh: BENCH_serve_throughput.json has no results")
+missing = [r for r in rows
+           if "speedup" not in r or "tokens_per_s" not in r.get("continuous", {})]
+if missing:
+    sys.exit(f"scripts/test.sh: malformed bench rows: {missing}")
+print(f"scripts/test.sh: bench smoke ok — "
+      + ", ".join(f"rate {r['rate']:g}/{r['quantize']}: {r['speedup']:.2f}x"
+                  for r in rows))
+PY

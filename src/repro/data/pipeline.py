@@ -7,11 +7,24 @@ import threading
 __all__ = ["Prefetcher"]
 
 
+class _ProducerError:
+    """Sentinel carrying an exception from the producer thread."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
 class Prefetcher:
     """Prefetches ``source.batch(step)`` for steps [start, end) on a thread.
 
     Keeps the host data path off the training loop's critical path — the
     standard producer/consumer overlap. Deterministic: batch(step) is pure.
+
+    If ``source.batch`` raises, the exception is captured and re-raised in
+    the consuming thread on the next ``__iter__`` step. (The naive version
+    died silently in the producer and never enqueued its end-of-stream
+    sentinel, so the consumer blocked on ``Queue.get`` forever — a training
+    job that hangs instead of crashing on a bad shard.)
     """
 
     def __init__(self, source, start: int, end: int, depth: int = 2):
@@ -23,8 +36,12 @@ class Prefetcher:
         self._thread.start()
 
     def _run(self, start, end):
-        for step in range(start, end):
-            self._q.put((step, self.source.batch(step)))
+        try:
+            for step in range(start, end):
+                self._q.put((step, self.source.batch(step)))
+        except BaseException as exc:  # noqa: BLE001 — relayed to the consumer
+            self._q.put(_ProducerError(exc))
+            return
         self._q.put(None)
 
     def __iter__(self):
@@ -32,4 +49,8 @@ class Prefetcher:
             item = self._q.get()
             if item is None:
                 return
+            if isinstance(item, _ProducerError):
+                raise RuntimeError(
+                    f"data source failed while prefetching: {item.exc!r}"
+                ) from item.exc
             yield item

@@ -1,3 +1,3 @@
 from .checkpoint import (save_checkpoint, restore_checkpoint, latest_step,
-                         CheckpointManager)
+                         read_manifest, CheckpointManager)
 from .elastic import propose_mesh_shape, ElasticPolicy

@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "CheckpointManager"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "read_manifest", "CheckpointManager"]
 
 _BF16 = "__bf16__"
 
@@ -52,11 +53,22 @@ def save_checkpoint(ckpt_dir: str, tree, step: int, *, keep: int = 3,
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
-    os.makedirs(tmp, exist_ok=True)
+    # A crash between savez and rename leaves a stale tmp dir behind; a
+    # rewrite of the same step must not mix its files with the orphan's.
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     arrays = _flatten(tree)
     np.savez(os.path.join(tmp, "state.npz"), **arrays)
+    # Record phase-2 / adapter presence so loaders (launch/serve.py) can
+    # build a template with matching adapter leaves instead of silently
+    # restoring without them.
+    lora_l = [a for k, a in arrays.items()
+              if "'lora'" in k and k.endswith("['l']")]
     manifest = {"step": step, "time": time.time(), "n_arrays": len(arrays),
                 "bytes": int(sum(a.nbytes for a in arrays.values())),
+                "phase2": bool(lora_l),
+                "adapter_rank": int(lora_l[0].shape[-1]) if lora_l else 0,
                 **(extra or {})}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=2)
@@ -71,6 +83,21 @@ def _prune(ckpt_dir: str, keep: int) -> None:
     steps = sorted(_list_steps(ckpt_dir))
     for s in steps[:-keep] if keep > 0 else []:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+    # Sweep orphaned temp dirs from crashed saves (saves are serialized by
+    # CheckpointManager, so any *.tmp still present here is dead).
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and name.endswith(".tmp"):
+            shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+
+
+def read_manifest(ckpt_dir: str, step: int | None = None) -> dict:
+    """Load ``manifest.json`` of a checkpoint (latest when ``step`` is None)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    with open(os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")) as f:
+        return json.load(f)
 
 
 def _list_steps(ckpt_dir: str) -> list[int]:
@@ -92,11 +119,18 @@ def latest_step(ckpt_dir: str) -> int | None:
 
 
 def restore_checkpoint(ckpt_dir: str, template, *, step: int | None = None,
-                       shardings=None):
+                       shardings=None, strict: bool = True):
     """Restore onto ``template`` (a pytree of arrays or ShapeDtypeStructs).
 
     ``shardings``: optional matching tree of NamedShardings — leaves are
     device_put with them (the elastic-restart path).
+
+    ``strict`` (default True): raise if the checkpoint stores leaves the
+    template has no path for. Silently dropping them is how a phase-2
+    checkpoint restored onto a phase-1 template *loses its lazy low-rank
+    adapters* while printing success — the serving path then quietly
+    degrades to the sparse-only model. Pass ``strict=False`` only when a
+    partial restore is genuinely intended.
     """
     if step is None:
         step = latest_step(ckpt_dir)
@@ -117,10 +151,13 @@ def restore_checkpoint(ckpt_dir: str, template, *, step: int | None = None,
             shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
         shard_flat = {_path_str(p): s for p, s in sflat}
 
+    consumed: set[str] = set()
+
     def fill(path, leaf):
         key = _path_str(path)
         if key not in stored:
             raise KeyError(f"checkpoint {ckpt_dir}@{step} missing {key}")
+        consumed.add(key)
         arr = stored[key]
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"{key}: shape {arr.shape} != template {leaf.shape}")
@@ -128,7 +165,19 @@ def restore_checkpoint(ckpt_dir: str, template, *, step: int | None = None,
             return jax.device_put(arr, shard_flat[key])
         return jnp.asarray(arr)
 
-    return jax.tree_util.tree_map_with_path(fill, template), step
+    restored = jax.tree_util.tree_map_with_path(fill, template)
+    if strict:
+        unconsumed = sorted(set(stored) - consumed)
+        if unconsumed:
+            preview = ", ".join(unconsumed[:8])
+            more = f" (+{len(unconsumed) - 8} more)" if len(unconsumed) > 8 else ""
+            raise ValueError(
+                f"checkpoint {ckpt_dir}@{step} stores {len(unconsumed)} leaves "
+                f"the template does not consume: {preview}{more}. The template "
+                "is missing these paths (e.g. a phase-1 template restoring a "
+                "phase-2 checkpoint would drop its adapters); rebuild the "
+                "template to match, or pass strict=False to drop them.")
+    return restored, step
 
 
 class CheckpointManager:

@@ -1,7 +1,22 @@
-"""Serving launcher: load (or init) a model and serve batched requests.
+"""Serving launcher: load (or init) a model and serve requests.
+
+Batch mode (default) serves one ragged batch through the continuous-batching
+``ServeEngine``:
 
     PYTHONPATH=src python -m repro.launch.serve --arch gpt2-small --smoke \
         --ckpt-dir ckpt/gpt2 --max-new 32
+
+Stream mode replays a Poisson arrival process against a fixed slot pool —
+requests are admitted the moment a slot frees up, so tokens/s holds up under
+mixed prompt/generation lengths:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gpt2-small --smoke \
+        --stream --rate 4 --num-requests 32 --slots 4
+
+Checkpoint templates are built from the checkpoint's own manifest: a phase-2
+checkpoint (lazy low-rank adapters present) gets an adapter-bearing template
+via ``add_lazy_adapters``, so the adapters are actually restored —
+``restore_checkpoint`` runs strict and would refuse the silent drop.
 """
 from __future__ import annotations
 
@@ -9,6 +24,98 @@ import argparse
 
 import jax
 import numpy as np
+
+
+def _checkpoint_shape(ckpt_dir: str, step: int | None = None) -> tuple[int, str]:
+    """(adapter_rank, grad_compression) a checkpoint's template must match.
+
+    Prefers the manifest (written at save time); falls back to peeking the
+    stored array keys for checkpoints written before the manifest carried
+    ``adapter_rank``. Error-feedback (``.ef``) leaves are always detected
+    from the keys — training-only state the template must still consume.
+    """
+    import os
+
+    from repro.ft import read_manifest
+    from repro.ft.checkpoint import latest_step
+
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    with np.load(os.path.join(ckpt_dir, f"step_{step:08d}", "state.npz")) as z:
+        keys = list(z.files)
+        rank = next((int(z[k].shape[-1]) for k in keys
+                     if "'lora'" in k and k.endswith("['l']")), 0)
+    grad_compression = ("int8_ef" if any(".ef" in k for k in keys) else "none")
+    try:
+        man = read_manifest(ckpt_dir, step)
+        rank = int(man.get("adapter_rank", rank))
+    except (FileNotFoundError, OSError, ValueError):
+        pass
+    return rank, grad_compression
+
+
+def checkpoint_adapter_rank(ckpt_dir: str, step: int | None = None) -> int:
+    """Adapter rank carried by a checkpoint (0 = phase-1 / none)."""
+    return _checkpoint_shape(ckpt_dir, step)[0]
+
+
+def load_serving_state(ckpt_dir: str, model, key):
+    """Restore a train state for serving, with the right phase template.
+
+    Probes the checkpoint for its shape — phase-2 adapter rank and
+    error-feedback state — builds the matching template in one init, and
+    restores strictly: a template/checkpoint mismatch raises instead of
+    silently dropping leaves. Returns ``(state, step, adapter_rank)``.
+    """
+    from repro.ft import restore_checkpoint
+    from repro.train import init_train_state
+
+    rank, grad_compression = _checkpoint_shape(ckpt_dir)
+    template = init_train_state(model, key, adapter_rank=rank,
+                                grad_compression=grad_compression)
+    state, step = restore_checkpoint(ckpt_dir, template, strict=True)
+    return state, step, rank
+
+
+def run_stream(eng, cfg, *, rate: float, num_requests: int, max_new: int,
+               seed: int = 0, temperature: float = 0.0, log=print) -> dict:
+    """Replay a Poisson(rate req/s) arrival stream through a started engine."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, num_requests))
+    # Mixed prompt lengths, capped so prompt+generation fits the cache on
+    # cache-bounded architectures.
+    lo, hi = 4, 3 * eng.prefill_chunk
+    if eng._bounded():
+        hi = min(hi, eng.cache_len - max_new)
+        if hi <= lo:
+            raise ValueError(
+                f"cache_len={eng.cache_len} leaves no room for prompts with "
+                f"max_new={max_new} (need at least {lo + max_new + 1})")
+    prompts = [list(map(int, rng.integers(2, cfg.vocab_size,
+                                          rng.integers(lo, hi))))
+               for _ in range(num_requests)]
+    budgets = rng.integers(max(1, max_new // 8), max_new + 1, num_requests)
+
+    from repro.serve import replay_stream
+
+    eng.start(temperature=temperature, seed=seed)
+    trace = [(float(a), p, int(b)) for a, p, b in zip(arrivals, prompts, budgets)]
+    reqs, finish_at, elapsed = replay_stream(eng, trace, sleep_cap=0.05)
+    tokens = sum(len(r.out) for r in reqs)
+    lat = [finish_at[r.rid] - a for r, a in zip(reqs, arrivals)]
+    out = {"requests": num_requests, "tokens": tokens, "elapsed_s": elapsed,
+           "tokens_per_s": tokens / max(elapsed, 1e-9),
+           "mean_latency_s": float(np.mean(lat)),
+           "p90_latency_s": float(np.quantile(lat, 0.9)),
+           "decode_steps": eng.stats.decode_steps,
+           "prefill_chunks": eng.stats.prefill_chunks}
+    log(f"[serve] stream rate={rate}/s n={num_requests} slots="
+        f"{eng.scheduler.num_slots}: {tokens} tok in {elapsed:.2f}s "
+        f"-> {out['tokens_per_s']:.1f} tok/s, mean latency "
+        f"{out['mean_latency_s']:.2f}s (p90 {out['p90_latency_s']:.2f}s)")
+    return out
 
 
 def main() -> None:
@@ -28,13 +135,20 @@ def main() -> None:
                     help="serve the training representation (reference path)")
     ap.add_argument("--quantize", default=None, choices=["none", "q8"],
                     help="freeze-time value quantization (default: config)")
+    ap.add_argument("--stream", action="store_true",
+                    help="Poisson request-stream mode (continuous batching)")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="stream mode: mean arrival rate, requests/s")
+    ap.add_argument("--num-requests", type=int, default=32,
+                    help="stream mode: total requests to replay")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="stream mode: KV-cache slot pool size")
     args = ap.parse_args()
 
     import dataclasses
 
     from repro.configs import get_config, get_smoke_config
     from repro.core.repr import tree_nbytes
-    from repro.ft import restore_checkpoint
     from repro.models import build_model
     from repro.serve import ServeEngine
 
@@ -43,13 +157,13 @@ def main() -> None:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     if args.ckpt_dir:
-        from repro.train import init_train_state
-        template = init_train_state(model, jax.random.PRNGKey(0))
         try:
-            state, step = restore_checkpoint(args.ckpt_dir, template)
+            state, step, rank = load_serving_state(args.ckpt_dir, model,
+                                                   jax.random.PRNGKey(0))
             params = state.params
-            print(f"[serve] restored checkpoint step {step}")
-        except (FileNotFoundError, KeyError) as e:
+            phase = f"phase-2 (adapter rank {rank})" if rank else "phase-1"
+            print(f"[serve] restored {phase} checkpoint step {step}")
+        except FileNotFoundError as e:
             print(f"[serve] no usable checkpoint ({e}); serving fresh init")
 
     if args.no_freeze and args.quantize not in (None, "none"):
@@ -57,13 +171,18 @@ def main() -> None:
                          "quantization happens at freeze time")
     train_bytes = tree_nbytes(params)
     eng = ServeEngine(model, params, cache_len=args.cache_len,
-                      freeze=not args.no_freeze, quantize=args.quantize)
+                      freeze=not args.no_freeze, quantize=args.quantize,
+                      max_slots=args.slots if args.stream else None)
     frozen_bytes = tree_nbytes(eng.params)
     quant = "none" if args.no_freeze else (args.quantize or cfg.slope.quantize)
     print(f"[serve] backend={args.backend} frozen={not args.no_freeze} "
           f"quantize={quant} "
           f"params {train_bytes / 1e6:.2f}MB -> {frozen_bytes / 1e6:.2f}MB "
           f"({frozen_bytes / max(train_bytes, 1):.2f}x)")
+    if args.stream:
+        run_stream(eng, cfg, rate=args.rate, num_requests=args.num_requests,
+                   max_new=args.max_new, temperature=args.temperature)
+        return
     rng = np.random.default_rng(0)
     prompts = [list(map(int, rng.integers(2, cfg.vocab_size, rng.integers(4, 12))))
                for _ in range(args.batch)]

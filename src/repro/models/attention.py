@@ -26,7 +26,8 @@ from repro.configs.base import ModelConfig, SlopeConfig
 from repro.sharding.specs import constrain, policy_has
 from .layers import apply_rope, make_linear, rope
 
-__all__ = ["make_attention", "KVCache", "init_kv_cache", "chunked_attention"]
+__all__ = ["make_attention", "KVCache", "init_kv_cache", "reset_kv_slots",
+           "invalidate_kv_padding", "chunked_attention"]
 
 NEG_INF = -1e30
 
@@ -46,6 +47,33 @@ def init_kv_cache(batch: int, cache_len: int, kv_heads: int, head_dim: int,
         v=jnp.zeros((batch, cache_len, kv_heads, head_dim), dtype),
         positions=jnp.full((batch, cache_len), -1, jnp.int32),
     )
+
+
+def reset_kv_slots(cache: KVCache, free: jax.Array) -> KVCache:
+    """Blank the cache rows of batch slots where ``free`` is True.
+
+    ``free``: (b,) bool. Used by the continuous-batching scheduler to recycle
+    a KV slot for a newly admitted request without touching its neighbours
+    (k/v zeroed, position table back to the -1 "empty" sentinel).
+    """
+    free = free.astype(bool)
+    return KVCache(
+        k=jnp.where(free[:, None, None, None], jnp.zeros((), cache.k.dtype), cache.k),
+        v=jnp.where(free[:, None, None, None], jnp.zeros((), cache.v.dtype), cache.v),
+        positions=jnp.where(free[:, None], jnp.int32(-1), cache.positions),
+    )
+
+
+def invalidate_kv_padding(cache: KVCache, lengths: jax.Array) -> KVCache:
+    """Mark entries written beyond each slot's real prompt as empty.
+
+    Chunked prefill writes every chunk-padded position; entries whose stored
+    absolute position is >= the slot's ``lengths`` are padding and get the
+    -1 "empty" sentinel so attention masks them out.
+    """
+    pos = cache.positions
+    valid = (pos < lengths[:, None]) & (pos >= 0)
+    return cache._replace(positions=jnp.where(valid, pos, jnp.int32(-1)))
 
 
 def _gqa_scores(q, k):

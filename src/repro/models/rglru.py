@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from .layers import make_linear
 
-__all__ = ["make_rglru_block", "RGLRUState"]
+__all__ = ["make_rglru_block", "RGLRUState", "reset_rglru_slots"]
 
 _C = 8.0
 
@@ -32,6 +32,16 @@ _C = 8.0
 class RGLRUState(NamedTuple):
     h: jax.Array     # (b, d_rnn) recurrent state
     conv: jax.Array  # (b, w-1, d_rnn) trailing inputs for the temporal conv
+
+
+def reset_rglru_slots(state: RGLRUState, free: jax.Array) -> RGLRUState:
+    """Zero the recurrent + conv state of batch slots where ``free`` is True
+    (per-slot recycling for the continuous-batching scheduler)."""
+    free = free.astype(bool)
+    return RGLRUState(
+        h=jnp.where(free[:, None], jnp.zeros((), state.h.dtype), state.h),
+        conv=jnp.where(free[:, None, None], jnp.zeros((), state.conv.dtype), state.conv),
+    )
 
 
 def make_rglru_block(cfg: ModelConfig, *, sparse: bool, dtype=jnp.bfloat16):

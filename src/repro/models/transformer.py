@@ -25,13 +25,34 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.sharding.specs import constrain
-from .attention import KVCache, init_kv_cache, make_attention
+from .attention import (KVCache, init_kv_cache, invalidate_kv_padding,
+                        make_attention, reset_kv_slots)
 from .layers import gelu_mlp_act, make_embedding, make_linear, make_norm, swiglu
 from .moe import make_moe_mlp
-from .rglru import make_rglru_block
-from .xlstm import make_mlstm_block, make_slstm_block
+from .rglru import make_rglru_block, reset_rglru_slots
+from .xlstm import (make_mlstm_block, make_slstm_block, reset_mlstm_slots,
+                    reset_slstm_slots)
 
-__all__ = ["make_block", "make_decoder_stack", "Segment", "plan_layers"]
+__all__ = ["make_block", "make_decoder_stack", "Segment", "plan_layers",
+           "CacheSlotOps"]
+
+
+class CacheSlotOps(NamedTuple):
+    """Per-slot operations on a stack's decode-cache pytree.
+
+    The cache batch axis is the *slot pool* of the continuous-batching
+    scheduler: ``reset`` recycles slots for newly admitted requests,
+    ``gather``/``scatter`` lift one slot out for (and back after) chunked
+    prefill at batch 1, and ``select`` write-masks a decode step so inactive
+    lanes keep their previous cache (a slot mid-prefill must not be clobbered
+    by the batched decode running beside it).
+    """
+
+    reset: Callable       # (caches, free (slots,) bool) -> caches
+    gather: Callable      # (caches, slot index)         -> batch-1 caches
+    scatter: Callable     # (caches, sub, slot index)    -> caches
+    select: Callable      # (keep (slots,) bool, new, old) -> caches
+    invalidate: Callable  # (caches, lengths (slots,) int32) -> caches
 
 
 # ---------------------------------------------------------------------------
@@ -155,7 +176,29 @@ def make_block(cfg: ModelConfig, kind: str, *, sparse: bool, nm=None,
             return {"self": c} if kind == "xattn" else c
         return rec[2](batch)
 
-    return init, apply, init_cache
+    def reset_cache(cache, free):
+        """Blank the cache slots where ``free`` is True (kind-aware)."""
+        if kind == "xattn":
+            return {"self": reset_kv_slots(cache["self"], free)}
+        if kind == "attn":
+            return reset_kv_slots(cache, free)
+        if kind == "recurrent":
+            return reset_rglru_slots(cache, free)
+        if kind == "mlstm":
+            return reset_mlstm_slots(cache, free)
+        return reset_slstm_slots(cache, free)
+
+    def invalidate_cache(cache, lengths):
+        """Drop prefill-padding entries past each slot's ``lengths``. Only
+        position-table caches carry padding; recurrent states pass through
+        (their prefill consumed the padding — same as the full-batch path)."""
+        if kind == "xattn":
+            return {"self": invalidate_kv_padding(cache["self"], lengths)}
+        if kind == "attn":
+            return invalidate_kv_padding(cache, lengths)
+        return cache
+
+    return init, apply, init_cache, reset_cache, invalidate_cache
 
 
 # ---------------------------------------------------------------------------
@@ -316,4 +359,58 @@ def make_decoder_stack(cfg: ModelConfig, *, causal: bool = True,
                 caches.append(one())
         return caches
 
-    return init, apply, init_caches
+    # ---- per-slot cache ops (continuous-batching scheduler) ---------------
+    # Scanned segments stack their leaves along a leading (repeats,) axis, so
+    # the batch/slot axis is 1 there and 0 everywhere else.
+
+    def _reset(caches, free):
+        free = jnp.asarray(free, bool)
+        out = []
+        for seg, mods, c in zip(segs, built, caches):
+            def one(gc, _mods=mods):
+                return tuple(m[3](bc, free) for m, bc in zip(_mods, gc))
+            out.append(jax.vmap(one)(c) if seg.scanned else one(c))
+        return out
+
+    def _gather(caches, slot):
+        out = []
+        for seg, c in zip(segs, caches):
+            ax = 1 if seg.scanned else 0
+            out.append(jax.tree_util.tree_map(
+                lambda leaf, _ax=ax: jax.lax.dynamic_slice_in_dim(leaf, slot, 1, _ax), c))
+        return out
+
+    def _scatter(caches, sub, slot):
+        out = []
+        for seg, c, s in zip(segs, caches, sub):
+            ax = 1 if seg.scanned else 0
+            out.append(jax.tree_util.tree_map(
+                lambda leaf, sl, _ax=ax: jax.lax.dynamic_update_slice_in_dim(
+                    leaf, sl.astype(leaf.dtype), slot, _ax), c, s))
+        return out
+
+    def _select(keep, new, old):
+        keep = jnp.asarray(keep, bool)
+        out = []
+        for seg, nc, oc in zip(segs, new, old):
+            ax = 1 if seg.scanned else 0
+
+            def sel(nl, ol, _ax=ax):
+                shape = [1] * nl.ndim
+                shape[_ax] = keep.shape[0]
+                return jnp.where(keep.reshape(shape), nl, ol)
+
+            out.append(jax.tree_util.tree_map(sel, nc, oc))
+        return out
+
+    def _invalidate(caches, lengths):
+        lengths = jnp.asarray(lengths, jnp.int32)
+        out = []
+        for seg, mods, c in zip(segs, built, caches):
+            def one(gc, _mods=mods):
+                return tuple(m[4](bc, lengths) for m, bc in zip(_mods, gc))
+            out.append(jax.vmap(one)(c) if seg.scanned else one(c))
+        return out
+
+    return init, apply, init_caches, CacheSlotOps(_reset, _gather, _scatter,
+                                                  _select, _invalidate)

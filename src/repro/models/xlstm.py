@@ -26,7 +26,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from .layers import make_linear
 
-__all__ = ["make_mlstm_block", "make_slstm_block", "MLSTMState", "SLSTMState"]
+__all__ = ["make_mlstm_block", "make_slstm_block", "MLSTMState", "SLSTMState",
+           "reset_mlstm_slots", "reset_slstm_slots"]
 
 
 class MLSTMState(NamedTuple):
@@ -40,6 +41,29 @@ class SLSTMState(NamedTuple):
     n: jax.Array  # (b, h, dh)
     h: jax.Array  # (b, h, dh)
     m: jax.Array  # (b, h, dh)
+
+
+def reset_mlstm_slots(state: MLSTMState, free: jax.Array) -> MLSTMState:
+    """Reset batch slots where ``free`` is True to the empty-memory state
+    (per-slot recycling for the continuous-batching scheduler)."""
+    free = free.astype(bool)
+    return MLSTMState(
+        c=jnp.where(free[:, None, None, None], jnp.zeros((), state.c.dtype), state.c),
+        n=jnp.where(free[:, None, None], jnp.zeros((), state.n.dtype), state.n),
+        m=jnp.where(free[:, None], jnp.asarray(-1e30, state.m.dtype), state.m),
+    )
+
+
+def reset_slstm_slots(state: SLSTMState, free: jax.Array) -> SLSTMState:
+    """Reset batch slots where ``free`` is True to the empty-memory state."""
+    free = free.astype(bool)[:, None, None]
+    z = jnp.zeros((), state.c.dtype)
+    return SLSTMState(
+        c=jnp.where(free, z, state.c),
+        n=jnp.where(free, z, state.n),
+        h=jnp.where(free, z, state.h),
+        m=jnp.where(free, jnp.asarray(-1e30, state.m.dtype), state.m),
+    )
 
 
 def _mlstm_chunk(q, k, v, log_i, log_f, state: MLSTMState):

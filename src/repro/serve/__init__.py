@@ -1,1 +1,2 @@
-from .engine import ServeEngine
+from .engine import ServeEngine, StaticBatchEngine, replay_stream
+from .scheduler import Request, Scheduler, SchedulerStats

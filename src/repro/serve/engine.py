@@ -1,21 +1,41 @@
-"""Batched serving engine: chunked prefill + per-request decode.
+"""Continuous-batching serve engine: slot-stable decode + interleaved prefill.
 
 Serving is where SLoPe pays off hardest on TPU: decode is bandwidth-bound,
 and the compressed weights cut the per-token HBM weight traffic ~2× (the
-paper's 1.54× inference speedup, re-derived for TPU in EXPERIMENTS.md
-§Roofline). Phase-2 models additionally carry the fused sparse+LoRA path.
+paper's 1.54× inference speedup). But kernels only win end-to-end if the
+scheduler keeps them fed — a static batch waits for its slowest request,
+finished slots burn decode steps, and new arrivals stall until the batch
+drains. This engine replaces that loop with vLLM-style continuous batching:
 
-Mechanics:
-  * requests are right-padded to a common grid; prefill runs through the
-    *cache* path in chunks of ``prefill_chunk`` (vLLM-style chunked prefill —
-    the (chunk × cache) score tile keeps memory bounded);
-  * per-request absolute positions (``decode_pos`` is a (b,) vector), so
-    requests of different lengths decode correctly in one batch;
-  * padded slots are invalidated in the cache position table (-1 ⇒ masked);
-  * greedy or temperature sampling; EOS early-exit mask.
+  * a ``serve.scheduler.Scheduler`` owns the request queue and a fixed pool
+    of KV-cache slots — requests are **admitted on arrival** into any free
+    slot and **evicted on EOS or length**, immediately freeing the slot;
+  * decode is a **slot-stable jitted step** over the whole pool (one
+    compilation per pool size): sampling runs on device, the active-slot
+    mask write-protects lanes that are free or mid-prefill
+    (``Model.select_cache_slots``), and the only host sync per generated
+    token is the sampled-token fetch that drives admission/eviction;
+  * prefill of a newly admitted request runs **chunked at batch 1** through
+    the same cache path (``Model.gather_cache_slot`` → ``decode_step`` →
+    ``scatter_cache_slot``), one chunk per engine tick, so it *interleaves*
+    with in-flight decode instead of barriering the batch;
+  * slot recycling is ``Model.reset_cache_slots`` — the per-family cache
+    owners (attention KV, RG-LRU, m/sLSTM) blank exactly one batch row.
+
+Because every per-request computation (batch-1 prefill chunks, the position
+fix, the last-token re-decode, per-row decode lanes) is the same math the
+single-request path runs, greedy tokens are bitwise identical to
+single-request decode regardless of what shares the pool — the
+tests/test_serve_scheduler.py streaming-admission suite pins this down.
+
+``ServeEngine.generate`` keeps the old batch-mode API on top (submit all,
+drain, return outputs in order). ``StaticBatchEngine`` preserves the
+previous whole-batch loop as the scheduling baseline for
+``benchmarks/serve_throughput.py``.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 
 import jax
@@ -24,12 +44,50 @@ import numpy as np
 
 from repro.models.model_zoo import Model
 
-__all__ = ["ServeEngine"]
+from .scheduler import Request, Scheduler, SchedulerStats
+
+__all__ = ["ServeEngine", "StaticBatchEngine", "replay_stream"]
+
+
+def replay_stream(eng: "ServeEngine", trace, *, sleep_cap: float = 0.02):
+    """Replay an arrival trace through a *started* engine in real time.
+
+    ``trace``: sequence of ``(arrival_s, prompt, max_new)`` tuples (an
+    optional 4th element is the request's ``enc_out``). Each request is
+    submitted once the engine's wall clock passes its arrival time; the
+    engine ticks until drained, sleeping (capped at ``sleep_cap``) while
+    idle before the next arrival. Shared by ``launch/serve.py --stream``
+    and ``benchmarks/serve_throughput.py`` so the CLI and the bench always
+    measure the same admission behavior.
+
+    Returns ``(requests, finish_at, elapsed_s)`` — ``finish_at`` maps
+    request rid → completion time on the same clock. The done-scan is
+    O(requests) per tick; fine for CLI/bench traces, not for unbounded
+    production streams.
+    """
+    t0 = time.perf_counter()
+    reqs, finish_at, i = [], {}, 0
+    while i < len(trace) or eng.scheduler.busy:
+        now = time.perf_counter() - t0
+        while i < len(trace) and trace[i][0] <= now:
+            item = trace[i]
+            reqs.append(eng.submit(item[1], item[2],
+                                   enc_out=item[3] if len(item) > 3 else None))
+            i += 1
+        if not eng.step() and i < len(trace):
+            time.sleep(max(0.0, min(trace[i][0] - (time.perf_counter() - t0),
+                                    sleep_cap)))
+        for r in reqs:
+            if r.done and r.rid not in finish_at:
+                finish_at[r.rid] = time.perf_counter() - t0
+    return reqs, finish_at, time.perf_counter() - t0
 
 
 @dataclass
-class ServeEngine:
-    """``freeze=True`` (default) converts training params to the inference
+class _EngineBase:
+    """Shared construction: freeze-to-inference + quantization handling.
+
+    ``freeze=True`` (default) converts training params to the inference
     representation at construction (``models.freeze.freeze_for_inference``):
     dense_masked/srste layers are compressed, ``rc`` backward metadata is
     dropped, and phase-2 adapters move to the fused sparse+LoRA layout. Pass
@@ -61,6 +119,275 @@ class ServeEngine:
             raise ValueError(
                 f"quantize={self.quantize!r} requires freeze=True "
                 "(freeze-time quantization)")
+
+    def _bounded(self) -> bool:
+        cfg = self.model.cfg
+        return (any(k in ("attn", "xattn") for k in cfg.block_pattern)
+                and not (cfg.window and self.cache_len <= cfg.window))
+
+    def _check_fits(self, prompt_len: int, max_new: int) -> None:
+        """Reject requests whose cache writes would not fit.
+
+        Both the decoded span (prompt+generation) and the *chunk-padded*
+        prefill span must fit: prefill writes every padded position, and an
+        out-of-range dynamic_update_slice start silently clamps — it would
+        overwrite mid-prompt KV entries instead of raising.
+        """
+        if not self._bounded():
+            return
+        padded = max(self.prefill_chunk,
+                     -(-prompt_len // self.prefill_chunk) * self.prefill_chunk)
+        if prompt_len + max_new > self.cache_len or padded > self.cache_len:
+            raise ValueError(
+                f"prompt ({prompt_len} tokens, chunk-padded {padded}) + "
+                f"max_new_tokens={max_new} exceeds cache_len={self.cache_len}")
+
+
+@dataclass
+class ServeEngine(_EngineBase):
+    """Continuous-batching engine (see module docstring).
+
+    Streaming API — size the pool up front, then feed it:
+
+        eng = ServeEngine(model, params, cache_len=256, max_slots=8)
+        eng.start()
+        r = eng.submit(prompt, max_new_tokens=64)   # any time, any rate
+        while eng.step():                            # one tick: admit + one
+            ...                                      # prefill chunk + one
+        print(r.out, r.finish_reason)                # decode step
+
+    Batch API — ``generate`` wraps submit-all/drain and returns outputs in
+    submission order, with the same greedy-token semantics as single-request
+    decode (``max_slots=None`` sizes the pool to the batch).
+    """
+
+    max_slots: int | None = None
+    # Keep the per-event scheduler trace (admissions/evictions/active-mask
+    # history). Counters are always maintained; disable the trace for
+    # long-running streams so host memory stays flat.
+    trace_stats: bool = True
+
+    def __post_init__(self):
+        super().__post_init__()
+        mdl = self.model
+
+        def _prefill_chunk_fn(params, caches, tokens, off, slot, enc_out=None,
+                              *, fresh=False):
+            sub = mdl.gather_cache_slot(caches, slot)
+            if fresh:
+                # First chunk of a recycled slot: blank the previous
+                # occupant's cache in the same jitted call (per-family
+                # owner resets), saving a dispatch per admission.
+                sub = mdl.reset_cache_slots(sub, jnp.ones((1,), bool))
+            _, sub = mdl.decode_step(params, tokens, sub, off, enc_out=enc_out)
+            return mdl.scatter_cache_slot(caches, sub, slot)
+
+        def _finalize_fn(params, caches, last_tok, length, slot, enc_out=None):
+            sub = mdl.gather_cache_slot(caches, slot)
+            # Drop the chunk-padding cache entries, then re-decode the last
+            # real token — the same sequence the whole-batch prefill runs.
+            sub = mdl.invalidate_cache_padding(sub, length[None])
+            logits, sub = mdl.decode_step(params, last_tok, sub, length - 1,
+                                          enc_out=enc_out)
+            return logits, mdl.scatter_cache_slot(caches, sub, slot)
+
+        def _decode_fn(params, caches, tok, pos, active, key, enc_out=None,
+                       *, temperature):
+            logits, new_caches = mdl.decode_step(params, tok[:, None], caches,
+                                                 pos, enc_out=enc_out)
+            lg = logits[:, -1, :]
+            if temperature > 0:
+                nxt = jax.random.categorical(key, lg / temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(lg, axis=-1)
+            # Write-mask: free / mid-prefill lanes keep their previous cache.
+            new_caches = mdl.select_cache_slots(active, new_caches, caches)
+            return nxt.astype(jnp.int32), new_caches
+
+        self._prefill_jit = jax.jit(_prefill_chunk_fn,
+                                    static_argnames=("fresh",))
+        self._finalize_jit = jax.jit(_finalize_fn)
+        self._decode_jit = jax.jit(_decode_fn, static_argnames=("temperature",))
+        self._sched: Scheduler | None = None
+
+    # ------------------------------------------------------------------ run
+    def start(self, num_slots: int | None = None, *, temperature: float = 0.0,
+              seed: int = 0) -> None:
+        """(Re)initialize the slot pool; drops any previous run state."""
+        slots = num_slots if num_slots is not None else self.max_slots
+        if slots is None:
+            raise ValueError("pass num_slots (or construct with max_slots=...)")
+        self._sched = Scheduler(slots, chunk=self.prefill_chunk,
+                                trace=self.trace_stats)
+        self._caches = self.model.init_caches(slots, self.cache_len)
+        self._pos = np.zeros(slots, np.int32)
+        self._tok = np.zeros(slots, np.int32)
+        self._active = np.zeros(slots, bool)
+        self._enc = None        # device-resident (slots, enc_seq, d) on demand
+        self._temperature = float(temperature)
+        self._key = jax.random.PRNGKey(seed)
+
+    @property
+    def scheduler(self) -> Scheduler:
+        if self._sched is None:
+            raise RuntimeError("engine not started — call start() first")
+        return self._sched
+
+    @property
+    def stats(self) -> SchedulerStats:
+        return self.scheduler.stats
+
+    def submit(self, prompt, max_new_tokens: int, *, enc_out=None) -> Request:
+        """Queue one request; it is admitted as soon as a slot frees up."""
+        self._check_fits(len(prompt), max_new_tokens)
+        return self.scheduler.submit(prompt, max_new_tokens, enc_out=enc_out)
+
+    def step(self) -> bool:
+        """One engine tick: admissions, one prefill chunk, one decode step.
+
+        Returns True while there is in-flight or queued work.
+        """
+        sched = self.scheduler
+        sched.tick += 1
+        for req in sched.admit():
+            # The slot's cache is blanked inside the request's first prefill
+            # chunk (fresh=True); until then the decode write-mask keeps the
+            # stale lane from touching it.
+            self._active[req.slot] = False
+            self._pos[req.slot] = 0
+            self._tok[req.slot] = 0
+            if req.enc_out is not None:
+                self._enc_row(req.slot, req.enc_out)
+        req = sched.next_prefill()
+        if req is not None:
+            self._advance_prefill(req)
+        decoding = sched.decoding()
+        if decoding:
+            self._decode_tick(decoding)
+        return sched.busy
+
+    def run(self) -> None:
+        """Drain: tick until the queue and every slot are empty."""
+        while self.step():
+            pass
+
+    # ---------------------------------------------------------------- batch
+    def generate(self, prompts: list[list[int]], max_new_tokens: int,
+                 *, temperature: float = 0.0, seed: int = 0,
+                 enc_out=None) -> list[list[int]]:
+        """Batch-mode wrapper: submit everything, drain, return in order."""
+        slots = self.max_slots if self.max_slots is not None else max(1, len(prompts))
+        self.start(min(slots, max(1, len(prompts))),
+                   temperature=temperature, seed=seed)
+        reqs = [self.submit(p, max_new_tokens,
+                            enc_out=None if enc_out is None else np.asarray(enc_out[i]))
+                for i, p in enumerate(prompts)]
+        self.run()
+        return [r.out for r in reqs]
+
+    # ------------------------------------------------------------ internals
+    def _enc_row(self, slot: int, enc_out) -> None:
+        # The buffer lives on device and is updated only at admission, so
+        # decode ticks reuse it without any per-token host→device transfer.
+        row = jnp.asarray(np.asarray(enc_out, np.float32))
+        if self._enc is None:
+            self._enc = jnp.zeros((self.scheduler.num_slots, *row.shape),
+                                  jnp.float32)
+        self._enc = self._enc.at[slot].set(row)
+
+    def _enc_all(self):
+        return self._enc
+
+    def _enc_one(self, slot: int):
+        return None if self._enc is None else self._enc[slot:slot + 1]
+
+    def _advance_prefill(self, req: Request) -> None:
+        slot = req.slot
+        if req.offset < req.padded:
+            chunk = self.prefill_chunk
+            blk = np.zeros((1, chunk), np.int32)
+            toks = req.prompt[req.offset:req.offset + chunk]
+            blk[0, :len(toks)] = toks
+            self._caches = self._prefill_jit(
+                self.params, self._caches, jnp.asarray(blk),
+                jnp.int32(req.offset), jnp.int32(slot), self._enc_one(slot),
+                fresh=req.offset == 0)
+            req.offset += chunk
+            self.stats.prefill_chunks += 1
+            return
+        # Finalize: drop padding entries, re-decode the last real token (the
+        # same sequence the single-request path runs) → first sampled token.
+        last = np.array([[req.prompt[-1]]], np.int32)
+        logits, self._caches = self._finalize_jit(
+            self.params, self._caches, jnp.asarray(last),
+            jnp.asarray(req.prompt_len, jnp.int32), jnp.int32(req.slot),
+            self._enc_one(slot))
+        req.prefilled = True
+        self._pos[slot] = req.prompt_len
+        self._emit(req, self._sample_host(logits[:, -1, :]))
+
+    def _sample_host(self, lg) -> int:
+        if self._temperature > 0:
+            self._key, sub = jax.random.split(self._key)
+            return int(jax.random.categorical(sub, lg / self._temperature, axis=-1)[0])
+        return int(jnp.argmax(lg, axis=-1)[0])
+
+    def _decode_tick(self, decoding: list[Request]) -> None:
+        active = self._active.copy()
+        key = self._key
+        if self._temperature > 0:
+            self._key, key = jax.random.split(self._key)
+        # Fresh device arrays each tick: jnp.asarray zero-copies aligned host
+        # buffers, and we mutate _tok/_pos right after the sync — hand the
+        # computation its own copy so an in-flight step can never see shifted
+        # positions (the PR-2 static-engine race).
+        nxt, self._caches = self._decode_jit(
+            self.params, self._caches, jnp.asarray(np.array(self._tok)),
+            jnp.asarray(np.array(self._pos)), jnp.asarray(active), key,
+            self._enc_all(), temperature=self._temperature)
+        st = self.stats
+        st.decode_steps += 1
+        st.lanes_total += len(decoding)
+        for req in decoding:
+            st.lanes_per_slot[req.slot] += 1
+        if self.scheduler.trace:
+            st.decode_active.append(tuple(bool(a) for a in active))
+        nxt = np.asarray(nxt)   # the one host sync per generated token
+        for req in decoding:
+            self._pos[req.slot] += 1
+            self._emit(req, int(nxt[req.slot]))
+
+    def _emit(self, req: Request, token: int) -> None:
+        if len(req.out) >= req.max_new_tokens:       # max_new_tokens == 0
+            self._evict(req, "length")
+            return
+        req.out.append(token)
+        self._tok[req.slot] = token
+        if token == self.eos:
+            self._evict(req, "eos")
+        elif len(req.out) >= req.max_new_tokens:
+            self._evict(req, "length")
+        else:
+            self._active[req.slot] = True
+
+    def _evict(self, req: Request, reason: str) -> None:
+        self._active[req.slot] = False
+        self.scheduler.evict(req, reason)
+
+
+@dataclass
+class StaticBatchEngine(_EngineBase):
+    """The pre-scheduler whole-batch loop, kept as the scheduling baseline.
+
+    The entire batch prefills together on a common padded grid and decodes
+    in lockstep until *every* request has hit EOS or ``max_new_tokens`` —
+    finished slots keep burning decode steps and arrivals cannot join a
+    running batch. ``benchmarks/serve_throughput.py`` measures exactly that
+    gap against :class:`ServeEngine`.
+    """
+
+    def __post_init__(self):
+        super().__post_init__()
         self._decode = jax.jit(self.model.decode_step)
 
     def _prefill(self, tokens: np.ndarray, lengths: np.ndarray, enc_out=None):
@@ -73,18 +400,8 @@ class ServeEngine:
             pos = jnp.full((b,), off, jnp.int32)
             logits, caches = self._decode(self.params, blk, caches, pos,
                                           enc_out=enc_out)
-        # Invalidate padded slots per request: positions >= length → -1.
-        lengths_j = jnp.asarray(lengths)
-
-        def fix(leaf):
-            if (hasattr(leaf, "dtype") and leaf.dtype == jnp.int32
-                    and leaf.ndim >= 2 and leaf.shape[-2] == b
-                    and leaf.shape[-1] == self.cache_len):
-                valid = leaf < lengths_j[..., None]
-                return jnp.where(valid & (leaf >= 0), leaf, -1)
-            return leaf
-
-        caches = jax.tree_util.tree_map(fix, caches)
+        # Drop padded entries per request: positions >= length → -1.
+        caches = self.model.invalidate_cache_padding(caches, jnp.asarray(lengths))
         return logits, caches
 
     def generate(self, prompts: list[list[int]], max_new_tokens: int,
@@ -92,11 +409,7 @@ class ServeEngine:
                  enc_out=None) -> list[list[int]]:
         b = len(prompts)
         lengths = np.array([len(p) for p in prompts], np.int32)
-        cfg = self.model.cfg
-        bounded = (any(k in ("attn", "xattn") for k in cfg.block_pattern)
-                   and not (cfg.window and self.cache_len <= cfg.window))
-        if bounded and int(lengths.max()) + max_new_tokens > self.cache_len:
-            raise ValueError(f"prompt+generation exceeds cache_len={self.cache_len}")
+        self._check_fits(int(lengths.max()), max_new_tokens)
         padded = int(max(self.prefill_chunk,
                          -(-int(lengths.max()) // self.prefill_chunk) * self.prefill_chunk))
         grid = np.zeros((b, padded), np.int32)

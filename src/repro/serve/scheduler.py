@@ -1,0 +1,141 @@
+"""Host-side request scheduler for the continuous-batching serve engine.
+
+The scheduler owns the *logical* serving state: a FIFO queue of submitted
+requests and a fixed pool of KV-cache slots. It is pure Python — no JAX —
+so every decision (admit, evict, which slot prefills next) is a cheap host
+operation, and the engine only has to turn those decisions into the three
+device-side primitives (`reset_cache_slots`, gather/scatter prefill,
+write-masked decode).
+
+Life of a request:
+
+    submit() → pending queue → admit() assigns a free slot → chunked prefill
+    advances ``offset`` through the padded prompt → finalize (position fix +
+    last-token decode) flips ``prefilled`` → per-token decode until EOS /
+    ``max_new_tokens`` → evict() frees the slot for the next pending request.
+
+``SchedulerStats`` records per-tick admissions/evictions and the active-slot
+mask of every decode step — the regression tests spy on it to prove that
+finished slots stop receiving decode compute.
+"""
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any
+
+__all__ = ["Request", "Scheduler", "SchedulerStats"]
+
+
+@dataclass
+class Request:
+    """One in-flight generation request (host bookkeeping only)."""
+
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    enc_out: Any | None = None          # (enc_seq, d) encoder output (enc-dec)
+    out: list[int] = field(default_factory=list)
+    slot: int | None = None             # pool slot while admitted
+    padded: int = 0                     # chunk-padded prefill length
+    offset: int = 0                     # next prefill chunk start
+    prefilled: bool = False             # prefill + finalize complete
+    done: bool = False
+    finish_reason: str | None = None    # "eos" | "length"
+    submit_tick: int = 0
+    finish_tick: int | None = None
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+
+@dataclass
+class SchedulerStats:
+    """Counters are always maintained (O(1) memory); the per-event lists —
+    ``admissions``/``evictions``/``decode_active`` — are the *trace*, kept
+    only while ``Scheduler(trace=True)`` (the default, what the spy tests
+    read). A long-running production stream should pass ``trace=False`` so
+    host memory stays flat regardless of tokens served."""
+
+    submitted: int = 0
+    finished: int = 0
+    prefill_chunks: int = 0
+    decode_steps: int = 0
+    lanes_total: int = 0                               # active decode lanes
+    lanes_per_slot: list = field(default_factory=list)
+    admissions: list = field(default_factory=list)    # (tick, slot, rid)
+    evictions: list = field(default_factory=list)     # (tick, slot, rid, reason)
+    decode_active: list = field(default_factory=list)  # per decode step: bool tuple
+
+    def decode_lane_count(self, slot: int | None = None) -> int:
+        """Active decode lanes across all steps (one slot, or all)."""
+        if slot is None:
+            return self.lanes_total
+        return self.lanes_per_slot[slot]
+
+
+class Scheduler:
+    """Admit-on-arrival / evict-on-EOS-or-length scheduler over a slot pool."""
+
+    def __init__(self, num_slots: int, *, chunk: int, trace: bool = True):
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        self.num_slots = num_slots
+        self.chunk = chunk
+        self.trace = trace
+        self.pending: deque[Request] = deque()
+        self.slots: list[Request | None] = [None] * num_slots
+        self.stats = SchedulerStats(lanes_per_slot=[0] * num_slots)
+        self.tick = 0
+        self._ids = itertools.count()
+
+    def submit(self, prompt, max_new_tokens: int, *, enc_out=None) -> Request:
+        if not len(prompt):
+            raise ValueError("empty prompt")
+        padded = max(self.chunk, -(-len(prompt) // self.chunk) * self.chunk)
+        req = Request(next(self._ids), [int(t) for t in prompt],
+                      int(max_new_tokens), enc_out=enc_out, padded=padded,
+                      submit_tick=self.tick)
+        self.pending.append(req)
+        self.stats.submitted += 1
+        return req
+
+    def admit(self) -> list[Request]:
+        """Fill free slots from the pending queue (arrival order); returns
+        the newly admitted requests."""
+        admitted = []
+        for slot, occupant in enumerate(self.slots):
+            if occupant is None and self.pending:
+                req = self.pending.popleft()
+                req.slot = slot
+                self.slots[slot] = req
+                if self.trace:
+                    self.stats.admissions.append((self.tick, slot, req.rid))
+                admitted.append(req)
+        return admitted
+
+    def evict(self, req: Request, reason: str) -> None:
+        assert req.slot is not None and self.slots[req.slot] is req
+        req.done = True
+        req.finish_reason = reason
+        req.finish_tick = self.tick
+        self.slots[req.slot] = None
+        if self.trace:
+            self.stats.evictions.append((self.tick, req.slot, req.rid, reason))
+        self.stats.finished += 1
+
+    def next_prefill(self) -> Request | None:
+        """Lowest-slot request that still has prefill (or finalize) to run."""
+        for req in self.slots:
+            if req is not None and not req.prefilled:
+                return req
+        return None
+
+    def decoding(self) -> list[Request]:
+        return [r for r in self.slots if r is not None and r.prefilled and not r.done]
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.pending) or any(r is not None for r in self.slots)

@@ -5,6 +5,8 @@ Responsibilities (the parts a pure train_step can't own):
     function of step);
   * swap to the phase-2 step function at the lazy-adapter boundary
     (``lazy_start_step``) — params/opt-state grafted, separate compiled graph;
+  * background data prefetch (``data.Prefetcher``): host batch construction
+    overlaps device compute; producer errors re-raise in the loop thread;
   * async checkpointing every ``checkpoint_every`` steps + final;
   * straggler watchdog: wall-clock per step vs. running median; slow steps
     are logged and counted (on a real fleet the ElasticPolicy would trigger a
@@ -21,6 +23,7 @@ import numpy as np
 
 from repro.configs.base import TrainConfig
 from repro.core.adapters import lazy_start_step
+from repro.data import Prefetcher
 from repro.ft.checkpoint import CheckpointManager, latest_step, restore_checkpoint
 from .state import TrainState, add_lazy_adapters, init_train_state
 from .step import make_train_step
@@ -66,7 +69,10 @@ def train_loop(model, tcfg: TrainConfig, data, *, ckpt_dir: str | None = None,
     phase2 = rank and start >= boundary
 
     times: list[float] = []
-    for step in range(start, tcfg.total_steps):
+    # Host batch construction runs on the Prefetcher thread (depth-2 queue),
+    # off the training critical path; a source error re-raises here instead
+    # of hanging the queue.
+    for step, host_batch in Prefetcher(data, start, tcfg.total_steps, depth=2):
         if rank and not phase2 and step >= boundary:
             log_fn(f"[loop] phase-2: adding rank-{rank} lazy adapters at step {step}")
             key, sub = jax.random.split(key)
@@ -75,7 +81,7 @@ def train_loop(model, tcfg: TrainConfig, data, *, ckpt_dir: str | None = None,
             step_fn = jax.jit(make_train_step(model, tcfg),
                               donate_argnums=(0,) if donate else ())
             phase2 = True
-        batch = {k: jax.numpy.asarray(v) for k, v in data.batch(step).items()}
+        batch = {k: jax.numpy.asarray(v) for k, v in host_batch.items()}
         t0 = time.perf_counter()
         state, metrics = step_fn(state, batch)
         loss = float(metrics["loss"])

@@ -40,3 +40,38 @@ def test_prefetcher_order_and_completeness():
     d = SyntheticLM(cfg, global_batch=2, seq_len=32, seed=0)
     steps = [s for s, _ in Prefetcher(d, 3, 9, depth=2)]
     assert steps == list(range(3, 9))
+
+
+def test_prefetcher_propagates_source_errors():
+    """A producer-thread exception must re-raise in the consumer instead of
+    leaving it blocked on the queue forever (the prefetch-hang bug: the None
+    end-of-stream sentinel was only enqueued on the success path)."""
+    import pytest
+
+    class Bad:
+        def batch(self, step):
+            if step == 3:
+                raise ValueError("bad shard at step 3")
+            return {"x": step}
+
+    seen = []
+    with pytest.raises(RuntimeError, match="prefetching"):
+        for s, _ in Prefetcher(Bad(), 0, 10, depth=2):
+            seen.append(s)
+    assert seen == [0, 1, 2]
+
+
+def test_prefetcher_depth_backpressure_not_required_for_drain():
+    """Small queue depth still drains fully (producer blocks, never drops)."""
+    class Counting:
+        def __init__(self):
+            self.calls = 0
+
+        def batch(self, step):
+            self.calls += 1
+            return step * 2
+
+    src = Counting()
+    got = list(Prefetcher(src, 0, 7, depth=1))
+    assert got == [(s, s * 2) for s in range(7)]
+    assert src.calls == 7

@@ -48,6 +48,65 @@ def test_atomicity_no_tmp_visible():
         assert not any(n.endswith(".tmp") for n in os.listdir(d))
 
 
+def test_stale_tmp_dir_not_mixed_into_rewrite():
+    """A crash between savez and rename leaves step_*.tmp behind; a rewrite
+    of the same step must start clean instead of mixing old and new files."""
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        stale = os.path.join(d, "step_00000005.tmp")
+        os.makedirs(stale)
+        with open(os.path.join(stale, "junk.bin"), "w") as f:
+            f.write("leftover from a crashed save")
+        path = save_checkpoint(d, t, step=5)
+        assert not os.path.exists(stale)
+        assert sorted(os.listdir(path)) == ["manifest.json", "state.npz"]
+        restored, step = restore_checkpoint(
+            d, jax.tree_util.tree_map(lambda x: jnp.zeros_like(x), t))
+        assert step == 5
+
+
+def test_orphan_tmp_dirs_swept_on_next_save():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, t, step=1)
+        orphan = os.path.join(d, "step_00000099.tmp")
+        os.makedirs(orphan)
+        save_checkpoint(d, t, step=2)
+        assert not os.path.exists(orphan)
+        assert latest_step(d) == 2
+
+
+def test_restore_strict_raises_on_unconsumed_keys():
+    """Stored leaves absent from the template must fail loudly — silently
+    dropping them is how phase-2 adapters vanished on restore."""
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, t, step=1)
+        partial = {"a": {"w": jnp.zeros((3, 4)),
+                         "b16": jnp.zeros((4,), jnp.bfloat16)}}
+        with pytest.raises(ValueError, match="does not consume"):
+            restore_checkpoint(d, partial)
+        restored, _ = restore_checkpoint(d, partial, strict=False)
+        np.testing.assert_array_equal(np.asarray(restored["a"]["w"]),
+                                      np.asarray(t["a"]["w"]))
+
+
+def test_manifest_records_adapter_presence():
+    from repro.ft import read_manifest
+
+    plain = {"layer": {"w": jnp.ones((4, 4))}}
+    with_lora = {"layer": {"w": jnp.ones((4, 4)),
+                           "lora": {"l": jnp.zeros((4, 3)),
+                                    "r": jnp.zeros((3, 4))}}}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, plain, step=1)
+        m = read_manifest(d, 1)
+        assert m["phase2"] is False and m["adapter_rank"] == 0
+        save_checkpoint(d, with_lora, step=2)
+        m = read_manifest(d)     # latest
+        assert m["phase2"] is True and m["adapter_rank"] == 3
+
+
 def test_async_manager():
     t = _tree()
     with tempfile.TemporaryDirectory() as d:
