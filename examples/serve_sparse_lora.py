@@ -92,6 +92,31 @@ def main():
           f"prefill chunks, {st.decode_lane_count()} active decode lanes "
           f"for {sum(len(r.out) for r in reqs)} tokens over 2 slots")
 
+    # 5. Paged KV serving: the same requests through a shared page pool.
+    # Every attention layer's KV lives in one (num_pages, page_size, kvh, dh)
+    # pool; a slot maps only the pages its tokens occupy, so admission gates
+    # on page availability instead of free slots — short requests stop
+    # paying for a long neighbour's full cache row. Tokens are bitwise
+    # identical to the contiguous layout. Per-request sampling params
+    # (temperature / top_k / seed) ride on each submit and are resolved
+    # per-slot inside the one jitted decode step (no retrace).
+    eng_paged = ServeEngine(model, state.params, cache_len=128,
+                            prefill_chunk=16, max_slots=4,
+                            cache_layout="paged", page_size=16, num_pages=16)
+    eng_paged.start()
+    paged_reqs = [eng_paged.submit(p, 8) for p in stream]
+    paged_reqs.append(eng_paged.submit(stream[0], 8, temperature=0.8,
+                                       top_k=8, seed=42))
+    while eng_paged.step():
+        pass
+    assert [r.out for r in paged_reqs[:len(reqs)]] == [r.out for r in reqs]
+    ps = eng_paged.stats
+    print(f"paged: tokens identical to contiguous; peak {ps.peak_admitted} "
+          f"admitted, {ps.peak_pages_in_use}/{eng_paged.scheduler.num_pages} "
+          f"pages in use at peak, {ps.pages_granted} grants "
+          f"(pages recycled across evictions)")
+    print(f"paged sampled req (T=0.8, top_k=8, seed=42): {paged_reqs[-1].out}")
+
 
 if __name__ == "__main__":
     main()

@@ -13,6 +13,11 @@ mixed prompt/generation lengths:
     PYTHONPATH=src python -m repro.launch.serve --arch gpt2-small --smoke \
         --stream --rate 4 --num-requests 32 --slots 4
 
+``--cache-layout paged`` (with ``--page-size`` / ``--num-pages``) serves the
+KV cache from a shared page pool: a slot holds only the pages its tokens
+occupy and admission gates on page availability, so a long request no longer
+pins a full cache row. Greedy tokens are bitwise identical across layouts.
+
 Checkpoint templates are built from the checkpoint's own manifest: a phase-2
 checkpoint (lazy low-rank adapters present) gets an adapter-bearing template
 via ``add_lazy_adapters``, so the adapters are actually restored —
@@ -80,8 +85,14 @@ def load_serving_state(ckpt_dir: str, model, key):
 
 
 def run_stream(eng, cfg, *, rate: float, num_requests: int, max_new: int,
-               seed: int = 0, temperature: float = 0.0, log=print) -> dict:
-    """Replay a Poisson(rate req/s) arrival stream through a started engine."""
+               seed: int = 0, temperature: float = 0.0, top_k: int = 0,
+               log=print) -> dict:
+    """Replay a Poisson(rate req/s) arrival stream through a started engine.
+
+    Sampling params ride on each request (``temperature``/``top_k`` from the
+    CLI, a per-request ``seed``), resolved per-slot inside the jitted decode
+    step — mixing them never retraces.
+    """
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate, num_requests))
     # Mixed prompt lengths, capped so prompt+generation fits the cache on
@@ -101,7 +112,9 @@ def run_stream(eng, cfg, *, rate: float, num_requests: int, max_new: int,
     from repro.serve import replay_stream
 
     eng.start(temperature=temperature, seed=seed)
-    trace = [(float(a), p, int(b)) for a, p, b in zip(arrivals, prompts, budgets)]
+    trace = [(float(a), p, int(b), None,
+              {"temperature": temperature, "top_k": top_k, "seed": seed + i})
+             for i, (a, p, b) in enumerate(zip(arrivals, prompts, budgets))]
     reqs, finish_at, elapsed = replay_stream(eng, trace, sleep_cap=0.05)
     tokens = sum(len(r.out) for r in reqs)
     lat = [finish_at[r.rid] - a for r, a in zip(reqs, arrivals)]
@@ -135,6 +148,19 @@ def main() -> None:
                     help="serve the training representation (reference path)")
     ap.add_argument("--quantize", default=None, choices=["none", "q8"],
                     help="freeze-time value quantization (default: config)")
+    from repro.models.cache import cache_layout_names
+
+    ap.add_argument("--cache-layout", default="contiguous",
+                    choices=cache_layout_names(),
+                    help="KV-cache layout: contiguous rows per slot, or a "
+                         "shared page pool (admission gates on pages)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged layout: tokens per KV page")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="paged layout: shared pool size per attention layer "
+                         "(default: capacity parity with contiguous)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="per-request top-k sampling filter (0 = off)")
     ap.add_argument("--stream", action="store_true",
                     help="Poisson request-stream mode (continuous batching)")
     ap.add_argument("--rate", type=float, default=4.0,
@@ -172,16 +198,19 @@ def main() -> None:
     train_bytes = tree_nbytes(params)
     eng = ServeEngine(model, params, cache_len=args.cache_len,
                       freeze=not args.no_freeze, quantize=args.quantize,
+                      cache_layout=args.cache_layout, page_size=args.page_size,
+                      num_pages=args.num_pages,
                       max_slots=args.slots if args.stream else None)
     frozen_bytes = tree_nbytes(eng.params)
     quant = "none" if args.no_freeze else (args.quantize or cfg.slope.quantize)
     print(f"[serve] backend={args.backend} frozen={not args.no_freeze} "
-          f"quantize={quant} "
+          f"quantize={quant} cache_layout={args.cache_layout} "
           f"params {train_bytes / 1e6:.2f}MB -> {frozen_bytes / 1e6:.2f}MB "
           f"({frozen_bytes / max(train_bytes, 1):.2f}x)")
     if args.stream:
         run_stream(eng, cfg, rate=args.rate, num_requests=args.num_requests,
-                   max_new=args.max_new, temperature=args.temperature)
+                   max_new=args.max_new, temperature=args.temperature,
+                   top_k=args.top_k)
         return
     rng = np.random.default_rng(0)
     prompts = [list(map(int, rng.integers(2, cfg.vocab_size, rng.integers(4, 12))))

@@ -24,20 +24,44 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SlopeConfig
 from repro.sharding.specs import constrain, policy_has
+from .cache import (CacheLayout, SlotOps, register_cache_layout, tree_gather,
+                    tree_scatter, tree_select)
 from .layers import apply_rope, make_linear, rope
 
-__all__ = ["make_attention", "KVCache", "init_kv_cache", "reset_kv_slots",
-           "invalidate_kv_padding", "chunked_attention"]
+__all__ = ["make_attention", "KVCache", "PagedKVCache", "init_kv_cache",
+           "init_paged_kv_cache", "reset_kv_slots", "invalidate_kv_padding",
+           "chunked_attention", "KV_SLOT_OPS"]
 
 NEG_INF = -1e30
 
 
 class KVCache(NamedTuple):
-    """Decode-time cache. ``rolling=True`` → size = window, slots reused."""
+    """Contiguous decode cache: one full row per slot.
+
+    ``rolling`` (size = window) reuses slots at ``pos % window``.
+    """
 
     k: jax.Array          # (b, cache_len, kv_heads, head_dim)
     v: jax.Array          # (b, cache_len, kv_heads, head_dim)
     positions: jax.Array  # (b, cache_len) absolute positions, -1 = empty
+
+
+class PagedKVCache(NamedTuple):
+    """Paged decode cache: one page pool shared by every slot.
+
+    A slot's logical row of ``max_pages * page_size`` entries is scattered
+    across pool pages through its ``page_table`` row (-1 = unmapped). The
+    ``positions`` table stays per-slot in logical order — it is the source
+    of truth for attention masking (exactly as in the contiguous layout),
+    which is what makes the two layouts bitwise interchangeable: entries an
+    unmapped/unwritten page would contribute are position-masked to
+    ``NEG_INF`` either way.
+    """
+
+    pool_k: jax.Array     # (num_pages, page_size, kv_heads, head_dim)
+    pool_v: jax.Array     # (num_pages, page_size, kv_heads, head_dim)
+    page_table: jax.Array  # (b, max_pages) int32 pool-page ids, -1 = unmapped
+    positions: jax.Array  # (b, max_pages * page_size) int32, -1 = empty
 
 
 def init_kv_cache(batch: int, cache_len: int, kv_heads: int, head_dim: int,
@@ -49,14 +73,61 @@ def init_kv_cache(batch: int, cache_len: int, kv_heads: int, head_dim: int,
     )
 
 
-def reset_kv_slots(cache: KVCache, free: jax.Array) -> KVCache:
-    """Blank the cache rows of batch slots where ``free`` is True.
+def init_paged_kv_cache(batch: int, cache_len: int, kv_heads: int,
+                        head_dim: int, *, page_size: int, num_pages: int = 0,
+                        dtype=jnp.bfloat16) -> PagedKVCache:
+    """Build an (empty-mapped) paged cache over ``cache_len`` logical slots.
 
-    ``free``: (b,) bool. Used by the continuous-batching scheduler to recycle
-    a KV slot for a newly admitted request without touching its neighbours
-    (k/v zeroed, position table back to the -1 "empty" sentinel).
+    ``num_pages=0`` sizes the pool for capacity parity with the contiguous
+    layout (``batch * cache_len // page_size``); a smaller pool is the whole
+    point — admission then gates on pages, not slots. The page table starts
+    unmapped (-1); the serve engine installs allocator-assigned rows via
+    ``set_pages`` before any slot writes.
+    """
+    if page_size < 1 or cache_len % page_size:
+        raise ValueError(f"page_size={page_size} must divide the logical "
+                         f"cache length {cache_len}")
+    max_pages = cache_len // page_size
+    num_pages = num_pages or batch * max_pages
+    return PagedKVCache(
+        pool_k=jnp.zeros((num_pages, page_size, kv_heads, head_dim), dtype),
+        pool_v=jnp.zeros((num_pages, page_size, kv_heads, head_dim), dtype),
+        page_table=jnp.full((batch, max_pages), -1, jnp.int32),
+        positions=jnp.full((batch, cache_len), -1, jnp.int32),
+    )
+
+
+def _owned_pages(page_table: jax.Array, slot_mask: jax.Array,
+                 num_pages: int) -> jax.Array:
+    """(num_pages,) bool: pages mapped by any slot where ``slot_mask``."""
+    idx = page_table.reshape(-1)
+    # -1 (unmapped) must be dropped, but jnp wraps negative indices — remap
+    # to num_pages, which stays out of bounds under mode="drop".
+    idx = jnp.where(idx < 0, jnp.int32(num_pages), idx)
+    vals = jnp.repeat(slot_mask.astype(jnp.int32), page_table.shape[-1])
+    hit = jnp.zeros((num_pages,), jnp.int32).at[idx].max(vals, mode="drop")
+    return hit.astype(bool)
+
+
+def reset_kv_slots(cache, free: jax.Array):
+    """Blank the cache of batch slots where ``free`` is True.
+
+    Contiguous: zero the slot's k/v row and reset its position row to the
+    -1 "empty" sentinel. Paged: reset the position row and zero the pool
+    pages *currently mapped* to the slot (pages granted later start masked
+    by the -1 positions, so stale pool data is never attended to).
     """
     free = free.astype(bool)
+    if isinstance(cache, PagedKVCache):
+        owned = _owned_pages(cache.page_table, free, cache.pool_k.shape[0])
+        return PagedKVCache(
+            pool_k=jnp.where(owned[:, None, None, None],
+                             jnp.zeros((), cache.pool_k.dtype), cache.pool_k),
+            pool_v=jnp.where(owned[:, None, None, None],
+                             jnp.zeros((), cache.pool_v.dtype), cache.pool_v),
+            page_table=cache.page_table,
+            positions=jnp.where(free[:, None], jnp.int32(-1), cache.positions),
+        )
     return KVCache(
         k=jnp.where(free[:, None, None, None], jnp.zeros((), cache.k.dtype), cache.k),
         v=jnp.where(free[:, None, None, None], jnp.zeros((), cache.v.dtype), cache.v),
@@ -64,16 +135,91 @@ def reset_kv_slots(cache: KVCache, free: jax.Array) -> KVCache:
     )
 
 
-def invalidate_kv_padding(cache: KVCache, lengths: jax.Array) -> KVCache:
+def invalidate_kv_padding(cache, lengths: jax.Array):
     """Mark entries written beyond each slot's real prompt as empty.
 
     Chunked prefill writes every chunk-padded position; entries whose stored
     absolute position is >= the slot's ``lengths`` are padding and get the
-    -1 "empty" sentinel so attention masks them out.
+    -1 "empty" sentinel so attention masks them out. Positions are stored
+    per-slot in logical order under both layouts, so this is layout-blind.
     """
     pos = cache.positions
     valid = (pos < lengths[:, None]) & (pos >= 0)
     return cache._replace(positions=jnp.where(valid, pos, jnp.int32(-1)))
+
+
+def gather_kv_slot(cache, slot):
+    """Batch-1 view of one slot. The paged pool is *shared*, so it passes
+    through whole — only the slot's page-table and position rows are sliced;
+    the batch-1 decode then reads/writes the pool through that row."""
+    if isinstance(cache, PagedKVCache):
+        return PagedKVCache(
+            pool_k=cache.pool_k,
+            pool_v=cache.pool_v,
+            page_table=jax.lax.dynamic_slice_in_dim(cache.page_table, slot, 1, 0),
+            positions=jax.lax.dynamic_slice_in_dim(cache.positions, slot, 1, 0),
+        )
+    return tree_gather(cache, slot)
+
+
+def scatter_kv_slot(cache, sub, slot):
+    """Write a batch-1 view back. Paged: the sub-view's pool IS the updated
+    shared pool (its writes landed on the slot's own pages, disjoint from
+    every other slot's), so it replaces the pool wholesale."""
+    if isinstance(cache, PagedKVCache):
+        return PagedKVCache(
+            pool_k=sub.pool_k,
+            pool_v=sub.pool_v,
+            page_table=jax.lax.dynamic_update_slice_in_dim(
+                cache.page_table, sub.page_table, slot, 0),
+            positions=jax.lax.dynamic_update_slice_in_dim(
+                cache.positions, sub.positions, slot, 0),
+        )
+    return tree_scatter(cache, sub, slot)
+
+
+def select_kv_slots(keep, new, old):
+    """Write-mask a decode step: slots where ``keep`` is False keep their
+    previous cache. Paged: restore the pool pages *owned* by masked slots
+    from the old pool (page ownership is unique — the allocator invariant
+    the property tests pin down), and slot-row-select the tables."""
+    keep = jnp.asarray(keep, bool)
+    if isinstance(new, PagedKVCache):
+        restore = _owned_pages(old.page_table, ~keep, old.pool_k.shape[0])
+        return PagedKVCache(
+            pool_k=jnp.where(restore[:, None, None, None], old.pool_k, new.pool_k),
+            pool_v=jnp.where(restore[:, None, None, None], old.pool_v, new.pool_v),
+            page_table=jnp.where(keep[:, None], new.page_table, old.page_table),
+            positions=jnp.where(keep[:, None], new.positions, old.positions),
+        )
+    return tree_select(keep, new, old)
+
+
+def set_kv_pages(cache, table):
+    """Install a host-built ``(slots, max_pages)`` page table (broadcast over
+    a scanned segment's stacked leading axis). No-op on contiguous caches."""
+    if isinstance(cache, PagedKVCache):
+        return cache._replace(page_table=jnp.broadcast_to(
+            jnp.asarray(table, jnp.int32), cache.page_table.shape))
+    return cache
+
+
+#: Slot-op bundle for attention KV caches — one set of functions serves both
+#: layouts by dispatching on the cache type, so the stack stays layout-blind.
+KV_SLOT_OPS = SlotOps(reset=reset_kv_slots, gather=gather_kv_slot,
+                      scatter=scatter_kv_slot, select=select_kv_slots,
+                      invalidate=invalidate_kv_padding, set_pages=set_kv_pages)
+
+
+register_cache_layout(CacheLayout(
+    name="contiguous", paged=False,
+    init_kv=lambda batch, eff_len, kvh, dh, dtype, spec:
+        init_kv_cache(batch, eff_len, kvh, dh, dtype=dtype)))
+register_cache_layout(CacheLayout(
+    name="paged", paged=True,
+    init_kv=lambda batch, eff_len, kvh, dh, dtype, spec:
+        init_paged_kv_cache(batch, eff_len, kvh, dh, page_size=spec.page_size,
+                            num_pages=spec.num_pages, dtype=dtype)))
 
 
 def _gqa_scores(q, k):
@@ -225,22 +371,50 @@ def make_attention(cfg: ModelConfig, *, sparse: bool, cross: bool = False,
         new_cache = None
         if cache is not None:
             # Decode / chunked prefill: write s new kv entries at per-request
-            # slots, attend over the cache. ``decode_pos``: (b,) int32.
-            cache_len = cache.k.shape[1]
+            # slots, attend over the cache. ``decode_pos``: (b,) int32. The
+            # logical cache length L and the per-slot position table are the
+            # same under both layouts; only where the KV bytes live differs.
+            cache_len = cache.positions.shape[1]
             if window > 0 and cache_len == window:
                 slot = decode_pos % window            # rolling (SWA long-context)
             else:
                 slot = decode_pos
             qpos = decode_pos[:, None] + jnp.arange(s)  # (b, s) absolute positions
-            k_new = jax.vmap(lambda ck, kn, sl: jax.lax.dynamic_update_slice_in_dim(ck, kn, sl, 0)
-                             )(cache.k, k.astype(cache.k.dtype), slot)
-            v_new = jax.vmap(lambda cv, vn, sl: jax.lax.dynamic_update_slice_in_dim(cv, vn, sl, 0)
-                             )(cache.v, v.astype(cache.v.dtype), slot)
             pos_new = jax.vmap(lambda pr, pv, sl: jax.lax.dynamic_update_slice_in_dim(pr, pv, sl, 0)
                                )(cache.positions, qpos.astype(jnp.int32), slot)
-            new_cache = KVCache(k_new, v_new, pos_new)
+            if isinstance(cache, PagedKVCache):
+                # Page-table-indexed path: the s written entries land on the
+                # slot's own pool pages; the read gathers the slot's KV
+                # blocks back through the table into the logical row layout,
+                # so the masked-softmax below is the *same computation* as
+                # the contiguous branch (bitwise — unmapped pages only ever
+                # contribute position-masked NEG_INF scores).
+                npages, ps = cache.pool_k.shape[:2]
+                start = jnp.clip(slot, 0, cache_len - s)   # dyn-update clamp
+                li = start[:, None] + jnp.arange(s)        # (b, s) logical idx
+                phys = jnp.take_along_axis(cache.page_table, li // ps, axis=1)
+                # unmapped rows (free slots decoding stale state) must drop,
+                # not wrap: remap -1 past the pool end under mode="drop".
+                phys = jnp.where(phys < 0, jnp.int32(npages), phys)
+                pool_k = cache.pool_k.at[phys, li % ps].set(
+                    k.astype(cache.pool_k.dtype), mode="drop")
+                pool_v = cache.pool_v.at[phys, li % ps].set(
+                    v.astype(cache.pool_v.dtype), mode="drop")
+                new_cache = PagedKVCache(pool_k, pool_v, cache.page_table, pos_new)
+                # (b, max_pages, page, kvh, dh) -> logical (b, L, kvh, dh);
+                # -1 table entries wrap to an arbitrary page — finite garbage
+                # the position mask zeroes exactly.
+                b_tbl = cache.page_table
+                k_new = pool_k[b_tbl].reshape(b, cache_len, kvh, dh)
+                v_new = pool_v[b_tbl].reshape(b, cache_len, kvh, dh)
+            else:
+                k_new = jax.vmap(lambda ck, kn, sl: jax.lax.dynamic_update_slice_in_dim(ck, kn, sl, 0)
+                                 )(cache.k, k.astype(cache.k.dtype), slot)
+                v_new = jax.vmap(lambda cv, vn, sl: jax.lax.dynamic_update_slice_in_dim(cv, vn, sl, 0)
+                                 )(cache.v, v.astype(cache.v.dtype), slot)
+                new_cache = KVCache(k_new, v_new, pos_new)
             scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k_new.astype(q.dtype)) * dh**-0.5
-            kp = new_cache.positions[:, None, None, None, :]   # (b,1,1,1,cache)
+            kp = pos_new[:, None, None, None, :]               # (b,1,1,1,cache)
             qp = qpos[:, None, None, :, None]                  # (b,1,1,s,1)
             msk = (kp <= qp) & (kp >= 0)
             if window > 0:

@@ -1,0 +1,170 @@
+"""Pluggable decode-cache layout abstraction (``contiguous`` | ``paged``).
+
+The continuous-batching scheduler sees every model's decode state as a pool
+of *slots*. How a block family stores a slot's state is its own business:
+
+  * attention KV is a big per-slot tensor — worth paging (a shared page pool
+    plus a per-slot page table, so HBM scales with tokens actually resident
+    instead of ``slots x cache_len``);
+  * recurrent states (RG-LRU, m/sLSTM) are O(1) per slot — paging buys
+    nothing, so those families register as *trivially contiguous* and keep
+    the plain slot-axis ops.
+
+This module owns the pieces both sides share:
+
+  * :class:`CacheSpec` — which layout to build and its page geometry; passed
+    through ``Model.init_caches(batch, cache_len, spec=...)``.
+  * the **layout registry** (:func:`register_cache_layout` /
+    :func:`get_cache_layout`): each layout supplies the KV-cache *construction*
+    (``attention.py`` registers both built-ins), so layout selection,
+    validation and CLI choices need no transformer/serve edits. The slot ops
+    themselves dispatch on the cache *type* (``attention.KV_SLOT_OPS``) — a
+    third layout must extend those alongside registering its constructor.
+  * :class:`SlotOps` — the per-block-family slot-op bundle the stack
+    assembles into ``transformer.CacheSlotOps``; :func:`contiguous_ops`
+    builds the default bundle (slot axis 0) from just a family reset, which
+    is how the recurrent state families register.
+
+Generic tree ops here implement the contiguous layout over arbitrary state
+pytrees; the paged layout's page-space counterparts live next to the paged
+KV cache in ``attention.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CacheSpec", "CacheLayout", "SlotOps", "register_cache_layout",
+           "get_cache_layout", "cache_layout_names", "contiguous_ops",
+           "tree_gather", "tree_scatter", "tree_select", "effective_kv_len",
+           "fit_page_size"]
+
+
+@dataclass(frozen=True)
+class CacheSpec:
+    """How to build a decode cache.
+
+    ``layout``: a registered cache-layout name (``contiguous`` | ``paged``).
+    ``page_size``: tokens per KV page (paged only); must divide the logical
+    cache length (``fit_page_size`` snaps a requested size to a divisor).
+    ``num_pages``: size of the shared page pool (paged only); 0 means
+    capacity parity with contiguous — ``batch * (eff_len // page_size)``.
+    """
+
+    layout: str = "contiguous"
+    page_size: int = 16
+    num_pages: int = 0
+
+
+@dataclass(frozen=True)
+class CacheLayout:
+    """One registered cache layout.
+
+    ``init_kv(batch, eff_len, kv_heads, head_dim, dtype, spec)`` builds an
+    attention KV cache in this layout; ``paged`` marks layouts whose KV
+    lives in a shared page pool (the serve engine only spins up the page
+    allocator for those). The registry covers construction/selection only:
+    the per-slot ops dispatch on the cache type in ``attention.KV_SLOT_OPS``,
+    which a new layout must extend for its own cache class.
+    """
+
+    name: str
+    paged: bool
+    init_kv: Callable
+
+
+_LAYOUTS: dict[str, CacheLayout] = {}
+
+
+def register_cache_layout(layout: CacheLayout) -> CacheLayout:
+    _LAYOUTS[layout.name] = layout
+    return layout
+
+
+def get_cache_layout(name: str) -> CacheLayout:
+    if name not in _LAYOUTS:
+        raise ValueError(f"unknown cache layout {name!r}; "
+                         f"registered: {cache_layout_names()}")
+    return _LAYOUTS[name]
+
+
+def cache_layout_names() -> tuple[str, ...]:
+    return tuple(sorted(_LAYOUTS))
+
+
+def effective_kv_len(cfg, cache_len: int) -> int:
+    """Logical KV length per slot: the rolling window caps it under SWA."""
+    if cfg.attention == "swa" and cfg.window:
+        return min(cache_len, cfg.window)
+    return cache_len
+
+
+def fit_page_size(eff_len: int, page_size: int) -> int:
+    """Largest divisor of ``eff_len`` that is <= ``page_size``."""
+    ps = max(1, min(page_size, eff_len))
+    while eff_len % ps:
+        ps -= 1
+    return ps
+
+
+class SlotOps(NamedTuple):
+    """Per-block-family operations on that family's decode-cache pytree.
+
+    The slot axis is axis 0 of every leaf for contiguous state; paged KV
+    implements the same contract in page space (``attention.py``).
+    """
+
+    reset: Callable       # (cache, free (slots,) bool)        -> cache
+    gather: Callable      # (cache, slot index)                -> batch-1 cache
+    scatter: Callable     # (cache, sub, slot index)           -> cache
+    select: Callable      # (keep (slots,) bool, new, old)     -> cache
+    invalidate: Callable  # (cache, lengths (slots,) int32)    -> cache
+    set_pages: Callable   # (cache, page_table (slots, mp))    -> cache
+
+
+def tree_gather(cache, slot):
+    """Lift one slot out as a batch-1 view (slot axis 0 on every leaf)."""
+    return jax.tree_util.tree_map(
+        lambda leaf: jax.lax.dynamic_slice_in_dim(leaf, slot, 1, 0), cache)
+
+
+def tree_scatter(cache, sub, slot):
+    """Write a batch-1 view back into its slot."""
+    return jax.tree_util.tree_map(
+        lambda leaf, sl: jax.lax.dynamic_update_slice_in_dim(
+            leaf, sl.astype(leaf.dtype), slot, 0), cache, sub)
+
+
+def tree_select(keep, new, old):
+    """Per-slot write-mask: slots where ``keep`` is False keep ``old``."""
+    keep = jnp.asarray(keep, bool)
+
+    def sel(nl, ol):
+        shape = [1] * nl.ndim
+        shape[0] = keep.shape[0]
+        return jnp.where(keep.reshape(shape), nl, ol)
+
+    return jax.tree_util.tree_map(sel, new, old)
+
+
+def contiguous_ops(reset: Callable, invalidate: Callable | None = None) -> SlotOps:
+    """SlotOps for a trivially-contiguous state family.
+
+    O(1)-per-slot states (recurrent hiddens, conv carries, xLSTM memories)
+    register with just their family ``reset``; everything else is the
+    generic slot-axis tree op. ``invalidate`` defaults to identity: a
+    recurrent prefill consumed its padding tokens exactly like the
+    full-batch path, so there is nothing to drop. ``set_pages`` is identity
+    — only paged KV carries a page table.
+    """
+    return SlotOps(
+        reset=reset,
+        gather=tree_gather,
+        scatter=tree_scatter,
+        select=tree_select,
+        invalidate=invalidate if invalidate is not None else (lambda c, lengths: c),
+        set_pages=lambda c, table: c,
+    )

@@ -7,12 +7,13 @@ Public surface used by train/serve/launch:
     logits, aux = model.forward(params, batch)          # train / prefill
     loss, metrics = model.loss(params, batch)
     logits, caches = model.decode_step(params, tokens, caches, pos, enc_out=None)
-    caches = model.init_caches(batch, cache_len)
+    caches = model.init_caches(batch, cache_len)            # or spec=CacheSpec("paged", ...)
     caches = model.reset_cache_slots(caches, free_mask)     # slot recycling
     sub    = model.gather_cache_slot(caches, slot)          # batch-1 prefill view
     caches = model.scatter_cache_slot(caches, sub, slot)
     caches = model.select_cache_slots(keep, new_caches, caches)  # write-mask
     caches = model.invalidate_cache_padding(caches, lengths)     # drop prefill pad
+    caches = model.set_cache_pages(caches, page_table)      # paged layout only
 
 Batch dict keys: "tokens" (b, s) int32; optional "labels" (b, s) int32 with
 -100 = ignore; "img_embeds" (b, n_img, d) for VLM (stub frontend output);
@@ -54,12 +55,14 @@ class Model(NamedTuple):
     # transformer.CacheSlotOps): reset_cache_slots(caches, free_mask),
     # gather_cache_slot(caches, slot), scatter_cache_slot(caches, sub, slot),
     # select_cache_slots(keep_mask, new_caches, old_caches),
-    # invalidate_cache_padding(caches, lengths).
+    # invalidate_cache_padding(caches, lengths),
+    # set_cache_pages(caches, page_table) — paged cache layout only.
     reset_cache_slots: Callable | None = None
     gather_cache_slot: Callable | None = None
     scatter_cache_slot: Callable | None = None
     select_cache_slots: Callable | None = None
     invalidate_cache_padding: Callable | None = None
+    set_cache_pages: Callable | None = None
 
 
 def cross_entropy_loss(logits: jax.Array, labels: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -173,8 +176,8 @@ def build_model(cfg: ModelConfig, *, q_chunk: int = 1024, kv_chunk: int = 1024,
         x = final_norm[1](p["final_norm"], x)
         return _head(p, x), new_caches
 
-    def init_caches(batch: int, cache_len: int):
-        return stack[2](batch, cache_len)
+    def init_caches(batch: int, cache_len: int, spec=None):
+        return stack[2](batch, cache_len, spec)
 
     slot_ops = stack[3]
     return Model(cfg, init, forward, loss, decode_step, init_caches,
@@ -182,4 +185,5 @@ def build_model(cfg: ModelConfig, *, q_chunk: int = 1024, kv_chunk: int = 1024,
                  gather_cache_slot=slot_ops.gather,
                  scatter_cache_slot=slot_ops.scatter,
                  select_cache_slots=slot_ops.select,
-                 invalidate_cache_padding=slot_ops.invalidate)
+                 invalidate_cache_padding=slot_ops.invalidate,
+                 set_cache_pages=slot_ops.set_pages)

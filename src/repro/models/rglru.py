@@ -22,9 +22,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from .cache import contiguous_ops
 from .layers import make_linear
 
-__all__ = ["make_rglru_block", "RGLRUState", "reset_rglru_slots"]
+__all__ = ["make_rglru_block", "RGLRUState", "reset_rglru_slots",
+           "RGLRU_SLOT_OPS"]
 
 _C = 8.0
 
@@ -42,6 +44,11 @@ def reset_rglru_slots(state: RGLRUState, free: jax.Array) -> RGLRUState:
         h=jnp.where(free[:, None], jnp.zeros((), state.h.dtype), state.h),
         conv=jnp.where(free[:, None, None], jnp.zeros((), state.conv.dtype), state.conv),
     )
+
+
+#: RG-LRU state is O(1) per slot — paging buys nothing, so the family
+#: registers with the trivially-contiguous slot ops (models/cache.py).
+RGLRU_SLOT_OPS = contiguous_ops(reset_rglru_slots)
 
 
 def make_rglru_block(cfg: ModelConfig, *, sparse: bool, dtype=jnp.bfloat16):

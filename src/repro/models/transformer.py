@@ -25,13 +25,13 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.sharding.specs import constrain
-from .attention import (KVCache, init_kv_cache, invalidate_kv_padding,
-                        make_attention, reset_kv_slots)
+from .attention import KV_SLOT_OPS, make_attention
+from .cache import (CacheSpec, SlotOps, effective_kv_len, get_cache_layout)
 from .layers import gelu_mlp_act, make_embedding, make_linear, make_norm, swiglu
 from .moe import make_moe_mlp
-from .rglru import make_rglru_block, reset_rglru_slots
-from .xlstm import (make_mlstm_block, make_slstm_block, reset_mlstm_slots,
-                    reset_slstm_slots)
+from .rglru import RGLRU_SLOT_OPS, make_rglru_block
+from .xlstm import (MLSTM_SLOT_OPS, SLSTM_SLOT_OPS, make_mlstm_block,
+                    make_slstm_block)
 
 __all__ = ["make_block", "make_decoder_stack", "Segment", "plan_layers",
            "CacheSlotOps"]
@@ -45,7 +45,14 @@ class CacheSlotOps(NamedTuple):
     ``gather``/``scatter`` lift one slot out for (and back after) chunked
     prefill at batch 1, and ``select`` write-masks a decode step so inactive
     lanes keep their previous cache (a slot mid-prefill must not be clobbered
-    by the batched decode running beside it).
+    by the batched decode running beside it). ``set_pages`` installs a
+    host-built page table into every paged KV leaf (no-op otherwise).
+
+    Each op is assembled from the per-block-family ``models.cache.SlotOps``
+    bundles — attention KV dispatches on its layout (contiguous | paged),
+    recurrent state families register as trivially contiguous — so a stack
+    mixing families (recurrentgemma, xlstm) routes every slot operation to
+    the right implementation without the engine knowing the difference.
     """
 
     reset: Callable       # (caches, free (slots,) bool) -> caches
@@ -53,6 +60,20 @@ class CacheSlotOps(NamedTuple):
     scatter: Callable     # (caches, sub, slot index)    -> caches
     select: Callable      # (keep (slots,) bool, new, old) -> caches
     invalidate: Callable  # (caches, lengths (slots,) int32) -> caches
+    set_pages: Callable   # (caches, page_table (slots, mp) int32) -> caches
+
+
+def _dict_ops(ops: SlotOps, key: str) -> SlotOps:
+    """Lift a family's SlotOps onto a {key: cache} wrapper (xattn blocks
+    cache only their self-attention under ``"self"``)."""
+    return SlotOps(
+        reset=lambda c, free: {key: ops.reset(c[key], free)},
+        gather=lambda c, slot: {key: ops.gather(c[key], slot)},
+        scatter=lambda c, sub, slot: {key: ops.scatter(c[key], sub[key], slot)},
+        select=lambda keep, new, old: {key: ops.select(keep, new[key], old[key])},
+        invalidate=lambda c, lengths: {key: ops.invalidate(c[key], lengths)},
+        set_pages=lambda c, table: {key: ops.set_pages(c[key], table)},
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -97,11 +118,13 @@ def make_mlp(cfg: ModelConfig, *, sparse: bool, dtype, nm=None):
 def make_block(cfg: ModelConfig, kind: str, *, sparse: bool, nm=None,
                causal: bool = True, dtype=jnp.bfloat16,
                q_chunk: int = 1024, kv_chunk: int = 1024, triangular: bool = False):
-    """Build one block. Returns (init, apply, init_cache).
+    """Build one block. Returns (init, apply, init_cache, slot_ops).
 
     apply(p, x, *, positions, cache, decode_pos, enc_out, enc_positions)
       → (x_new, new_cache, aux_loss)
-    ``cache`` is None in train/prefill mode.
+    ``cache`` is None in train/prefill mode. ``init_cache(batch, cache_len,
+    spec)`` builds this block's decode cache in the requested layout;
+    ``slot_ops`` is the family's ``models.cache.SlotOps`` bundle.
     """
     cfg = cfg if nm is None else cfg  # nm flows to linears explicitly below
     norm_f = make_norm(cfg.norm, cfg.d_model, dtype)
@@ -168,37 +191,27 @@ def make_block(cfg: ModelConfig, kind: str, *, sparse: bool, nm=None,
             x = x + y
         return x, new_cache, aux
 
-    def init_cache(batch: int, cache_len: int):
+    def init_cache(batch: int, cache_len: int, spec: CacheSpec):
         if kind in ("attn", "xattn"):
-            eff = min(cache_len, cfg.window) if (cfg.attention == "swa" and cfg.window) else cache_len
-            c = init_kv_cache(batch, eff, cfg.num_kv_heads, cfg.resolved_head_dim,
-                              dtype=jnp.bfloat16)
+            eff = effective_kv_len(cfg, cache_len)
+            c = get_cache_layout(spec.layout).init_kv(
+                batch, eff, cfg.num_kv_heads, cfg.resolved_head_dim,
+                jnp.bfloat16, spec)
             return {"self": c} if kind == "xattn" else c
         return rec[2](batch)
 
-    def reset_cache(cache, free):
-        """Blank the cache slots where ``free`` is True (kind-aware)."""
-        if kind == "xattn":
-            return {"self": reset_kv_slots(cache["self"], free)}
-        if kind == "attn":
-            return reset_kv_slots(cache, free)
-        if kind == "recurrent":
-            return reset_rglru_slots(cache, free)
-        if kind == "mlstm":
-            return reset_mlstm_slots(cache, free)
-        return reset_slstm_slots(cache, free)
+    if kind == "attn":
+        slot_ops = KV_SLOT_OPS
+    elif kind == "xattn":
+        slot_ops = _dict_ops(KV_SLOT_OPS, "self")
+    elif kind == "recurrent":
+        slot_ops = RGLRU_SLOT_OPS
+    elif kind == "mlstm":
+        slot_ops = MLSTM_SLOT_OPS
+    else:
+        slot_ops = SLSTM_SLOT_OPS
 
-    def invalidate_cache(cache, lengths):
-        """Drop prefill-padding entries past each slot's ``lengths``. Only
-        position-table caches carry padding; recurrent states pass through
-        (their prefill consumed the padding — same as the full-batch path)."""
-        if kind == "xattn":
-            return {"self": invalidate_kv_padding(cache["self"], lengths)}
-        if kind == "attn":
-            return invalidate_kv_padding(cache, lengths)
-        return cache
-
-    return init, apply, init_cache, reset_cache, invalidate_cache
+    return init, apply, init_cache, slot_ops
 
 
 # ---------------------------------------------------------------------------
@@ -347,10 +360,11 @@ def make_decoder_stack(cfg: ModelConfig, *, causal: bool = True,
                 new_caches.append(ncs)
         return x, (new_caches if caches is not None else None), aux_total
 
-    def init_caches(batch: int, cache_len: int):
+    def init_caches(batch: int, cache_len: int, spec: CacheSpec | None = None):
+        spec = spec if spec is not None else CacheSpec()
         caches = []
         for seg, mods in zip(segs, built):
-            one = lambda _mods=mods: tuple(m[2](batch, cache_len) for m in _mods)
+            one = lambda _mods=mods: tuple(m[2](batch, cache_len, spec) for m in _mods)
             if seg.scanned:
                 stacked = jax.tree_util.tree_map(
                     lambda x: jnp.broadcast_to(x, (seg.repeats, *x.shape)), one())
@@ -360,57 +374,60 @@ def make_decoder_stack(cfg: ModelConfig, *, causal: bool = True,
         return caches
 
     # ---- per-slot cache ops (continuous-batching scheduler) ---------------
-    # Scanned segments stack their leaves along a leading (repeats,) axis, so
-    # the batch/slot axis is 1 there and 0 everywhere else.
+    # Every op routes to the block family's SlotOps bundle (m[3]); scanned
+    # segments stack their leaves along a leading (repeats,) axis, so the
+    # family op is vmapped over it (closures over the slot/mask operands
+    # broadcast). ``set_pages`` is the exception: the paged page-table leaf
+    # broadcasts over the stacked axis directly, no vmap needed.
+
+    def _per_block(op_name, scanned_vmap=True):
+        def run(caches, *args):
+            out = []
+            for seg, mods, c in zip(segs, built, caches):
+                def one(gc, _mods=mods):
+                    return tuple(getattr(m[3], op_name)(bc, *args)
+                                 for m, bc in zip(_mods, gc))
+                out.append(jax.vmap(one)(c) if seg.scanned and scanned_vmap
+                           else one(c))
+            return out
+        return run
+
+    _reset_blocks = _per_block("reset")
+    _gather_blocks = _per_block("gather")
+    _invalidate_blocks = _per_block("invalidate")
+    _set_pages_blocks = _per_block("set_pages", scanned_vmap=False)
 
     def _reset(caches, free):
-        free = jnp.asarray(free, bool)
-        out = []
-        for seg, mods, c in zip(segs, built, caches):
-            def one(gc, _mods=mods):
-                return tuple(m[3](bc, free) for m, bc in zip(_mods, gc))
-            out.append(jax.vmap(one)(c) if seg.scanned else one(c))
-        return out
+        return _reset_blocks(caches, jnp.asarray(free, bool))
 
     def _gather(caches, slot):
-        out = []
-        for seg, c in zip(segs, caches):
-            ax = 1 if seg.scanned else 0
-            out.append(jax.tree_util.tree_map(
-                lambda leaf, _ax=ax: jax.lax.dynamic_slice_in_dim(leaf, slot, 1, _ax), c))
-        return out
+        return _gather_blocks(caches, slot)
 
     def _scatter(caches, sub, slot):
         out = []
-        for seg, c, s in zip(segs, caches, sub):
-            ax = 1 if seg.scanned else 0
-            out.append(jax.tree_util.tree_map(
-                lambda leaf, sl, _ax=ax: jax.lax.dynamic_update_slice_in_dim(
-                    leaf, sl.astype(leaf.dtype), slot, _ax), c, s))
+        for seg, mods, c, s in zip(segs, built, caches, sub):
+            def one(gc, gs, _mods=mods):
+                return tuple(m[3].scatter(bc, bs, slot)
+                             for m, bc, bs in zip(_mods, gc, gs))
+            out.append(jax.vmap(one)(c, s) if seg.scanned else one(c, s))
         return out
 
     def _select(keep, new, old):
         keep = jnp.asarray(keep, bool)
         out = []
-        for seg, nc, oc in zip(segs, new, old):
-            ax = 1 if seg.scanned else 0
-
-            def sel(nl, ol, _ax=ax):
-                shape = [1] * nl.ndim
-                shape[_ax] = keep.shape[0]
-                return jnp.where(keep.reshape(shape), nl, ol)
-
-            out.append(jax.tree_util.tree_map(sel, nc, oc))
+        for seg, mods, nc, oc in zip(segs, built, new, old):
+            def one(gn, go, _mods=mods):
+                return tuple(m[3].select(keep, bn, bo)
+                             for m, bn, bo in zip(_mods, gn, go))
+            out.append(jax.vmap(one)(nc, oc) if seg.scanned else one(nc, oc))
         return out
 
     def _invalidate(caches, lengths):
-        lengths = jnp.asarray(lengths, jnp.int32)
-        out = []
-        for seg, mods, c in zip(segs, built, caches):
-            def one(gc, _mods=mods):
-                return tuple(m[4](bc, lengths) for m, bc in zip(_mods, gc))
-            out.append(jax.vmap(one)(c) if seg.scanned else one(c))
-        return out
+        return _invalidate_blocks(caches, jnp.asarray(lengths, jnp.int32))
+
+    def _set_pages(caches, table):
+        return _set_pages_blocks(caches, jnp.asarray(table, jnp.int32))
 
     return init, apply, init_caches, CacheSlotOps(_reset, _gather, _scatter,
-                                                  _select, _invalidate)
+                                                  _select, _invalidate,
+                                                  _set_pages)

@@ -24,10 +24,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from .cache import contiguous_ops
 from .layers import make_linear
 
 __all__ = ["make_mlstm_block", "make_slstm_block", "MLSTMState", "SLSTMState",
-           "reset_mlstm_slots", "reset_slstm_slots"]
+           "reset_mlstm_slots", "reset_slstm_slots", "MLSTM_SLOT_OPS",
+           "SLSTM_SLOT_OPS"]
 
 
 class MLSTMState(NamedTuple):
@@ -64,6 +66,12 @@ def reset_slstm_slots(state: SLSTMState, free: jax.Array) -> SLSTMState:
         h=jnp.where(free, z, state.h),
         m=jnp.where(free, jnp.asarray(-1e30, state.m.dtype), state.m),
     )
+
+
+#: xLSTM memories are O(1) per slot — both families register with the
+#: trivially-contiguous slot ops (models/cache.py).
+MLSTM_SLOT_OPS = contiguous_ops(reset_mlstm_slots)
+SLSTM_SLOT_OPS = contiguous_ops(reset_slstm_slots)
 
 
 def _mlstm_chunk(q, k, v, log_i, log_f, state: MLSTMState):

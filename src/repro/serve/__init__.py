@@ -1,2 +1,2 @@
 from .engine import ServeEngine, StaticBatchEngine, replay_stream
-from .scheduler import Request, Scheduler, SchedulerStats
+from .scheduler import PageAllocator, Request, Scheduler, SchedulerStats

@@ -1,37 +1,49 @@
-"""Continuous-batching serve engine: slot-stable decode + interleaved prefill.
+"""Continuous-batching serve engine: paged KV slots + per-request sampling.
 
 Serving is where SLoPe pays off hardest on TPU: decode is bandwidth-bound,
 and the compressed weights cut the per-token HBM weight traffic ~2× (the
-paper's 1.54× inference speedup). But kernels only win end-to-end if the
-scheduler keeps them fed — a static batch waits for its slowest request,
-finished slots burn decode steps, and new arrivals stall until the batch
-drains. This engine replaces that loop with vLLM-style continuous batching:
+paper's 1.54× inference speedup). With q8 weights at 0.328× of dense bf16,
+the KV cache is the dominant serving allocation — so the engine attacks it
+on two axes, scheduling and layout:
 
   * a ``serve.scheduler.Scheduler`` owns the request queue and a fixed pool
-    of KV-cache slots — requests are **admitted on arrival** into any free
+    of decode slots — requests are **admitted on arrival** into any free
     slot and **evicted on EOS or length**, immediately freeing the slot;
+  * under ``cache_layout="paged"`` every attention layer's KV lives in one
+    shared **page pool** and a slot maps only the pages its tokens occupy
+    (per-slot page table, host-side allocator in the scheduler): serve
+    memory drops from O(slots × cache_len) to O(tokens actually resident),
+    and **admission gates on page availability instead of free slots** — a
+    short request no longer pins a long request's worth of HBM. The engine
+    pushes allocator grants to the device via ``Model.set_cache_pages``; the
+    default ``cache_layout="contiguous"`` keeps the one-row-per-slot layout;
   * decode is a **slot-stable jitted step** over the whole pool (one
-    compilation per pool size): sampling runs on device, the active-slot
-    mask write-protects lanes that are free or mid-prefill
-    (``Model.select_cache_slots``), and the only host sync per generated
-    token is the sampled-token fetch that drives admission/eviction;
+    compilation per pool size): sampling runs on device with **per-request
+    params** — each ``Request(temperature, top_k, seed)`` is resolved
+    per-slot from array contents inside the jitted step, so mixing sampling
+    settings never retraces — and the only host sync per generated token is
+    the sampled-token fetch that drives admission/eviction;
   * prefill of a newly admitted request runs **chunked at batch 1** through
     the same cache path (``Model.gather_cache_slot`` → ``decode_step`` →
     ``scatter_cache_slot``), one chunk per engine tick, so it *interleaves*
     with in-flight decode instead of barriering the batch;
   * slot recycling is ``Model.reset_cache_slots`` — the per-family cache
-    owners (attention KV, RG-LRU, m/sLSTM) blank exactly one batch row.
+    owners (attention KV in either layout, RG-LRU, m/sLSTM) blank exactly
+    one slot.
 
 Because every per-request computation (batch-1 prefill chunks, the position
 fix, the last-token re-decode, per-row decode lanes) is the same math the
-single-request path runs, greedy tokens are bitwise identical to
-single-request decode regardless of what shares the pool — the
-tests/test_serve_scheduler.py streaming-admission suite pins this down.
+single-request path runs — and the paged read path reconstructs the exact
+logical KV rows the contiguous layout stores — greedy tokens are bitwise
+identical to single-request decode regardless of layout or what shares the
+pool; the tests/test_serve_scheduler.py streaming-admission and paged-parity
+suites pin this down.
 
 ``ServeEngine.generate`` keeps the old batch-mode API on top (submit all,
 drain, return outputs in order). ``StaticBatchEngine`` preserves the
 previous whole-batch loop as the scheduling baseline for
-``benchmarks/serve_throughput.py``.
+``benchmarks/serve_throughput.py`` (it supports the paged layout too, but
+pins every slot's full row — capacity parity, no packing win).
 """
 from __future__ import annotations
 
@@ -42,18 +54,61 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.cache import (CacheSpec, effective_kv_len, fit_page_size,
+                                get_cache_layout)
 from repro.models.model_zoo import Model
 
-from .scheduler import Request, Scheduler, SchedulerStats
+from .scheduler import Request, Scheduler, SchedulerStats, padded_len
 
 __all__ = ["ServeEngine", "StaticBatchEngine", "replay_stream"]
+
+
+def _sample_tokens(lg, temps, topks, seeds, ntoks):
+    """Per-lane next-token sampling from per-slot parameter *arrays*.
+
+    ``lg``: (slots, V) last-position logits. ``temps``/``topks`` select the
+    distribution per lane (temp <= 0 → greedy argmax, bitwise the pre-
+    sampling behavior); ``seeds``/``ntoks`` make a lane's randomness a pure
+    function of (request seed, token index), so a request's sampled stream
+    is reproducible regardless of which slot it lands in or what shares the
+    pool. All parameters are array contents — no per-request retrace.
+    """
+    greedy = jnp.argmax(lg, axis=-1)
+
+    def sample(_):
+        scaled = lg.astype(jnp.float32) / jnp.where(temps > 0, temps, 1.0)[:, None]
+        vocab = lg.shape[-1]
+        srt = jnp.sort(scaled, axis=-1)[:, ::-1]
+        kth = jnp.take_along_axis(srt, jnp.clip(topks - 1, 0, vocab - 1)[:, None],
+                                  axis=1)
+        masked = jnp.where((topks > 0)[:, None] & (scaled < kth), -jnp.inf,
+                           scaled)
+
+        def one(seed, n, row):
+            key = jax.random.fold_in(jax.random.PRNGKey(seed), n)
+            return jax.random.categorical(key, row)
+
+        sampled = jax.vmap(one)(seeds, ntoks, masked)
+        return jnp.where(temps > 0, sampled, greedy)
+
+    # An all-greedy pool (the default) skips the O(slots·V log V) sort and
+    # the discarded categorical draw at runtime — same single trace.
+    nxt = jax.lax.cond(jnp.any(temps > 0), sample, lambda _: greedy, None)
+    return nxt.astype(jnp.int32)
+
+
+# The finalize path samples one row host-side; eager lax.cond re-traces both
+# branches per call (~100ms/request), so the host path must be jitted too.
+_sample_tokens_jit = jax.jit(_sample_tokens)
 
 
 def replay_stream(eng: "ServeEngine", trace, *, sleep_cap: float = 0.02):
     """Replay an arrival trace through a *started* engine in real time.
 
     ``trace``: sequence of ``(arrival_s, prompt, max_new)`` tuples (an
-    optional 4th element is the request's ``enc_out``). Each request is
+    optional 4th element is the request's ``enc_out``; an optional 5th is a
+    dict of extra ``submit`` kwargs — per-request ``temperature`` / ``top_k``
+    / ``seed``). Each request is
     submitted once the engine's wall clock passes its arrival time; the
     engine ticks until drained, sleeping (capped at ``sleep_cap``) while
     idle before the next arrival. Shared by ``launch/serve.py --stream``
@@ -71,8 +126,10 @@ def replay_stream(eng: "ServeEngine", trace, *, sleep_cap: float = 0.02):
         now = time.perf_counter() - t0
         while i < len(trace) and trace[i][0] <= now:
             item = trace[i]
+            kw = dict(item[4]) if len(item) > 4 else {}
             reqs.append(eng.submit(item[1], item[2],
-                                   enc_out=item[3] if len(item) > 3 else None))
+                                   enc_out=item[3] if len(item) > 3 else None,
+                                   **kw))
             i += 1
         if not eng.step() and i < len(trace):
             time.sleep(max(0.0, min(trace[i][0] - (time.perf_counter() - t0),
@@ -97,7 +154,16 @@ class _EngineBase:
     to int8 values + per-group scales at freeze time (dequant-in-kernel; the
     weight payload drops to ~0.33× of dense bf16). Default ``None`` follows
     ``model.cfg.slope.quantize``; layers trained as ``compressed_q8`` serve
-    quantized regardless."""
+    quantized regardless.
+
+    ``cache_layout`` picks the registered KV-cache layout (``contiguous`` |
+    ``paged``). Paged: ``page_size`` tokens per page (snapped to a divisor
+    of the logical KV length) and ``num_pages`` sizing the shared pool per
+    attention layer — ``None`` means capacity parity with contiguous
+    (``slots * eff_len / page_size``); a *smaller* pool is the point: it
+    converts HBM headroom into admitted concurrency. Models without KV
+    caches (pure recurrent) ignore the layout — their O(1) states always
+    serve contiguously."""
 
     model: Model
     params: dict
@@ -106,9 +172,19 @@ class _EngineBase:
     eos: int = 1
     freeze: bool = True
     quantize: str | None = None
+    cache_layout: str = "contiguous"
+    page_size: int = 16
+    num_pages: int | None = None
 
     def __post_init__(self):
         self.prefill_chunk = min(self.prefill_chunk, self.cache_len)
+        layout = get_cache_layout(self.cache_layout)   # validates the name
+        cfg = self.model.cfg
+        self._has_kv = any(k in ("attn", "xattn") for k in cfg.block_pattern)
+        self._paged = layout.paged and self._has_kv
+        self._eff_len = effective_kv_len(cfg, self.cache_len) if self._has_kv else 0
+        if self._paged:
+            self.page_size = fit_page_size(self._eff_len, self.page_size)
         if self.freeze:
             from repro.models.freeze import freeze_for_inference
             self.params = freeze_for_inference(self.model, self.params,
@@ -119,6 +195,12 @@ class _EngineBase:
             raise ValueError(
                 f"quantize={self.quantize!r} requires freeze=True "
                 "(freeze-time quantization)")
+
+    def _cache_spec(self, batch: int) -> CacheSpec:
+        if not self._paged:
+            return CacheSpec()
+        npg = self.num_pages or batch * (self._eff_len // self.page_size)
+        return CacheSpec("paged", self.page_size, npg)
 
     def _bounded(self) -> bool:
         cfg = self.model.cfg
@@ -135,8 +217,7 @@ class _EngineBase:
         """
         if not self._bounded():
             return
-        padded = max(self.prefill_chunk,
-                     -(-prompt_len // self.prefill_chunk) * self.prefill_chunk)
+        padded = padded_len(prompt_len, self.prefill_chunk)
         if prompt_len + max_new > self.cache_len or padded > self.cache_len:
             raise ValueError(
                 f"prompt ({prompt_len} tokens, chunk-padded {padded}) + "
@@ -191,41 +272,53 @@ class ServeEngine(_EngineBase):
                                           enc_out=enc_out)
             return logits, mdl.scatter_cache_slot(caches, sub, slot)
 
-        def _decode_fn(params, caches, tok, pos, active, key, enc_out=None,
-                       *, temperature):
+        def _decode_fn(params, caches, tok, pos, active, temps, topks, seeds,
+                       ntoks, enc_out=None):
             logits, new_caches = mdl.decode_step(params, tok[:, None], caches,
                                                  pos, enc_out=enc_out)
-            lg = logits[:, -1, :]
-            if temperature > 0:
-                nxt = jax.random.categorical(key, lg / temperature, axis=-1)
-            else:
-                nxt = jnp.argmax(lg, axis=-1)
+            # Per-request sampling params live in per-slot arrays: one trace
+            # serves every temperature/top_k/seed mix.
+            nxt = _sample_tokens(logits[:, -1, :], temps, topks, seeds, ntoks)
             # Write-mask: free / mid-prefill lanes keep their previous cache.
             new_caches = mdl.select_cache_slots(active, new_caches, caches)
-            return nxt.astype(jnp.int32), new_caches
+            return nxt, new_caches
 
         self._prefill_jit = jax.jit(_prefill_chunk_fn,
                                     static_argnames=("fresh",))
         self._finalize_jit = jax.jit(_finalize_fn)
-        self._decode_jit = jax.jit(_decode_fn, static_argnames=("temperature",))
+        self._decode_jit = jax.jit(_decode_fn)
         self._sched: Scheduler | None = None
 
     # ------------------------------------------------------------------ run
     def start(self, num_slots: int | None = None, *, temperature: float = 0.0,
               seed: int = 0) -> None:
-        """(Re)initialize the slot pool; drops any previous run state."""
+        """(Re)initialize the slot pool; drops any previous run state.
+
+        ``temperature``/``seed`` are the *defaults* a request inherits when
+        it doesn't carry its own sampling params (a default-seeded request
+        uses ``seed + rid`` so lanes decorrelate deterministically).
+        """
         slots = num_slots if num_slots is not None else self.max_slots
         if slots is None:
             raise ValueError("pass num_slots (or construct with max_slots=...)")
-        self._sched = Scheduler(slots, chunk=self.prefill_chunk,
-                                trace=self.trace_stats)
-        self._caches = self.model.init_caches(slots, self.cache_len)
+        spec = self._cache_spec(slots)
+        self._sched = Scheduler(
+            slots, chunk=self.prefill_chunk, trace=self.trace_stats,
+            page_size=spec.page_size if self._paged else 0,
+            num_pages=spec.num_pages if self._paged else 0,
+            eff_len=self._eff_len if self._paged else 0)
+        self._caches = self.model.init_caches(slots, self.cache_len, spec=spec)
         self._pos = np.zeros(slots, np.int32)
         self._tok = np.zeros(slots, np.int32)
         self._active = np.zeros(slots, bool)
+        self._temp = np.zeros(slots, np.float32)
+        self._topk = np.zeros(slots, np.int32)
+        self._seedv = np.zeros(slots, np.uint32)
+        self._ntok = np.zeros(slots, np.int32)
         self._enc = None        # device-resident (slots, enc_seq, d) on demand
         self._temperature = float(temperature)
-        self._key = jax.random.PRNGKey(seed)
+        self._seed = int(seed)
+        self._tbl_dirty = False
 
     @property
     def scheduler(self) -> Scheduler:
@@ -237,10 +330,19 @@ class ServeEngine(_EngineBase):
     def stats(self) -> SchedulerStats:
         return self.scheduler.stats
 
-    def submit(self, prompt, max_new_tokens: int, *, enc_out=None) -> Request:
-        """Queue one request; it is admitted as soon as a slot frees up."""
+    def submit(self, prompt, max_new_tokens: int, *, enc_out=None,
+               temperature: float | None = None, top_k: int = 0,
+               seed: int | None = None) -> Request:
+        """Queue one request; it is admitted as soon as a slot (and, under
+        paging, its worst-case page reservation) frees up. ``temperature`` /
+        ``top_k`` / ``seed`` override the engine defaults per request."""
         self._check_fits(len(prompt), max_new_tokens)
-        return self.scheduler.submit(prompt, max_new_tokens, enc_out=enc_out)
+        # A request whose page need exceeds the whole pool would deadlock at
+        # the head of the pending queue — reject it up front instead.
+        self.scheduler.check_capacity(len(prompt), max_new_tokens)
+        return self.scheduler.submit(prompt, max_new_tokens, enc_out=enc_out,
+                                     temperature=temperature, top_k=top_k,
+                                     seed=seed)
 
     def step(self) -> bool:
         """One engine tick: admissions, one prefill chunk, one decode step.
@@ -256,15 +358,50 @@ class ServeEngine(_EngineBase):
             self._active[req.slot] = False
             self._pos[req.slot] = 0
             self._tok[req.slot] = 0
+            self._temp[req.slot] = (self._temperature if req.temperature is None
+                                    else req.temperature)
+            self._topk[req.slot] = req.top_k
+            seed = (self._seed + req.rid) if req.seed is None else req.seed
+            self._seedv[req.slot] = np.uint32(seed & 0xFFFFFFFF)
+            self._ntok[req.slot] = 0
             if req.enc_out is not None:
                 self._enc_row(req.slot, req.enc_out)
         req = sched.next_prefill()
         if req is not None:
+            # Grant the pages this chunk's writes will touch (against the
+            # admission reservation — can't fail) and push the table before
+            # the prefill runs.
+            if sched.paged:
+                extent = (req.offset + sched.chunk if req.offset < req.padded
+                          else req.prompt_len)
+                self._tbl_dirty |= sched.ensure_pages(req, extent)
+            self._push_pages()
             self._advance_prefill(req)
+        # The decoding set must be snapshotted *after* the prefill advance: a
+        # request that finalized this tick is active from this very decode
+        # step, and running its lane without emitting (or vice versa) would
+        # double-step recurrent state / desync lane accounting.
         decoding = sched.decoding()
         if decoding:
+            if sched.paged:
+                for r in decoding:
+                    self._tbl_dirty |= sched.ensure_pages(
+                        r, int(self._pos[r.slot]) + 1)
+            self._push_pages()
             self._decode_tick(decoding)
         return sched.busy
+
+    def _push_pages(self) -> None:
+        """Sync the scheduler's host page table to the device caches.
+
+        np.array copy before jnp.asarray: the scheduler mutates its table in
+        place (grants/evictions) and jnp.asarray zero-copies aligned host
+        buffers — the PR-2 aliasing race class.
+        """
+        if self._tbl_dirty:
+            self._caches = self.model.set_cache_pages(
+                self._caches, jnp.asarray(np.array(self.scheduler.page_table)))
+            self._tbl_dirty = False
 
     def run(self) -> None:
         """Drain: tick until the queue and every slot are empty."""
@@ -324,27 +461,30 @@ class ServeEngine(_EngineBase):
             self._enc_one(slot))
         req.prefilled = True
         self._pos[slot] = req.prompt_len
-        self._emit(req, self._sample_host(logits[:, -1, :]))
+        self._emit(req, self._sample_host(logits[:, -1, :], slot))
 
-    def _sample_host(self, lg) -> int:
-        if self._temperature > 0:
-            self._key, sub = jax.random.split(self._key)
-            return int(jax.random.categorical(sub, lg / self._temperature, axis=-1)[0])
-        return int(jnp.argmax(lg, axis=-1)[0])
+    def _sample_host(self, lg, slot: int) -> int:
+        """First (finalize-produced) token: the same sampling math as the
+        jitted decode lanes, on one row — a request's sampled stream is a
+        pure function of (seed, token index, logits)."""
+        nxt = _sample_tokens_jit(lg, jnp.asarray(self._temp[slot:slot + 1]),
+                                 jnp.asarray(self._topk[slot:slot + 1]),
+                                 jnp.asarray(self._seedv[slot:slot + 1]),
+                                 jnp.asarray(self._ntok[slot:slot + 1]))
+        return int(nxt[0])
 
     def _decode_tick(self, decoding: list[Request]) -> None:
         active = self._active.copy()
-        key = self._key
-        if self._temperature > 0:
-            self._key, key = jax.random.split(self._key)
         # Fresh device arrays each tick: jnp.asarray zero-copies aligned host
         # buffers, and we mutate _tok/_pos right after the sync — hand the
         # computation its own copy so an in-flight step can never see shifted
         # positions (the PR-2 static-engine race).
         nxt, self._caches = self._decode_jit(
             self.params, self._caches, jnp.asarray(np.array(self._tok)),
-            jnp.asarray(np.array(self._pos)), jnp.asarray(active), key,
-            self._enc_all(), temperature=self._temperature)
+            jnp.asarray(np.array(self._pos)), jnp.asarray(active),
+            jnp.asarray(np.array(self._temp)), jnp.asarray(np.array(self._topk)),
+            jnp.asarray(np.array(self._seedv)), jnp.asarray(np.array(self._ntok)),
+            self._enc_all())
         st = self.stats
         st.decode_steps += 1
         st.lanes_total += len(decoding)
@@ -363,6 +503,7 @@ class ServeEngine(_EngineBase):
             return
         req.out.append(token)
         self._tok[req.slot] = token
+        self._ntok[req.slot] += 1
         if token == self.eos:
             self._evict(req, "eos")
         elif len(req.out) >= req.max_new_tokens:
@@ -373,6 +514,10 @@ class ServeEngine(_EngineBase):
     def _evict(self, req: Request, reason: str) -> None:
         self._active[req.slot] = False
         self.scheduler.evict(req, reason)
+        if self.scheduler.paged:
+            # Eviction cleared the slot's host page-table row (and freed its
+            # pages); push before they can be re-granted to a neighbour.
+            self._tbl_dirty = True
 
 
 @dataclass
@@ -392,7 +537,18 @@ class StaticBatchEngine(_EngineBase):
 
     def _prefill(self, tokens: np.ndarray, lengths: np.ndarray, enc_out=None):
         b, padded = tokens.shape
-        caches = self.model.init_caches(b, self.cache_len)
+        spec = self._cache_spec(b)
+        caches = self.model.init_caches(b, self.cache_len, spec=spec)
+        if self._paged:
+            # Lockstep decode keeps every slot live for the whole batch, so
+            # each pins its full logical row: a static identity page map.
+            mp = self._eff_len // spec.page_size
+            if spec.num_pages < b * mp:
+                raise ValueError(
+                    f"StaticBatchEngine pins a full row per slot: batch {b} "
+                    f"needs {b * mp} pages, pool has {spec.num_pages}")
+            tbl = np.arange(b * mp, dtype=np.int32).reshape(b, mp)
+            caches = self.model.set_cache_pages(caches, jnp.asarray(tbl))
         chunk = min(self.prefill_chunk, padded)
         logits = None
         for off in range(0, padded, chunk):
@@ -410,8 +566,7 @@ class StaticBatchEngine(_EngineBase):
         b = len(prompts)
         lengths = np.array([len(p) for p in prompts], np.int32)
         self._check_fits(int(lengths.max()), max_new_tokens)
-        padded = int(max(self.prefill_chunk,
-                         -(-int(lengths.max()) // self.prefill_chunk) * self.prefill_chunk))
+        padded = padded_len(int(lengths.max()), self.prefill_chunk)
         grid = np.zeros((b, padded), np.int32)
         for i, p in enumerate(prompts):
             grid[i, :len(p)] = np.asarray(p, np.int32)

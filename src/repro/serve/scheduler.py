@@ -1,22 +1,49 @@
-"""Host-side request scheduler for the continuous-batching serve engine.
+"""Host-side request scheduler: slot pool + paged KV-page allocator.
 
 The scheduler owns the *logical* serving state: a FIFO queue of submitted
-requests and a fixed pool of KV-cache slots. It is pure Python — no JAX —
-so every decision (admit, evict, which slot prefills next) is a cheap host
-operation, and the engine only has to turn those decisions into the three
-device-side primitives (`reset_cache_slots`, gather/scatter prefill,
-write-masked decode).
+requests, a fixed pool of decode slots, and — under the paged cache layout —
+the **page pool** that actually bounds admission. It is pure Python — no JAX
+— so every decision (admit, evict, which slot prefills next, which pool page
+backs a slot's next KV block) is a cheap host operation; the engine only has
+to turn those decisions into device primitives (`reset_cache_slots`,
+gather/scatter prefill, write-masked decode, `set_cache_pages`).
+
+Memory model
+------------
+Contiguous layout: a slot pins a full ``cache_len`` KV row for its whole
+lifetime, so admission is **slot-limited** — one long request costs the same
+HBM as a short one. Paged layout: every attention layer shares one page pool
+``(num_pages, page_size, kv_heads, head_dim)`` and a slot holds only the
+pages its tokens actually need, so admission is **memory-limited**:
+
+  * ``admit`` *reserves* the request's worst-case page need up front
+    (``ceil(min(max(padded, prompt+max_new), eff_len) / page_size)``) — the
+    FIFO head waits until the reservation fits, which keeps admission
+    deadlock-free without preemption while still letting short requests pack
+    many-per-pool;
+  * physical pages are *granted lazily* (``ensure_pages``) as prefill/decode
+    growth crosses page boundaries, against the reservation;
+  * ``evict`` returns the request's pages and any ungranted reservation.
+
+``page_table`` (host numpy, ``(num_slots, max_pages)`` int32, -1 = unmapped)
+mirrors the allocator state; the engine pushes it into the device caches via
+``Model.set_cache_pages`` whenever a grant or eviction dirties it. Pages are
+uniquely owned — never free and mapped, never mapped twice — which is the
+invariant the device-side write-masking relies on (`select_kv_slots` restores
+inactive slots' pages by ownership) and the allocator property test pins down.
 
 Life of a request:
 
-    submit() → pending queue → admit() assigns a free slot → chunked prefill
-    advances ``offset`` through the padded prompt → finalize (position fix +
-    last-token decode) flips ``prefilled`` → per-token decode until EOS /
-    ``max_new_tokens`` → evict() frees the slot for the next pending request.
+    submit() → pending queue → admit() assigns a free slot + reserves pages →
+    chunked prefill advances ``offset`` through the padded prompt (pages
+    granted per chunk) → finalize (position fix + last-token decode) flips
+    ``prefilled`` → per-token decode until EOS / ``max_new_tokens`` (pages
+    granted on growth) → evict() frees the slot and its pages.
 
-``SchedulerStats`` records per-tick admissions/evictions and the active-slot
-mask of every decode step — the regression tests spy on it to prove that
-finished slots stop receiving decode compute.
+``SchedulerStats`` counts admissions/evictions/lanes plus page-pool highs
+(``peak_admitted``, ``peak_pages_in_use``) — the regression tests spy on the
+trace to prove finished slots stop receiving decode compute, the bench reads
+the peaks for the equal-HBM concurrency comparison.
 """
 from __future__ import annotations
 
@@ -25,7 +52,18 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any
 
-__all__ = ["Request", "Scheduler", "SchedulerStats"]
+import numpy as np
+
+__all__ = ["Request", "Scheduler", "SchedulerStats", "PageAllocator",
+           "padded_len"]
+
+
+def padded_len(prompt_len: int, chunk: int) -> int:
+    """Chunk-padded prefill span: prefill writes every position of every
+    ``chunk``-sized block it touches. The one definition shared by request
+    padding, page-need accounting, and the engines' admission checks — they
+    must agree or the reservation guarantee breaks."""
+    return max(chunk, -(-prompt_len // chunk) * chunk)
 
 
 @dataclass
@@ -36,6 +74,11 @@ class Request:
     prompt: list[int]
     max_new_tokens: int
     enc_out: Any | None = None          # (enc_seq, d) encoder output (enc-dec)
+    # Per-request sampling params, resolved per-slot inside the jitted decode
+    # step (array contents, not trace constants — no per-request retrace).
+    temperature: float | None = None    # None → engine default
+    top_k: int = 0                      # 0 → no top-k filtering
+    seed: int | None = None             # None → engine seed + rid
     out: list[int] = field(default_factory=list)
     slot: int | None = None             # pool slot while admitted
     padded: int = 0                     # chunk-padded prefill length
@@ -45,10 +88,59 @@ class Request:
     finish_reason: str | None = None    # "eos" | "length"
     submit_tick: int = 0
     finish_tick: int | None = None
+    pages: list[int] = field(default_factory=list)  # granted pool pages
+    page_need: int = 0                  # worst-case pages reserved at admission
 
     @property
     def prompt_len(self) -> int:
         return len(self.prompt)
+
+
+class PageAllocator:
+    """Free-list page allocator with reservations.
+
+    ``reserve(n)`` promises n pages to a request without picking them (the
+    admission gate); ``take()`` grants one physical page against an existing
+    reservation; ``give(pages)`` returns pages on eviction. The reservation
+    discipline guarantees ``take`` can never fail for an admitted request —
+    growth never deadlocks on pages held by neighbours.
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        self.num_pages = num_pages
+        self._free: deque[int] = deque(range(num_pages))
+        self.reserved = 0
+
+    @property
+    def free_count(self) -> int:
+        """Pages not granted to any request (some may be reserved)."""
+        return len(self._free)
+
+    @property
+    def available(self) -> int:
+        """Pages neither granted nor reserved — the admission headroom."""
+        return len(self._free) - self.reserved
+
+    def reserve(self, n: int) -> bool:
+        if n > self.available:
+            return False
+        self.reserved += n
+        return True
+
+    def unreserve(self, n: int) -> None:
+        assert 0 <= n <= self.reserved
+        self.reserved -= n
+
+    def take(self) -> int:
+        """Grant one page against a prior reservation."""
+        assert self.reserved > 0 and self._free, "take() without reservation"
+        self.reserved -= 1
+        return self._free.popleft()
+
+    def give(self, pages) -> None:
+        self._free.extend(pages)
 
 
 @dataclass
@@ -65,6 +157,9 @@ class SchedulerStats:
     decode_steps: int = 0
     lanes_total: int = 0                               # active decode lanes
     lanes_per_slot: list = field(default_factory=list)
+    peak_admitted: int = 0                             # max concurrent slots
+    pages_granted: int = 0                             # cumulative page grants
+    peak_pages_in_use: int = 0                         # max concurrent pages
     admissions: list = field(default_factory=list)    # (tick, slot, rid)
     evictions: list = field(default_factory=list)     # (tick, slot, rid, reason)
     decode_active: list = field(default_factory=list)  # per decode step: bool tuple
@@ -77,9 +172,16 @@ class SchedulerStats:
 
 
 class Scheduler:
-    """Admit-on-arrival / evict-on-EOS-or-length scheduler over a slot pool."""
+    """Admit-on-arrival / evict-on-EOS-or-length scheduler over a slot pool.
 
-    def __init__(self, num_slots: int, *, chunk: int, trace: bool = True):
+    With ``num_pages > 0`` the scheduler also runs the page allocator:
+    admission additionally requires the FIFO head's worst-case page need to
+    fit the unreserved pool (``page_size`` / ``eff_len`` give the page
+    geometry of the engine's paged KV caches).
+    """
+
+    def __init__(self, num_slots: int, *, chunk: int, trace: bool = True,
+                 page_size: int = 0, num_pages: int = 0, eff_len: int = 0):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         self.num_slots = num_slots
@@ -90,30 +192,102 @@ class Scheduler:
         self.stats = SchedulerStats(lanes_per_slot=[0] * num_slots)
         self.tick = 0
         self._ids = itertools.count()
+        self.paged = num_pages > 0
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.eff_len = eff_len
+        if self.paged:
+            if page_size < 1 or eff_len < 1 or eff_len % page_size:
+                raise ValueError(
+                    f"paged scheduler needs page_size dividing eff_len, got "
+                    f"page_size={page_size} eff_len={eff_len}")
+            self.allocator = PageAllocator(num_pages)
+            self.max_pages_per_slot = eff_len // page_size
+            self.page_table = np.full((num_slots, self.max_pages_per_slot),
+                                      -1, np.int32)
+        else:
+            self.allocator = None
+            self.page_table = None
 
-    def submit(self, prompt, max_new_tokens: int, *, enc_out=None) -> Request:
+    # ------------------------------------------------------------- requests
+    def submit(self, prompt, max_new_tokens: int, *, enc_out=None,
+               temperature: float | None = None, top_k: int = 0,
+               seed: int | None = None) -> Request:
         if not len(prompt):
             raise ValueError("empty prompt")
-        padded = max(self.chunk, -(-len(prompt) // self.chunk) * self.chunk)
+        padded = padded_len(len(prompt), self.chunk)
         req = Request(next(self._ids), [int(t) for t in prompt],
-                      int(max_new_tokens), enc_out=enc_out, padded=padded,
-                      submit_tick=self.tick)
+                      int(max_new_tokens), enc_out=enc_out,
+                      temperature=temperature, top_k=int(top_k), seed=seed,
+                      padded=padded, submit_tick=self.tick)
         self.pending.append(req)
         self.stats.submitted += 1
         return req
 
+    # ---------------------------------------------------------------- pages
+    def page_need(self, prompt_len: int, padded: int, max_new: int) -> int:
+        """Worst-case pages a request can touch: prefill writes every padded
+        position and decode extends to prompt+max_new, both capped at the
+        logical length (a rolling window reuses its own pages)."""
+        extent = min(max(padded, prompt_len + max_new), self.eff_len)
+        return -(-extent // self.page_size)
+
+    def check_capacity(self, prompt_len: int, max_new: int) -> None:
+        """Reject a request whose page need can *never* be satisfied — it
+        would sit at the head of the pending queue forever (the admission
+        deadlock the paged layout must not introduce)."""
+        if not self.paged:
+            return
+        need = self.page_need(prompt_len, padded_len(prompt_len, self.chunk),
+                              max_new)
+        if need > self.num_pages:
+            raise ValueError(
+                f"request needs {need} KV pages (prompt {prompt_len}, "
+                f"max_new {max_new}, page_size {self.page_size}); the pool "
+                f"only has {self.num_pages} — it could never be admitted")
+
+    def ensure_pages(self, req: Request, extent: int) -> bool:
+        """Grant pages (against the admission reservation) until the slot's
+        mapped span covers ``extent`` tokens. Returns True when the page
+        table changed and must be re-pushed to the device caches."""
+        if not self.paged:
+            return False
+        target = min(-(-min(extent, self.eff_len) // self.page_size),
+                     req.page_need)
+        changed = False
+        while len(req.pages) < target:
+            page = self.allocator.take()
+            self.page_table[req.slot, len(req.pages)] = page
+            req.pages.append(page)
+            changed = True
+            self.stats.pages_granted += 1
+        in_use = self.num_pages - self.allocator.free_count
+        self.stats.peak_pages_in_use = max(self.stats.peak_pages_in_use, in_use)
+        return changed
+
+    # ------------------------------------------------------------ lifecycle
     def admit(self) -> list[Request]:
         """Fill free slots from the pending queue (arrival order); returns
-        the newly admitted requests."""
+        the newly admitted requests. Under paging the FIFO head additionally
+        waits for its worst-case page reservation to fit."""
         admitted = []
         for slot, occupant in enumerate(self.slots):
             if occupant is None and self.pending:
-                req = self.pending.popleft()
+                req = self.pending[0]
+                if self.paged:
+                    need = self.page_need(req.prompt_len, req.padded,
+                                          req.max_new_tokens)
+                    if not self.allocator.reserve(need):
+                        break               # head-of-line waits for pages
+                    req.page_need = need
+                self.pending.popleft()
                 req.slot = slot
                 self.slots[slot] = req
                 if self.trace:
                     self.stats.admissions.append((self.tick, slot, req.rid))
                 admitted.append(req)
+        active = sum(1 for r in self.slots if r is not None)
+        self.stats.peak_admitted = max(self.stats.peak_admitted, active)
         return admitted
 
     def evict(self, req: Request, reason: str) -> None:
@@ -122,6 +296,12 @@ class Scheduler:
         req.finish_reason = reason
         req.finish_tick = self.tick
         self.slots[req.slot] = None
+        if self.paged:
+            self.allocator.give(req.pages)
+            self.allocator.unreserve(req.page_need - len(req.pages))
+            self.page_table[req.slot, :] = -1
+            req.pages = []
+            req.page_need = 0
         if self.trace:
             self.stats.evictions.append((self.tick, req.slot, req.rid, reason))
         self.stats.finished += 1

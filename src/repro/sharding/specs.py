@@ -214,6 +214,12 @@ def cache_specs(caches, mesh: Mesh, *, batch_size: int | None = None,
     (EXPERIMENTS.md §Perf, decode hillclimb). ``kv_shard="heads"`` restores
     head sharding (falls back to dh, then seq, on divisibility).
 
+    Paged-layout pool leaves (..., num_pages, page, kvh, dh) shard like the
+    KV cache they replace: the page axis *is* the cache sequence axis cut
+    into blocks, so ``kv_shard="seq"`` shards pages over tp (each device
+    holds a page shard of every slot's row) and ``kv_shard="heads"`` moves
+    the shard to kvh/dh. The page table is a tiny int32 map — replicated.
+
     Recurrent-state leaves: batch (identified by ``batch_size``) over dp;
     last feature dim over tp when divisible.
     """
@@ -224,6 +230,16 @@ def cache_specs(caches, mesh: Mesh, *, batch_size: int | None = None,
         shape = leaf.shape
         nd = len(shape)
         p = _path_str(path)
+        if nd >= 4 and ("/pool_k/" in p or "/pool_v/" in p):
+            lead = [None] * (nd - 4)
+            if kv_shard == "heads":
+                for cand in ([None, None, tp, None], [None, None, None, tp]):
+                    t = _tail(mesh, shape[-4:], cand)
+                    if any(x is not None for x in t):
+                        return P(*(lead + t))
+            return P(*(lead + _tail(mesh, shape[-4:], [tp, None, None, None])))
+        if "/page_table/" in p:
+            return P(*([None] * nd))
         if nd >= 4 and ("/k/" in p or "/v/" in p):
             lead = [None] * (nd - 4)
             if kv_shard == "heads":

@@ -1,10 +1,13 @@
-"""Continuous-batching scheduler: streaming admission, eviction, slot reuse.
+"""Continuous-batching scheduler: streaming admission, eviction, slot reuse,
+paged KV layout, per-request sampling.
 
 The engine's contract is that *scheduling is invisible in the tokens*:
-whatever mix of admissions, evictions and slot recycling happens around a
-request, its greedy continuation is bitwise identical to running it alone.
-The spy tests additionally pin down that finished slots stop receiving
-decode compute (the static-batch waste this PR removes).
+whatever mix of admissions, evictions, slot recycling — and, under the paged
+cache layout, page granting/reuse — happens around a request, its greedy
+continuation is bitwise identical to running it alone (and to the contiguous
+layout). The spy tests additionally pin down that finished slots stop
+receiving decode compute, and the allocator property test that no pool page
+is ever leaked or owned by two slots.
 """
 import dataclasses
 
@@ -15,7 +18,7 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import build_model
-from repro.serve import ServeEngine, StaticBatchEngine
+from repro.serve import Scheduler, ServeEngine, StaticBatchEngine
 
 
 def _setup(name="gpt2-small", **slope_kw):
@@ -200,6 +203,260 @@ def test_rejects_chunk_padded_prefill_overflow():
                           prefill_chunk=16).generate([prompt], 2)
     # a fitting request still goes through
     assert len(eng.generate([[5, 6, 7]], 2)[0]) <= 2
+
+
+# ---------------------------------------------------------------------------
+# Paged KV-cache layout: bitwise parity, page-gated admission, allocator.
+# ---------------------------------------------------------------------------
+
+
+PAGED_ARCHS = ["gpt2-small",          # full attention
+               "mixtral-8x22b",       # rolling window (SWA) + MoE
+               "recurrentgemma-9b",   # mixed recurrent + windowed attn
+               "xlstm-125m",          # pure recurrent (no KV: layout no-op)
+               "whisper-tiny"]        # encoder-decoder (xattn blocks)
+
+
+def _staggered(eng, prompts, max_new, enc=None):
+    """Deterministic staggered-admission schedule (arrivals at ticks 2/5/9
+    while the pool is busy) shared by both layouts."""
+    eng.start()
+
+    def sub(i):
+        return eng.submit(prompts[i], max_new,
+                          enc_out=None if enc is None else enc[i])
+
+    reqs = [sub(0), sub(1)]
+    n, ticks = 2, 0
+    while eng.step():
+        ticks += 1
+        if ticks in (2, 5, 9) and n < len(prompts):
+            reqs.append(sub(n))
+            n += 1
+    while n < len(prompts):            # drained early: serve the stragglers
+        reqs.append(sub(n))
+        n += 1
+        eng.run()
+    return [r.out for r in reqs]
+
+
+@pytest.mark.parametrize("arch", PAGED_ARCHS)
+def test_paged_layout_matches_contiguous_bitwise(arch):
+    """Greedy tokens under streaming admission are bitwise identical between
+    the paged and contiguous layouts — with mid-stream EOS eviction and a
+    pool small enough to force page-gated admission and page reuse."""
+    cfg, model, params = _setup(arch)
+    rng = np.random.default_rng(0)
+    enc = None
+    if cfg.is_encoder_decoder:
+        enc = (rng.standard_normal((5, cfg.encoder_seq, cfg.d_model))
+               .astype(np.float32) * 0.02)
+    prompts = [[5, 6, 7], [9, 10, 11, 12, 13, 14], [3], [4] * 9, [8] * 5]
+    kw = dict(cache_len=64, prefill_chunk=8, max_slots=2)
+    # an eos the model actually emits → at least one request evicts early
+    probe = ServeEngine(model, params, eos=-1, **kw)
+    eos = probe.generate([prompts[0]], 6,
+                         enc_out=None if enc is None else enc[:1])[0][2]
+
+    eng_c = ServeEngine(model, params, eos=eos, **kw)
+    eng_p = ServeEngine(model, params, eos=eos, cache_layout="paged",
+                        page_size=4, num_pages=8, **kw)
+    outs_c = _staggered(eng_c, prompts, 6, enc)
+    outs_p = _staggered(eng_p, prompts, 6, enc)
+    assert outs_p == outs_c
+    sched = eng_p.scheduler
+    if sched.paged:                     # pure-recurrent archs have no KV pool
+        alloc = sched.allocator
+        # every page returned, none leaked; table fully unmapped
+        assert alloc.free_count == alloc.num_pages and alloc.reserved == 0
+        assert (sched.page_table == -1).all()
+        # 5 requests through a tiny pool → pages were recycled across evicts
+        assert sched.stats.pages_granted > sched.stats.peak_pages_in_use
+        assert sched.stats.peak_pages_in_use <= alloc.num_pages
+
+
+def test_paged_admission_gates_on_pages_not_slots():
+    """With a pool smaller than slots × per-request need, admission becomes
+    memory-limited: fewer concurrent requests than free slots, same tokens."""
+    cfg, model, params = _setup()
+    prompts = [[7, 8, 9, 10], [11, 12, 13], [5, 6], [14] * 6]
+    kw = dict(cache_len=64, prefill_chunk=8, max_slots=4, eos=-1)
+    eng_c = ServeEngine(model, params, **kw)
+    outs_c = eng_c.generate(prompts, 6)
+    # per-request need ceil(max(8, len+6)/8): 2+2+1+2 pages for a 3-page
+    # pool → at most two requests (2+1 pages) ever co-resident
+    eng_p = ServeEngine(model, params, cache_layout="paged", page_size=8,
+                        num_pages=3, **kw)
+    outs_p = eng_p.generate(prompts, 6)
+    assert outs_p == outs_c
+    assert eng_c.stats.peak_admitted == 4      # slot-limited: all at once
+    assert eng_p.stats.peak_admitted == 2      # page-limited admission
+    assert eng_p.stats.finished == len(prompts)
+
+
+def test_paged_submit_rejects_never_fitting_request():
+    """A request whose page need exceeds the whole pool must be rejected at
+    submit — queued, it would deadlock at the head of the pending queue
+    (admission can never reserve it). Fitting traffic still drains."""
+    cfg, model, params = _setup()
+    eng = ServeEngine(model, params, cache_len=64, prefill_chunk=8,
+                      max_slots=2, eos=-1, cache_layout="paged",
+                      page_size=8, num_pages=4)
+    eng.start()
+    # 40 + 16 = 56 <= cache_len=64 passes the contiguous-era check, but
+    # needs ceil(56/8) = 7 pages against a 4-page pool.
+    with pytest.raises(ValueError, match="could never be admitted"):
+        eng.submit(list(range(2, 42)), 16)
+    # the contiguous cache_len rejection is untouched
+    with pytest.raises(ValueError, match="cache_len"):
+        eng.submit(list(range(2, 62)), 16)
+    reqs = [eng.submit([5, 6, 7], 4), eng.submit([9, 10], 4)]
+    eng.run()
+    assert all(r.done and len(r.out) == 4 for r in reqs)
+
+
+def test_page_allocator_no_leak_no_double_ownership():
+    """Property test over random admit/grow/evict schedules: pool pages are
+    uniquely owned, never leaked, and reservations account exactly for the
+    ungranted remainder of every admitted request."""
+    for seed in range(4):
+        rng = np.random.default_rng(seed)
+        sched = Scheduler(3, chunk=4, page_size=4, num_pages=10, eff_len=32)
+        alloc = sched.allocator
+
+        def check():
+            admitted = [r for r in sched.slots if r is not None]
+            owned = [p for r in admitted for p in r.pages]
+            assert len(owned) == len(set(owned)), "page double-owned"
+            free = list(alloc._free)
+            assert sorted(owned + free) == list(range(10)), "page leaked"
+            assert alloc.reserved == sum(r.page_need - len(r.pages)
+                                         for r in admitted)
+            for r in admitted:
+                row = sched.page_table[r.slot]
+                assert list(row[:len(r.pages)]) == r.pages
+                assert (row[len(r.pages):] == -1).all()
+
+        for _ in range(300):
+            op = rng.integers(4)
+            if op == 0:                                   # submit
+                from repro.serve.scheduler import padded_len
+                pl = int(rng.integers(1, 24))
+                mn = int(rng.integers(1, 12))
+                if sched.page_need(pl, padded_len(pl, sched.chunk),
+                                   mn) <= sched.num_pages:
+                    sched.submit(list(range(pl)), mn)
+            elif op == 1:                                 # admit
+                sched.admit()
+            elif op == 2:                                 # grow a random slot
+                admitted = [r for r in sched.slots if r is not None]
+                if admitted:
+                    r = admitted[int(rng.integers(len(admitted)))]
+                    sched.ensure_pages(r, int(rng.integers(1, 40)))
+            else:                                         # evict a random slot
+                admitted = [r for r in sched.slots if r is not None]
+                if admitted:
+                    r = admitted[int(rng.integers(len(admitted)))]
+                    sched.evict(r, "eos")
+            check()
+        for r in list(sched.slots):
+            if r is not None:
+                sched.evict(r, "length")
+        check()
+        assert alloc.free_count == 10 and alloc.reserved == 0
+
+
+def test_paged_pool_leaves_shard_like_kv():
+    """sharding/specs: the page pool shards its page axis like the cache
+    sequence axis it replaces; the page table is replicated."""
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.models.cache import CacheSpec
+    from repro.sharding.specs import cache_specs
+
+    cfg, model, _ = _setup()
+    caches = model.init_caches(2, 32, spec=CacheSpec("paged", 8, 0))
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    specs = cache_specs(caches, mesh)
+    leaves = jax.tree_util.tree_flatten_with_path(specs)[0]
+    pools = [s for path, s in leaves
+             if any(getattr(k, "name", None) in ("pool_k", "pool_v")
+                    for k in path)]
+    tables = [s for path, s in leaves
+              if any(getattr(k, "name", None) == "page_table" for k in path)]
+    assert pools and tables
+    assert all(s[-4] == "model" and s[-3:] == P(None, None, None)[:]
+               for s in pools)
+    assert all(all(a is None for a in s) for s in tables)
+
+
+# ---------------------------------------------------------------------------
+# Per-request sampling params.
+# ---------------------------------------------------------------------------
+
+
+def test_per_request_sampling_matches_solo_run():
+    """A sampled request's stream is a pure function of (seed, token index,
+    logits): the same request run alone reproduces it exactly, a greedy
+    neighbour in the same pool stays bitwise greedy, and mixing sampling
+    params never retraces the decode step."""
+    cfg, model, params = _setup()
+    greedy_single = _singles(model, params, [[9, 10, 11]], 8)[0]
+
+    eng = ServeEngine(model, params, cache_len=64, prefill_chunk=8,
+                      max_slots=2, eos=-1)
+    eng.start()
+    sampled = eng.submit([5, 6, 7], 8, temperature=0.9, top_k=5, seed=1234)
+    greedy = eng.submit([9, 10, 11], 8)
+    eng.run()
+    assert greedy.out == greedy_single
+
+    solo = ServeEngine(model, params, cache_len=64, prefill_chunk=8,
+                       max_slots=1, eos=-1)
+    solo.start()
+    again = solo.submit([5, 6, 7], 8, temperature=0.9, top_k=5, seed=1234)
+    solo.run()
+    assert again.out == sampled.out
+    assert eng._decode_jit._cache_size() == 1       # no per-request retrace
+
+
+def test_finalize_while_neighbour_decodes_no_phantom_lane():
+    """A request that finalizes its prefill on the same tick a neighbour is
+    decoding must join that decode step exactly — never run as an active
+    lane whose token is discarded. A phantom lane double-steps recurrent
+    state with the same token (diverging from single-request decode) and
+    breaks the exact lane accounting."""
+    cfg, model, params = _setup("xlstm-125m")
+    prompts = [[9, 10, 11], [5, 6, 7]]
+    singles = _singles(model, params, prompts, 6, eos=-1)
+    eng = ServeEngine(model, params, cache_len=64, prefill_chunk=8,
+                      max_slots=2, eos=-1)
+    eng.start()
+    reqs = [eng.submit(prompts[0], 6), eng.submit(prompts[1], 6)]
+    eng.run()
+    assert [r.out for r in reqs] == singles
+    # exact lane accounting holds on attention archs under the same schedule
+    cfg, model, params = _setup()
+    eng = ServeEngine(model, params, cache_len=64, prefill_chunk=8,
+                      max_slots=2, eos=-1)
+    eng.start()
+    reqs = [eng.submit(prompts[0], 10), eng.submit(prompts[1], 6)]
+    eng.run()
+    masks = eng.stats.decode_active
+    assert sum(sum(m) for m in masks) == sum(len(r.out) - 1 for r in reqs)
+
+
+def test_top_k_one_is_greedy():
+    """top_k=1 collapses the sampling support to the argmax token, whatever
+    the temperature — a deterministic check that the filter really cuts."""
+    cfg, model, params = _setup()
+    greedy = _singles(model, params, [[5, 6, 7]], 8)[0]
+    eng = ServeEngine(model, params, cache_len=64, prefill_chunk=8,
+                      max_slots=1, eos=-1)
+    eng.start()
+    req = eng.submit([5, 6, 7], 8, temperature=1.3, top_k=1, seed=7)
+    eng.run()
+    assert req.out == greedy
 
 
 # ---------------------------------------------------------------------------
