@@ -6,6 +6,9 @@
 #   scripts/test.sh --bench-smoke   # additionally run the serve-throughput
 #                                   # bench smoke and fail unless it emits
 #                                   # a valid BENCH_serve_throughput.json
+#   scripts/test.sh --analyze       # graph-invariant lint lane only:
+#                                   # python -m repro.analysis over the CI
+#                                   # config set (train+serve+freeze)
 #   scripts/test.sh -m "not slow"   # explicit marker expression
 #   scripts/test.sh tests/test_repr.py -k parity
 set -euo pipefail
@@ -18,6 +21,12 @@ for a in "$@"; do
     args+=(-m "not slow")
   elif [[ "$a" == "--bench-smoke" ]]; then
     bench_smoke=1
+  elif [[ "$a" == "--analyze" ]]; then
+    # Blocking lint lane: every rule over three architectures (decoder LM,
+    # large dense LM, recurrent-hybrid), all three traced paths.
+    exec python -m repro.analysis \
+      --config gpt2-small,qwen2-72b,recurrentgemma-9b \
+      --what train,serve,freeze
   else
     args+=("$a")
   fi

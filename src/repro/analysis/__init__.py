@@ -1,0 +1,97 @@
+"""Graph-invariant lint: statically enforce SLoPe's sparsity, memory, and
+single-sync claims over the *real* traced train/serve/freeze graphs.
+
+SLoPe's headline numbers (1.25x/1.54x train/inference speedup, 0.61-0.63x
+memory) hold only while the computation graph actually stays sparse. One
+silent dequant-to-dense detour, an accidental f32 upcast of a bf16 matmul,
+an extra host sync per decode tick, or a retrace per request erases the
+claims while every parity test stays green — sparse outputs are still
+*correct*, just no longer cheap. This package traces the real entry points
+(``train/step.py``'s step, ``ServeEngine``'s prefill-chunk / decode-tick /
+finalize, ``models/freeze.py``'s conversion) on the interpret backend at
+tiny shapes and mechanically checks the invariants on every CI run.
+
+Usage
+-----
+CLI (what CI runs; see ``scripts/test.sh --analyze``)::
+
+    python -m repro.analysis --config gpt2-small,qwen2-72b,yi-6b \
+        --what train,serve,freeze
+    python -m repro.analysis --config gpt2_small --rules dtype-drift -v
+    python -m repro.analysis --list-rules
+
+Exit codes: 0 green (all findings waived or none), 1 unwaived findings,
+2 analyzer error. ``--allowlist`` points at an alternate ratchet file
+(default: the checked-in ``allowlist.json`` next to this module).
+
+Library::
+
+    from repro.analysis import run_analysis
+    report = run_analysis("gpt2-small", whats=("train", "serve"))
+    assert not report.unwaived, report.render()
+
+Architecture
+------------
+``walk.py``     jaxpr graph walker: label-taint abstract interpretation
+                with visitor callbacks (scan/while fixpoints, cond unions,
+                descends into pjit/remat/custom-VJP bodies, treats
+                ``pallas_call`` as opaque).
+``targets.py``  builds per-config artifacts: bf16/interpret closed-jaxprs
+                of train/serve/freeze (graph rules), plus a tiny f32/XLA
+                engine + model the runtime rules actually execute.
+``rules.py``    the rule registry (``core/repr.py`` idiom) and the five
+                rules: no-dense-materialization, dtype-drift,
+                retrace-guard, single-host-sync, sharding-coverage.
+``ratchet.py``  glob allowlist over ``rule:config:what:where`` keys; stale
+                entries are surfaced so the net only tightens.
+``hlo.py``      compiled-HLO re-check of the scope markers (wired into
+                ``launch/dryrun.py`` as a report-only field).
+
+Markers rules rely on (grep for them before refactoring):
+``slope_dense_dw``, ``slope_dense_bwd2_fallback``, ``slope_dense_ok``,
+``slope_sparse_bwd2``, ``q8_dequant_fallback`` named scopes;
+``kernels.ops.Q8_FALLBACK_EVENTS`` and ``serve.engine.HOST_SYNC_EVENTS``
+counters; ``serve.engine.host_fetch`` as the only tick-path sync.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .ratchet import Allowlist, DEFAULT_ALLOWLIST
+from .rules import (Finding, available_rules, get_rule, register_rule,
+                    run_rules)
+from .targets import ALL_WHATS, AnalysisContext
+
+__all__ = ["run_analysis", "Report", "Finding", "AnalysisContext",
+           "available_rules", "get_rule", "register_rule", "Allowlist",
+           "ALL_WHATS"]
+
+
+@dataclass
+class Report:
+    config: str
+    findings: list = field(default_factory=list)
+    unwaived: list = field(default_factory=list)
+    stale: list = field(default_factory=list)
+
+    def render(self, verbose: bool = False) -> str:
+        lines = []
+        shown = self.findings if verbose else self.unwaived
+        for f in shown:
+            lines.append(f"  {f}")
+        waived = sum(1 for f in self.findings if f.waived)
+        lines.append(f"  {self.config}: {len(self.findings)} finding(s), "
+                     f"{waived} waived, {len(self.unwaived)} unwaived")
+        for e in self.stale:
+            lines.append(f"  stale allowlist entry (tighten): {e.match!r}")
+        return "\n".join(lines)
+
+
+def run_analysis(config: str, whats=ALL_WHATS, *, rules=None,
+                 allowlist: str | None = None) -> Report:
+    """Run ``rules`` (default: all) for one config; apply the allowlist."""
+    ctx = AnalysisContext(config, whats)
+    findings = run_rules(ctx, rules)
+    al = Allowlist.load(allowlist)
+    unwaived = al.apply(findings)
+    return Report(config, findings, unwaived, al.stale())

@@ -1,0 +1,60 @@
+"""CLI for the graph-invariant linter. See the package docstring for usage."""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import ALL_WHATS, available_rules, run_analysis
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Lint traced train/serve/freeze graphs for SLoPe's "
+                    "sparsity/memory/sync invariants.")
+    ap.add_argument("--config", default="gpt2-small",
+                    help="comma-separated model_zoo config names")
+    ap.add_argument("--what", default=",".join(ALL_WHATS),
+                    help="comma-separated subset of train,serve,freeze")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset (default: all)")
+    ap.add_argument("--allowlist", default=None,
+                    help="alternate allowlist JSON (default: checked-in)")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="show waived findings too")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name in available_rules():
+            print(name)
+        return 0
+
+    configs = [c.strip().replace("_", "-") for c in args.config.split(",") if c.strip()]
+    whats = tuple(w.strip() for w in args.what.split(",") if w.strip())
+    bad = set(whats) - set(ALL_WHATS)
+    if bad:
+        ap.error(f"unknown --what {sorted(bad)}; choose from {ALL_WHATS}")
+    rules = ([r.strip() for r in args.rules.split(",") if r.strip()]
+             if args.rules else None)
+
+    exit_code = 0
+    for config in configs:
+        print(f"== {config} ({','.join(whats)}) ==")
+        try:
+            report = run_analysis(config, whats, rules=rules,
+                                  allowlist=args.allowlist)
+        except Exception:
+            traceback.print_exc()
+            print(f"  {config}: analyzer error")
+            return 2
+        print(report.render(verbose=args.verbose))
+        if report.unwaived:
+            exit_code = 1
+    print("ANALYSIS", "FAILED" if exit_code else "OK")
+    return exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

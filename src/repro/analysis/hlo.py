@@ -1,0 +1,55 @@
+"""Compiled-HLO scan: the post-XLA view of the same invariants.
+
+The jaxpr rules see the graph *before* XLA touches it; this module re-checks
+the compiled text (``lowered.compile().as_text()`` — the same artifact
+``roofline/hlo_parse.py`` costs out) for the scope markers the library wires
+in, because named scopes survive into HLO ``op_name`` metadata:
+
+* any ``q8_dequant_fallback`` site ⇒ the dequant detour was compiled in —
+  always a finding;
+* ``slope_dense_dw`` sites are counted and reported (informational: the
+  paper-sanctioned dense BWD-1; a sudden growth means a new dense site
+  slipped under an old waiver).
+
+``launch/dryrun.py`` calls :func:`scan_compiled_hlo` on every cell it
+compiles and stores the result next to the roofline costs (report-only).
+"""
+from __future__ import annotations
+
+import re
+
+from repro.roofline.hlo_parse import _parse_computations
+
+__all__ = ["scan_compiled_hlo"]
+
+_OP_NAME_RE = re.compile(r'op_name="([^"]*)"')
+
+#: op_name markers that are always a finding when they reach compiled HLO.
+DENY_MARKERS = ("q8_dequant_fallback",)
+
+#: markers that are counted but not failing (paper-sanctioned dense sites).
+INFO_MARKERS = ("slope_dense_dw", "slope_dense_bwd2_fallback")
+
+
+def scan_compiled_hlo(hlo: str) -> dict:
+    """Scan compiled HLO text for SLoPe scope markers.
+
+    Returns ``{"deny": [(marker, instr_name), ...], "info": {marker: count},
+    "ok": bool}``.
+    """
+    comps, _, _ = _parse_computations(hlo)
+    deny: list[tuple[str, str]] = []
+    info = {m: 0 for m in INFO_MARKERS}
+    for instrs in comps.values():
+        for ins in instrs:
+            m = _OP_NAME_RE.search(ins.rest)
+            if not m:
+                continue
+            op_name = m.group(1)
+            for marker in DENY_MARKERS:
+                if marker in op_name:
+                    deny.append((marker, ins.name))
+            for marker in INFO_MARKERS:
+                if marker in op_name:
+                    info[marker] += 1
+    return {"deny": deny, "info": info, "ok": not deny}

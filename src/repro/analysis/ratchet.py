@@ -1,0 +1,62 @@
+"""Allowlist / ratchet: known-and-accepted findings, waived by glob.
+
+The analyzer must land green and *tighten over time*: real, understood
+findings (the paper-sanctioned dense BWD-1 outer product; gpt2's
+indivisible-vocab embedding replication) are recorded in
+``allowlist.json`` next to this module with a reason, and matched against
+``Finding.key`` (``rule:config:what:where``) with ``fnmatch`` globs.
+
+Ratcheting: entries that stop matching anything are reported as *stale* —
+a nudge to delete them so the net can only get tighter. Stale entries never
+fail the run; unwaived findings do.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from fnmatch import fnmatchcase
+from pathlib import Path
+
+from .rules import Finding
+
+__all__ = ["Allowlist", "AllowEntry", "DEFAULT_ALLOWLIST"]
+
+DEFAULT_ALLOWLIST = Path(__file__).with_name("allowlist.json")
+
+
+@dataclass
+class AllowEntry:
+    match: str       # glob over Finding.key
+    reason: str
+    hits: int = 0
+
+
+class Allowlist:
+    def __init__(self, entries: list[AllowEntry]):
+        self.entries = entries
+
+    @classmethod
+    def load(cls, path: str | Path | None = None) -> "Allowlist":
+        path = Path(path) if path is not None else DEFAULT_ALLOWLIST
+        if not path.exists():
+            return cls([])
+        data = json.loads(path.read_text())
+        return cls([AllowEntry(e["match"], e.get("reason", ""))
+                    for e in data.get("entries", [])])
+
+    def apply(self, findings: list[Finding]) -> list[Finding]:
+        """Mark waived findings in place; returns the unwaived remainder."""
+        unwaived = []
+        for f in findings:
+            for e in self.entries:
+                if fnmatchcase(f.key, e.match):
+                    f.waived, f.waived_by = True, e.match
+                    e.hits += 1
+                    break
+            else:
+                unwaived.append(f)
+        return unwaived
+
+    def stale(self) -> list[AllowEntry]:
+        """Entries that matched nothing — candidates for deletion."""
+        return [e for e in self.entries if e.hits == 0]

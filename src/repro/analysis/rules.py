@@ -1,0 +1,539 @@
+"""Lint rules enforcing SLoPe's graph invariants, plus their registry.
+
+Each rule is a class registered with ``@register_rule`` (same idiom as
+``core/repr.py``'s representation registry): ``get_rule(name)`` resolves,
+``available_rules()`` lists. A rule declares which analysis flavours it
+needs (``requires`` ⊆ {"train", "serve", "freeze"}) and implements
+``run(ctx) -> list[Finding]`` over an ``AnalysisContext``.
+
+Findings are identified by ``rule:config:what:where`` keys; the allowlist
+(``ratchet.py``) waives known-and-accepted ones by glob, so the analyzer
+lands green and only *new* violations fail CI.
+
+Scope markers the rules understand (wired into the library code):
+
+* ``slope_dense_dw`` / ``slope_dense_bwd2_fallback`` — genuinely dense
+  sites (BWD-1 outer product; the no-metadata backward fallback). Reported
+  as findings, waived in the checked-in allowlist with the paper's
+  rationale.
+* ``slope_dense_ok`` (``kernels/ops.py:dense_matmul``) and
+  ``slope_sparse_bwd2`` (the O(kT) permutation backward) — verified
+  intentionally-dense / compressed-sized library paths whose shapes can
+  collide with a sparse layer's dense (d_out, d_in) at smoke scale. Skipped
+  outright, not waived.
+* ``q8_dequant_fallback`` — the out-of-kernel dequant detour; any
+  occurrence (graph scope or ``ops.Q8_FALLBACK_EVENTS`` delta) is a
+  finding.
+"""
+from __future__ import annotations
+
+import ast
+import contextlib
+import inspect
+import textwrap
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from .targets import ALL_WHATS, AnalysisContext, Trace
+from .walk import EMPTY, Taint, scope_of, walk_closed
+
+__all__ = ["Finding", "register_rule", "get_rule", "available_rules",
+           "run_rules", "find_dense_materializations", "find_dtype_drift",
+           "count_host_syncs", "lint_tick_source", "check_serve_retrace",
+           "check_train_retrace", "coverage_findings"]
+
+
+@dataclass
+class Finding:
+    rule: str
+    config: str
+    what: str          # "train" | "serve-decode" | "serve" | "freeze" | ...
+    where: str         # site: prim@shape@scope, pytree path, fn name, ...
+    detail: str = ""
+    waived: bool = False
+    waived_by: str = ""
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}:{self.config}:{self.what}:{self.where}"
+
+    def __str__(self) -> str:
+        mark = f" [waived: {self.waived_by}]" if self.waived else ""
+        tail = f" — {self.detail}" if self.detail else ""
+        return f"{self.key}{tail}{mark}"
+
+
+# ---------------------------------------------------------------------------
+# Registry (mirrors core/repr.py)
+# ---------------------------------------------------------------------------
+
+_RULES: dict[str, type] = {}
+
+
+def register_rule(cls):
+    _RULES[cls.name] = cls
+    return cls
+
+
+def get_rule(name: str):
+    try:
+        return _RULES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown lint rule {name!r}; available: {available_rules()}")
+
+
+def available_rules() -> tuple[str, ...]:
+    return tuple(sorted(_RULES))
+
+
+def run_rules(ctx: AnalysisContext, rules=None) -> list[Finding]:
+    names = available_rules() if rules is None else tuple(rules)
+    out: list[Finding] = []
+    for name in names:
+        cls = get_rule(name)
+        if not set(cls.requires) & set(ctx.whats):
+            continue
+        out.extend(cls().run(ctx))
+    return out
+
+
+class LintRule:
+    name: str = ""
+    requires: tuple = ALL_WHATS
+
+    def run(self, ctx: AnalysisContext) -> list[Finding]:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# no-dense-materialization
+# ---------------------------------------------------------------------------
+
+FLOAT_DTYPES = frozenset({"bfloat16", "float16", "float32", "float64"})
+
+#: Scopes that mark verified sparse/intentionally-dense library paths whose
+#: tensor shapes may collide with a dense (d_out, d_in) — skipped, not waived.
+SPARSE_OK_SCOPES = ("slope_dense_ok", "slope_sparse_bwd2")
+
+
+def _trailing(av):
+    if av is None or getattr(av, "ndim", 0) < 2:
+        return None
+    return tuple(av.shape[-2:])
+
+
+def find_dense_materializations(closed, in_taints, dense_shapes):
+    """Sites where a payload-reachable float tensor *takes* a dense
+    (d_out, d_in) shape no direct input already had.
+
+    Requiring the shape to be created (not merely carried) is what keeps
+    elementwise optimizer math on already-dense tensors quiet while still
+    catching every decompress/dequant expansion — those always build the
+    dense shape out of compressed-sized operands. Returns unique
+    ``(primitive, shape, scope)`` triples.
+    """
+    dense_shapes = frozenset(dense_shapes)
+    sites: set = set()
+
+    def visit(eqn, ins, outs):
+        if any(_trailing(getattr(a, "aval", None)) in dense_shapes
+               for a in eqn.invars):
+            return None
+        for v, t in zip(eqn.outvars, outs):
+            av = getattr(v, "aval", None)
+            if (t and _trailing(av) in dense_shapes
+                    and str(av.dtype) in FLOAT_DTYPES):
+                sites.add((eqn.primitive.name, tuple(av.shape), scope_of(eqn)))
+        return None
+
+    walk_closed(closed, list(in_taints), visit)
+    return sorted(sites)
+
+
+@register_rule
+class NoDenseMaterialization(LintRule):
+    name = "no-dense-materialization"
+    requires = ALL_WHATS
+
+    def run(self, ctx):
+        findings = []
+        for tr in ctx.graph_traces():
+            if tr.q8_fallback_delta:
+                findings.append(Finding(
+                    self.name, ctx.config_name, tr.what, "q8_dequant_fallback",
+                    f"out-of-kernel dequant engaged {tr.q8_fallback_delta}x "
+                    "while tracing (ops.Q8_FALLBACK_EVENTS)"))
+            for prim, shape, scope in find_dense_materializations(
+                    tr.closed, tr.taints, tr.dense_shapes):
+                if any(m in scope for m in SPARSE_OK_SCOPES):
+                    continue
+                where = f"{prim}@{'x'.join(map(str, shape))}@{scope or 'unscoped'}"
+                findings.append(Finding(
+                    self.name, ctx.config_name, tr.what, where,
+                    "payload-reachable float takes a sparse layer's dense "
+                    f"shape {shape[-2:]}"))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# dtype-drift
+# ---------------------------------------------------------------------------
+
+_HOT = "hot:f32<-bf16"
+_WIDE = frozenset({"float32", "float64"})
+
+
+def find_dtype_drift(closed):
+    """dot_generals consuming a wide-float operand that was upcast from
+    bfloat16 — the silent 2x-bandwidth regression the paper's bf16 matmul
+    budget forbids. Downcasting back to bf16 clears the label, so f32
+    softmax/norm/loss detours that return to bf16 before the next matmul
+    stay quiet; ``preferred_element_type``-style f32 *accumulation* of bf16
+    operands never flags (the operands stay bf16). Returns unique
+    ``(shape, scope)`` sites.
+    """
+    sites: set = set()
+
+    def visit(eqn, ins, outs):
+        prim = eqn.primitive.name
+        if prim == "convert_element_type":
+            src = str(getattr(eqn.invars[0], "aval", None).dtype)
+            dst = str(eqn.params.get("new_dtype", eqn.outvars[0].aval.dtype))
+            if src == "bfloat16" and dst in _WIDE:
+                return [outs[0] | {_HOT}]
+            if dst in ("bfloat16", "float16"):
+                return [outs[0] - {_HOT}]
+            return None
+        if prim == "dot_general":
+            for a, t in zip(eqn.invars, ins):
+                av = getattr(a, "aval", None)
+                if av is not None and _HOT in t and str(av.dtype) in _WIDE:
+                    sites.add((tuple(av.shape), scope_of(eqn)))
+        return None
+
+    walk_closed(closed, [EMPTY] * len(closed.jaxpr.invars), visit)
+    return sorted(sites)
+
+
+@register_rule
+class DtypeDrift(LintRule):
+    name = "dtype-drift"
+    requires = ("train", "serve")
+
+    def run(self, ctx):
+        findings = []
+        traces = []
+        if "train" in ctx.whats:
+            traces.append(ctx.trace_train())
+        if "serve" in ctx.whats:
+            traces.extend(ctx.trace_serve())
+        for tr in traces:
+            for shape, scope in find_dtype_drift(tr.closed):
+                where = f"dot_general@{'x'.join(map(str, shape))}@{scope or 'unscoped'}"
+                findings.append(Finding(
+                    self.name, ctx.config_name, tr.what, where,
+                    "matmul operand upcast bf16→f32 without returning to bf16"))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# retrace-guard
+# ---------------------------------------------------------------------------
+
+def _varied_schedule(eng, *, rng):
+    """Exercise admission, queueing, eviction, mixed sampling params, and
+    both fresh/continued prefill — every axis that could accidentally be
+    baked into a trace as a Python value."""
+    lens = [3, 7, 12, 5, 9, 4]
+    for i, ln in enumerate(lens):
+        eng.submit(list(rng.integers(1, 200, size=ln)),
+                   max_new_tokens=3 + (i % 4),
+                   temperature=0.0 if i % 2 == 0 else 0.8,
+                   top_k=0 if i % 3 == 0 else 5,
+                   seed=i)
+    eng.run()
+
+
+def check_serve_retrace(eng) -> list[str]:
+    """Run a varied schedule; report jit caches that grew past their bound
+    (decode/finalize: 1; prefill: 2 — ``fresh`` is a static arg)."""
+    _varied_schedule(eng, rng=np.random.default_rng(0))
+    probs = []
+    for fn, bound in (("_decode_jit", 1), ("_finalize_jit", 1),
+                      ("_prefill_jit", 2)):
+        size = getattr(eng, fn)._cache_size()
+        if size > bound:
+            probs.append(f"{fn}: {size} traces (bound {bound})")
+    return probs
+
+
+def check_train_retrace(model, params_key=0) -> list[str]:
+    """Two same-shape steps through a fresh jitted train step must compile
+    exactly once."""
+    from repro.configs.base import TrainConfig
+    from repro.train.state import init_train_state
+    from repro.train.step import make_train_step
+
+    tcfg = TrainConfig(microbatches=1)
+    state = init_train_state(model, jax.random.PRNGKey(params_key),
+                             adapter_rank=4)
+    step = jax.jit(make_train_step(model, tcfg))
+    rng = np.random.default_rng(0)
+    for _ in range(2):
+        toks = rng.integers(0, model.cfg.vocab_size, size=(2, 16))
+        batch = {"tokens": jax.numpy.asarray(toks, jax.numpy.int32),
+                 "labels": jax.numpy.asarray(toks, jax.numpy.int32)}
+        state, _ = step(state, batch)
+    size = step._cache_size()
+    return [] if size == 1 else [f"train step: {size} traces (bound 1)"]
+
+
+@register_rule
+class RetraceGuard(LintRule):
+    name = "retrace-guard"
+    requires = ("train", "serve")
+
+    def run(self, ctx):
+        findings = []
+        if "train" in ctx.whats:
+            model, _ = ctx.runtime_model_params
+            for prob in check_train_retrace(model):
+                findings.append(Finding(self.name, ctx.config_name, "train",
+                                        "train-step", prob))
+        if "serve" in ctx.whats:
+            for prob in check_serve_retrace(ctx.make_runtime_engine()):
+                findings.append(Finding(self.name, ctx.config_name, "serve",
+                                        prob.split(":")[0], prob))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# single-host-sync
+# ---------------------------------------------------------------------------
+
+class _SyncCounter:
+    def __init__(self):
+        self.count = 0
+
+
+@contextlib.contextmanager
+def count_host_syncs():
+    """Count device→host transfers going through ``numpy.asarray`` (the only
+    transfer idiom the tick path uses; ``np.array``/``int()`` over host-side
+    numpy state never see a ``jax.Array``). Patches ``numpy.asarray``
+    globally for the duration — measurement windows must be short and
+    single-threaded."""
+    counter = _SyncCounter()
+    orig = np.asarray
+
+    def spy(a, *args, **kw):
+        if isinstance(a, jax.Array):
+            counter.count += 1
+        return orig(a, *args, **kw)
+
+    np.asarray = spy
+    try:
+        yield counter
+    finally:
+        np.asarray = orig
+
+
+#: ServeEngine methods on the per-tick path. A transfer call anywhere in
+#: these must be the designated ``host_fetch``.
+TICK_FUNCS = ("step", "_decode_tick", "_advance_prefill", "_sample_host",
+              "_push_pages", "_emit", "_evict")
+
+_TRANSFER_CALLS = ("asarray", "device_get", "item", "tolist")
+
+
+def lint_tick_source(module=None) -> list[str]:
+    """Static check: tick-path functions perform no device→host transfer
+    except via ``host_fetch``. Flags ``np.asarray`` / ``jax.device_get`` /
+    ``.item()`` / ``.tolist()`` calls (``np.array`` and ``int()`` operate on
+    host numpy state and are allowed). Returns ``func:line:call`` strings.
+    """
+    if module is None:
+        import repro.serve.engine as module
+    tree = ast.parse(textwrap.dedent(inspect.getsource(module)))
+    offenders = []
+
+    class V(ast.NodeVisitor):
+        def __init__(self):
+            self.stack = []
+
+        def visit_FunctionDef(self, node):
+            self.stack.append(node.name)
+            self.generic_visit(node)
+            self.stack.pop()
+
+        def visit_Call(self, node):
+            fn = node.func
+            name = None
+            if isinstance(fn, ast.Attribute):
+                base = fn.value
+                # jnp.asarray is H2D, not a host sync — only numpy's counts.
+                if fn.attr == "asarray" and isinstance(base, ast.Name) \
+                        and base.id in ("jnp", "jax"):
+                    name = None
+                elif fn.attr in _TRANSFER_CALLS:
+                    name = fn.attr
+            if name and "host_fetch" not in self.stack and \
+                    any(f in self.stack for f in TICK_FUNCS):
+                offenders.append(
+                    f"{'.'.join(self.stack)}:{node.lineno}:{name}")
+            self.generic_visit(node)
+
+    V().visit(tree)
+    return offenders
+
+
+@register_rule
+class SingleHostSync(LintRule):
+    name = "single-host-sync"
+    requires = ("serve",)
+
+    #: ticks measured after reaching steady state
+    WINDOW = 5
+
+    def run(self, ctx):
+        import repro.serve.engine as engine_mod
+        findings = []
+        for off in lint_tick_source(engine_mod):
+            findings.append(Finding(
+                self.name, ctx.config_name, "serve", f"ast:{off}",
+                "transfer call on the tick path outside host_fetch"))
+
+        eng = ctx.make_runtime_engine()
+        rng = np.random.default_rng(1)
+        for i in range(eng.max_slots):
+            eng.submit(list(rng.integers(1, 200, size=4)),
+                       max_new_tokens=self.WINDOW + 20)
+        # Drain prefill/finalize ticks until every slot is decoding.
+        for _ in range(32):
+            if len(eng.scheduler.decoding()) == eng.max_slots:
+                break
+            eng.step()
+        before = engine_mod.HOST_SYNC_EVENTS
+        with count_host_syncs() as c:
+            for _ in range(self.WINDOW):
+                eng.step()
+        counted = engine_mod.HOST_SYNC_EVENTS - before
+        if counted != self.WINDOW or c.count != counted:
+            findings.append(Finding(
+                self.name, ctx.config_name, "serve", "decode-tick",
+                f"{counted} host_fetch / {c.count} numpy.asarray transfers "
+                f"over {self.WINDOW} steady-state ticks (want exactly "
+                f"{self.WINDOW})"))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# sharding-coverage
+# ---------------------------------------------------------------------------
+
+class _FakeMesh:
+    """Duck-typed stand-in: ``param_specs``/``cache_specs`` only read
+    ``.shape`` (dict) and ``.axis_names``."""
+
+    def __init__(self, shape=None):
+        self.shape = dict(shape or {"data": 16, "model": 16})
+        self.axis_names = tuple(self.shape)
+
+
+_LARGE_UNCOVERED = 1 << 16    # leaves smaller than this may fall through
+_LARGE_REPLICATED = 1 << 20   # FSDP-relevant size for a matrix-family leaf
+
+
+def coverage_findings(params, mesh, *, mode: str = "train",
+                      config: str = "?", what: str = "train",
+                      rule_name: str = "sharding-coverage") -> list[Finding]:
+    """Exactly-one-rule coverage + no-large-replicated-matrix over a params
+    pytree (abstract leaves are fine)."""
+    from repro.core.repr import matrix_param_names, matrix_t_param_names
+    from repro.sharding.specs import (leaf_path_str, match_param_rules,
+                                      param_specs)
+    from jax.sharding import PartitionSpec as P
+    mat, mat_t = matrix_param_names(), matrix_t_param_names()
+    specs = param_specs(params, mesh, mode=mode)
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_specs = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    findings = []
+    for (path, leaf), spec in zip(flat, flat_specs):
+        p = leaf_path_str(path)
+        shape = leaf.shape
+        size = int(np.prod(shape)) if shape else 1
+        rules = match_param_rules(p, shape, mat, mat_t)
+        if len(rules) > 1:
+            findings.append(Finding(
+                rule_name, config, what, f"ambiguous:{p}",
+                f"claimed by {rules}"))
+        elif not rules and len(shape) >= 2 and size >= _LARGE_UNCOVERED:
+            findings.append(Finding(
+                rule_name, config, what, f"uncovered:{p}",
+                f"large leaf {shape} fell through to replication"))
+        if (mode == "train" and rules
+                and rules[0] in ("matrix", "matrix_t", "head", "embedding")
+                and size >= _LARGE_REPLICATED
+                and all(ax is None for ax in spec)):
+            findings.append(Finding(
+                rule_name, config, what, f"replicated:{p}",
+                f"{rules[0]} leaf {shape} fully replicated under FSDP "
+                f"({size * 2 / 1e6:.0f}MB+ per device)"))
+    return findings
+
+
+@register_rule
+class ShardingCoverage(LintRule):
+    name = "sharding-coverage"
+    requires = ("train", "serve")
+
+    def run(self, ctx):
+        from repro.launch.specs import abstract_params
+        from repro.models import build_model
+        from repro.models.cache import CacheSpec
+        from repro.sharding.specs import cache_specs, leaf_path_str
+
+        mesh = _FakeMesh()
+        model = build_model(ctx.full_cfg)
+        params = abstract_params(model, adapter_rank=ctx.adapter_rank)
+        findings = []
+        if "train" in ctx.whats:
+            findings += coverage_findings(params, mesh, mode="train",
+                                          config=ctx.config_name, what="train")
+        if "serve" in ctx.whats:
+            findings += coverage_findings(params, mesh, mode="serve",
+                                          config=ctx.config_name, what="serve")
+            # Paged pool: the declared layout (page axis sharded over tp
+            # under kv_shard="seq", page table replicated).
+            slots, cache_len, page = 16, 2048, 16
+            spec = CacheSpec("paged", page_size=page,
+                             num_pages=slots * cache_len // page)
+            caches = jax.eval_shape(
+                lambda: model.init_caches(slots, cache_len, spec=spec))
+            cspecs = cache_specs(caches, mesh, batch_size=slots,
+                                 kv_shard="seq")
+            from jax.sharding import PartitionSpec as P
+            cflat = jax.tree_util.tree_flatten_with_path(caches)[0]
+            sflat = jax.tree_util.tree_leaves(
+                cspecs, is_leaf=lambda x: isinstance(x, P))
+            for (path, leaf), sp in zip(cflat, sflat):
+                p = leaf_path_str(path)
+                if "/pool_k/" in p or "/pool_v/" in p:
+                    if all(ax is None for ax in sp):
+                        findings.append(Finding(
+                            self.name, ctx.config_name, "serve",
+                            f"pool-replicated:{p}",
+                            f"paged pool leaf {leaf.shape} has no sharded "
+                            "axis under kv_shard='seq'"))
+                elif "/page_table/" in p:
+                    if any(ax is not None for ax in sp):
+                        findings.append(Finding(
+                            self.name, ctx.config_name, "serve",
+                            f"page-table-sharded:{p}",
+                            "page table must be replicated (host-mirrored "
+                            "int32 map)"))
+        return findings

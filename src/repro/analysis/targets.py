@@ -1,0 +1,296 @@
+"""Traced/executed analysis targets for one model config.
+
+Two flavours of artifact per config, matching the two kinds of rule:
+
+* **Graph targets** (``trace_train`` / ``trace_serve`` / ``trace_freeze``):
+  ``jax.make_jaxpr`` closed-jaxprs of the *real* entry points — the
+  ``train/step.py`` step, the ``ServeEngine`` prefill-chunk / decode-tick /
+  finalize functions, and ``freeze_for_inference`` — on the **interpret
+  backend** with ``bfloat16`` params. Tracing never executes the graph, so
+  bf16-on-CPU costs nothing; the interpret backend matters because the XLA
+  reference path (``kernels/ref.py``) densifies *by design* and would drown
+  the no-dense rule in intentional reference materializations.
+
+* **Runtime targets** (``runtime_model_params`` / ``make_runtime_engine``):
+  a second, separately built float32/XLA-backend model + engine that rules
+  actually *execute* (retrace-guard cache-size checks, single-host-sync tick
+  counting). Interpret-mode execution is orders of magnitude too slow for
+  this; the properties under test (jit cache behavior, host-sync count per
+  tick) are backend-independent.
+
+Trace shapes are tiny but chosen so that no activation dimension collides
+with a sparse layer's (d_out, d_in): the no-dense rule matches trailing
+shape pairs, and a batch*seq product equal to a layer width would
+false-positive. ``_check_collisions`` enforces this loudly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import cached_property
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import InputShape, ModelConfig, TrainConfig
+from repro.kernels import ops
+from repro.models import build_model
+from repro.models.freeze import freeze_for_inference
+from repro.sharding.specs import leaf_path_str
+
+from .walk import EMPTY, Taint
+
+__all__ = ["AnalysisContext", "Trace", "PAYLOAD_LEAVES", "leaf_path_str",
+           "ALL_WHATS"]
+
+ALL_WHATS = ("train", "serve", "freeze")
+
+#: Leaf names that hold (or index) the packed sparse payload. A value
+#: *reachable from* one of these that takes a full (d_out, d_in) float shape
+#: is a dense materialization of a compressed weight — exactly what SLoPe's
+#: memory/bandwidth claims forbid. Dense-storage leaves ("w", masks) are
+#: deliberately absent: dense_masked/srste are dense by construction.
+PAYLOAD_LEAVES = frozenset({
+    "values", "values_q", "scales", "idx_packed", "rc_packed",
+    "idxT_packed", "rcT_packed", "permT",
+})
+
+# Trace input geometry (see module docstring re collisions).
+TRACE_BATCH = 2
+TRACE_SEQ = 24
+TRACE_SLOTS = 3
+TRACE_CACHE_LEN = 48
+TRACE_CHUNK = 8
+
+
+@dataclass(frozen=True)
+class Trace:
+    """One traced entry point plus the metadata rules need to judge it."""
+
+    what: str                      # "train" | "serve-decode" | ...
+    closed: object                 # jax.core.ClosedJaxpr
+    invar_paths: tuple             # path string per flattened invar
+    taints: tuple                  # Taint per invar (payload-leaf seeding)
+    dense_shapes: frozenset        # {(d_out, d_in)} incl. transposes
+    q8_fallback_delta: int         # ops.Q8_FALLBACK_EVENTS during tracing
+
+
+def _flat_paths(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(leaf_path_str(p), leaf) for p, leaf in leaves]
+
+
+def _payload_taints(paths: list[str]) -> list[Taint]:
+    out = []
+    for p in paths:
+        name = p.rstrip("/").rsplit("/", 1)[-1]
+        out.append(Taint({f"payload:{p}"}) if name in PAYLOAD_LEAVES else EMPTY)
+    return out
+
+
+def _dense_shapes(tree, cfg: ModelConfig) -> frozenset:
+    """Dense (d_out, d_in) shapes of every packed sparse layer in ``tree``.
+
+    Derived from the (…, d_out, k) ``values``/``values_q`` payloads:
+    k = d_in·N/M, inverted for the config N:M and the Table-6 ``tail_nm``
+    (we cannot tell which a given leaf uses, so both candidates — and both
+    orientations — are included; a spurious candidate only matters if it
+    collides with a legitimate tensor shape, which ``_check_collisions``
+    would surface via the trace-geometry assertion)."""
+    nms = {(cfg.slope.n, cfg.slope.m)}
+    if cfg.slope.tail_nm:
+        nms.add(tuple(cfg.slope.tail_nm))
+    shapes = set()
+    for path, leaf in _flat_paths(tree):
+        name = path.rstrip("/").rsplit("/", 1)[-1]
+        if name not in ("values", "values_q") or getattr(leaf, "ndim", 0) < 2:
+            continue
+        d_out, k = leaf.shape[-2], leaf.shape[-1]
+        for n, m in nms:
+            if (k * m) % n == 0:
+                d_in = k * m // n
+                shapes.add((d_out, d_in))
+                shapes.add((d_in, d_out))
+    return frozenset(shapes)
+
+
+def _check_collisions(dense_shapes, cfg: ModelConfig, what: str) -> None:
+    dims = {d for s in dense_shapes for d in s}
+    grid = {TRACE_BATCH, TRACE_SEQ, TRACE_BATCH * TRACE_SEQ, TRACE_SLOTS,
+            TRACE_CACHE_LEN, TRACE_CHUNK, cfg.vocab_size}
+    clash = dims & grid
+    if clash:
+        raise RuntimeError(
+            f"analysis trace geometry collides with sparse layer dims "
+            f"{sorted(clash)} for {cfg.name}/{what}: the no-dense rule would "
+            f"false-positive. Adjust TRACE_* in analysis/targets.py.")
+
+
+def _interpret_cfg(cfg: ModelConfig) -> ModelConfig:
+    return cfg.replace(
+        dtype="bfloat16",
+        slope=dataclasses.replace(cfg.slope, backend="pallas_interpret"))
+
+
+def _xla_cfg(cfg: ModelConfig) -> ModelConfig:
+    return cfg.replace(
+        dtype="float32",
+        slope=dataclasses.replace(cfg.slope, backend="xla"))
+
+
+class AnalysisContext:
+    """Lazily-built traced/executed artifacts for one config name.
+
+    Everything is cached: a rule asking for ``trace_serve()`` twice (or two
+    rules sharing it) builds the engine once. ``adapter_rank`` defaults on so
+    the phase-2 fused sparse+LoRA path is part of the analyzed graph.
+    """
+
+    def __init__(self, config_name: str, whats=ALL_WHATS, *,
+                 adapter_rank: int = 4):
+        self.config_name = config_name
+        self.whats = tuple(whats)
+        self.adapter_rank = adapter_rank
+        self.smoke = get_smoke_config(config_name)
+
+    # ------------------------------------------------------------- graph side
+    @cached_property
+    def graph_cfg(self) -> ModelConfig:
+        return _interpret_cfg(self.smoke)
+
+    @cached_property
+    def graph_model(self):
+        return build_model(self.graph_cfg)
+
+    @cached_property
+    def full_cfg(self) -> ModelConfig:
+        return get_config(self.config_name)
+
+    def _traced(self, what, fn, args, dense_tree):
+        """make_jaxpr ``fn`` over ``args``; taints seeded by payload leaf name."""
+        before = ops.Q8_FALLBACK_EVENTS
+        closed = jax.make_jaxpr(fn)(*args)
+        delta = ops.Q8_FALLBACK_EVENTS - before
+        paths = [p for p, _ in _flat_paths(args)]
+        if len(paths) != len(closed.jaxpr.invars):
+            raise RuntimeError(
+                f"invar/path mismatch tracing {what}: {len(paths)} paths vs "
+                f"{len(closed.jaxpr.invars)} invars")
+        taints = _payload_taints(paths)
+        dense = _dense_shapes(dense_tree, self.graph_cfg)
+        _check_collisions(dense, self.graph_cfg, what)
+        return Trace(what, closed, tuple(paths), tuple(taints), dense, delta)
+
+    @cached_property
+    def _train_pieces(self):
+        from repro.launch.specs import abstract_state, train_input_specs
+        from repro.train.step import make_train_step
+        tcfg = TrainConfig(microbatches=1)
+        model = self.graph_model
+        state = abstract_state(model, tcfg, adapter_rank=self.adapter_rank)
+        shape = InputShape("analysis", "train", TRACE_SEQ, TRACE_BATCH)
+        batch = train_input_specs(self.graph_cfg, shape)
+        return make_train_step(model, tcfg), state, batch
+
+    def trace_train(self) -> Trace:
+        return self._trace_train
+
+    @cached_property
+    def _trace_train(self) -> Trace:
+        step, state, batch = self._train_pieces
+        return self._traced("train", step, (state, batch), dense_tree=state)
+
+    @cached_property
+    def _graph_engine(self):
+        from repro.serve.engine import ServeEngine
+        model = self.graph_model
+        params = model.init(jax.random.PRNGKey(0),
+                            adapter_rank=self.adapter_rank)
+        quantize = "q8" if self.graph_cfg.slope.quantize == "none" else None
+        eng = ServeEngine(model, params, cache_len=TRACE_CACHE_LEN,
+                          prefill_chunk=TRACE_CHUNK, freeze=True,
+                          quantize=quantize, cache_layout="paged",
+                          page_size=TRACE_CHUNK, max_slots=TRACE_SLOTS)
+        eng.start(TRACE_SLOTS)
+        return eng
+
+    def trace_serve(self) -> list[Trace]:
+        return self._trace_serve
+
+    @cached_property
+    def _trace_serve(self) -> list[Trace]:
+        eng = self._graph_engine
+        slots = TRACE_SLOTS
+        i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+        decode_args = (eng.params, eng._caches, i32(slots), i32(slots),
+                       jax.ShapeDtypeStruct((slots,), jnp.bool_),
+                       jax.ShapeDtypeStruct((slots,), jnp.float32),
+                       i32(slots),
+                       jax.ShapeDtypeStruct((slots,), jnp.uint32), i32(slots))
+        decode = self._traced(
+            "serve-decode",
+            lambda p, c, t, po, a, te, tk, se, nt:
+                eng._decode_jit(p, c, t, po, a, te, tk, se, nt, None),
+            decode_args, dense_tree=eng.params)
+        prefill_args = (eng.params, eng._caches, i32(1, TRACE_CHUNK),
+                        i32(), i32())
+        prefill = self._traced(
+            "serve-prefill",
+            lambda p, c, t, o, s:
+                eng._prefill_jit(p, c, t, o, s, None, fresh=True),
+            prefill_args, dense_tree=eng.params)
+        finalize_args = (eng.params, eng._caches, i32(1, 1), i32(), i32())
+        finalize = self._traced(
+            "serve-finalize",
+            lambda p, c, t, ln, s: eng._finalize_jit(p, c, t, ln, s, None),
+            finalize_args, dense_tree=eng.params)
+        return [decode, prefill, finalize]
+
+    def trace_freeze(self) -> Trace:
+        return self._trace_freeze
+
+    @cached_property
+    def _trace_freeze(self) -> Trace:
+        from repro.launch.specs import abstract_params
+        model = self.graph_model
+        params = abstract_params(model, adapter_rank=self.adapter_rank)
+        return self._traced(
+            "freeze",
+            lambda p: freeze_for_inference(model, p, quantize="q8"),
+            (params,), dense_tree=params)
+
+    def graph_traces(self) -> list[Trace]:
+        out = []
+        if "train" in self.whats:
+            out.append(self.trace_train())
+        if "serve" in self.whats:
+            out.extend(self.trace_serve())
+        if "freeze" in self.whats:
+            out.append(self.trace_freeze())
+        return out
+
+    # ----------------------------------------------------------- runtime side
+    @cached_property
+    def runtime_cfg(self) -> ModelConfig:
+        return _xla_cfg(self.smoke)
+
+    @cached_property
+    def runtime_model_params(self):
+        model = build_model(self.runtime_cfg)
+        params = model.init(jax.random.PRNGKey(0),
+                            adapter_rank=self.adapter_rank)
+        return model, params
+
+    def make_runtime_engine(self, **kw):
+        """A fresh, *started* XLA-backend engine (rules own its schedule)."""
+        from repro.serve.engine import ServeEngine
+        model, params = self.runtime_model_params
+        kw.setdefault("cache_len", 64)
+        kw.setdefault("prefill_chunk", 8)
+        kw.setdefault("cache_layout", "paged")
+        kw.setdefault("page_size", 8)
+        kw.setdefault("max_slots", TRACE_SLOTS)
+        eng = ServeEngine(model, params, **kw)
+        eng.start(kw["max_slots"])
+        return eng

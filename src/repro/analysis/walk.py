@@ -1,0 +1,202 @@
+"""Jaxpr graph walker with label-taint propagation.
+
+The lint rules (``analysis/rules.py``) need two things from a traced
+``ClosedJaxpr``: to *visit* every equation in every sub-jaxpr (pjit bodies,
+scan/while carries, cond branches, remat blocks, custom-VJP fun_jaxprs) with
+its source scope attached, and to know which values are *reachable from* a
+given set of inputs — e.g. "is this full ``(d_out, d_in)`` bf16 intermediate
+derived from a sparse payload leaf?". Both are one abstract interpretation:
+every variable carries a ``frozenset`` of string labels (its taint), each
+equation's outputs default to the union of its inputs' taints, and a visitor
+callback can observe every equation and override the propagation (clear a
+label on a downcast, add one on an upcast).
+
+Loop-carried taint (``scan``/``while`` carries) is run to fixpoint: the body
+is re-walked until the carry taints stop growing. The taint lattice is
+monotone (labels are only added within a pass, modulo explicit visitor
+clears), so this terminates in at most ``#labels`` passes; the visitor is
+called on every pass, and rules de-duplicate their findings by site key.
+
+``pallas_call`` is treated as opaque: taint flows all-inputs → all-outputs
+and the walker does not descend (the kernel body works on *blocks*, whose
+shapes are meaningless to full-shape rules — the call equation itself still
+reaches the visitor with the full operand/result shapes).
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax.core as jcore
+
+__all__ = ["EMPTY", "Taint", "scope_of", "walk_closed"]
+
+Taint = frozenset
+EMPTY: Taint = frozenset()
+
+# visit(eqn, in_taints, out_taints) -> list[Taint] | None
+#   Called once per equation per propagation pass. Returning a list replaces
+#   the default out-taints (length must match eqn.outvars); returning None
+#   keeps them.
+Visitor = Callable[["jcore.JaxprEqn", Sequence[Taint], Sequence[Taint]],
+                   "Sequence[Taint] | None"]
+
+
+def scope_of(eqn) -> str:
+    """The named-scope path of an equation ("a/b/c"; "" at top level)."""
+    try:
+        return str(eqn.source_info.name_stack)
+    except Exception:
+        return ""
+
+
+def _read(env: dict, atom) -> Taint:
+    if isinstance(atom, jcore.Literal):
+        return EMPTY
+    return env.get(atom, EMPTY)
+
+
+def walk_closed(closed: "jcore.ClosedJaxpr", in_taints: Sequence[Taint],
+                visit: Visitor | None = None) -> list[Taint]:
+    """Walk a ClosedJaxpr, propagating taint from its inputs.
+
+    ``in_taints`` aligns with ``closed.jaxpr.invars`` (one frozenset per
+    flattened argument; use ``EMPTY`` for untainted args). Consts are
+    untainted. Returns the taints of the jaxpr's outputs.
+    """
+    jaxpr = closed.jaxpr
+    if len(in_taints) != len(jaxpr.invars):
+        raise ValueError(
+            f"in_taints has {len(in_taints)} entries for a jaxpr with "
+            f"{len(jaxpr.invars)} invars")
+    return _eval(jaxpr, [EMPTY] * len(jaxpr.constvars), list(in_taints), visit)
+
+
+def _eval(jaxpr: "jcore.Jaxpr", const_taints: list[Taint],
+          arg_taints: list[Taint], visit: Visitor | None) -> list[Taint]:
+    env: dict = {}
+    for v, t in zip(jaxpr.constvars, const_taints):
+        env[v] = t
+    for v, t in zip(jaxpr.invars, arg_taints):
+        env[v] = t
+    for eqn in jaxpr.eqns:
+        ins = [_read(env, a) for a in eqn.invars]
+        outs = _propagate(eqn, ins, visit)
+        if visit is not None:
+            override = visit(eqn, ins, outs)
+            if override is not None:
+                outs = list(override)
+        for v, t in zip(eqn.outvars, outs):
+            env[v] = env.get(v, EMPTY) | t
+    return [_read(env, v) for v in jaxpr.outvars]
+
+
+def _closed_sub(inner, arg_taints: list[Taint], visit) -> list[Taint]:
+    """Walk a sub-jaxpr that may be Closed (consts bound) or open."""
+    if isinstance(inner, jcore.ClosedJaxpr):
+        j = inner.jaxpr
+        return _eval(j, [EMPTY] * len(j.constvars), arg_taints, visit)
+    return _eval(inner, [EMPTY] * len(inner.constvars), arg_taints, visit)
+
+
+def _aligned(inner, ins: list[Taint], num_consts: int) -> list[Taint] | None:
+    """Map the call equation's input taints onto the inner jaxpr's invars.
+
+    Call-like primitives carry their closure constants as leading invars
+    (``num_consts``); the remainder map positionally. Returns None when the
+    counts cannot be reconciled (caller falls back to conservative union).
+    """
+    j = inner.jaxpr if isinstance(inner, jcore.ClosedJaxpr) else inner
+    n = len(j.invars)
+    if n == len(ins):
+        return ins
+    if n == len(ins) - num_consts:
+        return ins[num_consts:]
+    return None
+
+
+def _propagate(eqn, ins: list[Taint], visit) -> list[Taint]:
+    prim = eqn.primitive.name
+    default = Taint().union(*ins) if ins else EMPTY
+    n_out = len(eqn.outvars)
+
+    if prim == "pjit":
+        return _closed_sub(eqn.params["jaxpr"], ins, visit)
+    if prim in ("closed_call", "core_call", "call"):
+        return _closed_sub(eqn.params["call_jaxpr"], ins, visit)
+    if prim in ("remat2", "checkpoint"):
+        args = _aligned(eqn.params["jaxpr"], ins, 0)
+        if args is None:
+            return [default] * n_out
+        return _closed_sub(eqn.params["jaxpr"], args, visit)
+    if prim == "custom_vjp_call_jaxpr":
+        inner = eqn.params["fun_jaxpr"]
+        args = _aligned(inner, ins, eqn.params.get("num_consts", 0))
+        if args is None:
+            return [default] * n_out
+        return _closed_sub(inner, args, visit)
+    if prim in ("custom_jvp_call", "custom_vjp_call"):
+        inner = eqn.params.get("call_jaxpr")
+        if inner is None:
+            return [default] * n_out
+        args = _aligned(inner, ins, eqn.params.get("num_consts", 0))
+        if args is None:
+            return [default] * n_out
+        return _closed_sub(inner, args, visit)
+    if prim == "scan":
+        return _scan(eqn, ins, visit)
+    if prim == "while":
+        return _while(eqn, ins, visit)
+    if prim == "cond":
+        outs = [EMPTY] * n_out
+        for br in eqn.params["branches"]:
+            b_outs = _closed_sub(br, ins[1:], visit)
+            outs = [a | b for a, b in zip(outs, b_outs)]
+        return outs
+    if prim == "pallas_call":
+        # Opaque: the kernel body sees blocks, not full operands. All-in →
+        # all-out is the sound (and tight enough) summary for full-shape
+        # rules; the call eqn itself is still visited with full shapes.
+        return [default] * n_out
+
+    # Unknown higher-order primitive with an embedded jaxpr: try positional
+    # alignment, else stay conservative (union without descending).
+    subs = [v for v in eqn.params.values()
+            if isinstance(v, (jcore.Jaxpr, jcore.ClosedJaxpr))]
+    if len(subs) == 1:
+        args = _aligned(subs[0], ins, 0)
+        if args is not None:
+            return _closed_sub(subs[0], args, visit)
+    return [default] * n_out
+
+
+def _scan(eqn, ins: list[Taint], visit) -> list[Taint]:
+    nc = eqn.params["num_consts"]
+    ncarry = eqn.params["num_carry"]
+    inner = eqn.params["jaxpr"]
+    consts_t = ins[:nc]
+    carry_t = list(ins[nc:nc + ncarry])
+    xs_t = ins[nc + ncarry:]
+    outs: list[Taint] = []
+    for _ in range(64):  # fixpoint; label lattice makes this converge fast
+        outs = _closed_sub(inner, consts_t + carry_t + xs_t, visit)
+        new_carry = [c | o for c, o in zip(carry_t, outs[:ncarry])]
+        if new_carry == carry_t:
+            break
+        carry_t = new_carry
+    return carry_t + outs[ncarry:]
+
+
+def _while(eqn, ins: list[Taint], visit) -> list[Taint]:
+    cn = eqn.params["cond_nconsts"]
+    bn = eqn.params["body_nconsts"]
+    cond_consts = ins[:cn]
+    body_consts = ins[cn:cn + bn]
+    carry = list(ins[cn + bn:])
+    for _ in range(64):
+        outs = _closed_sub(eqn.params["body_jaxpr"], body_consts + carry, visit)
+        new_carry = [c | o for c, o in zip(carry, outs)]
+        if new_carry == carry:
+            break
+        carry = new_carry
+    _closed_sub(eqn.params["cond_jaxpr"], cond_consts + carry, visit)
+    return carry

@@ -295,24 +295,32 @@ def _compressed_bwd2_dx(dy, values_f, idx_packed, rc_packed, idxT_packed,
     dy2 = dy.reshape(-1, dy.shape[-1])
     kernel = ops.resolve_backend(backend) != "xla"
     if kernel and idxT_packed is not None and permT is not None:
-        keepT = unpack_bools(rcT_packed, kT)
-        valsT = jnp.where(keepT, values_f.reshape(-1)[permT],
-                          0).astype(values_f.dtype)
-        dx = ops.nm_spmm_packed(dy2, valsT, idxT_packed,
-                                n=n, m=m, backend=backend)
-        return dx.reshape(*lead, -1)
-    idx = unpack_indices(idx_packed, m, k)
-    rc = unpack_bools(rc_packed, k)
-    # Survivors that lost the column prune are zeroed before the dense
-    # expansion (the lossy double-pruned weight of Eq. 6).
-    w_rc = decompress_select(jnp.where(rc, values_f, 0), idx, n, m)
-    if kernel and idxT_packed is not None:
-        return _cached_bwd2_dx(dy, w_rc, idxT_packed, rcT_packed, n, m, backend)
-    if kernel and d_out % m == 0:
-        ct = compress(w_rc.T, w_rc.T != 0, n, m)
-        dx = ops.nm_spmm(dy2, ct.values, ct.indices, n=n, m=m, backend=backend)
-        return dx.reshape(*lead, -1)
-    return dy @ w_rc
+        # O(kT) permutation path — every tensor here is compressed-sized;
+        # the scope keeps the analyzer's dense-shape heuristic off it (a
+        # (d_out, k) metadata tensor can collide with another layer's
+        # (d_out, d_in) at smoke scale).
+        with jax.named_scope("slope_sparse_bwd2"):
+            keepT = unpack_bools(rcT_packed, kT)
+            valsT = jnp.where(keepT, values_f.reshape(-1)[permT],
+                              0).astype(values_f.dtype)
+            dx = ops.nm_spmm_packed(dy2, valsT, idxT_packed,
+                                    n=n, m=m, backend=backend)
+            return dx.reshape(*lead, -1)
+    with jax.named_scope("slope_dense_bwd2_fallback"):
+        idx = unpack_indices(idx_packed, m, k)
+        rc = unpack_bools(rc_packed, k)
+        # Survivors that lost the column prune are zeroed before the dense
+        # expansion (the lossy double-pruned weight of Eq. 6).
+        w_rc = decompress_select(jnp.where(rc, values_f, 0), idx, n, m)
+        if kernel and idxT_packed is not None:
+            return _cached_bwd2_dx(dy, w_rc, idxT_packed, rcT_packed, n, m,
+                                   backend)
+        if kernel and d_out % m == 0:
+            ct = compress(w_rc.T, w_rc.T != 0, n, m)
+            dx = ops.nm_spmm(dy2, ct.values, ct.indices, n=n, m=m,
+                             backend=backend)
+            return dx.reshape(*lead, -1)
+        return dy @ w_rc
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
@@ -359,7 +367,10 @@ def _masked_matmul_bwd(static, res, dy):
     else:
         dx = dy @ w_rc
     x2 = x.reshape(-1, x.shape[-1])
-    dw = (dy2.T @ x2) * mask_r
+    # BWD-1 is an inherently dense outer product (paper keeps it dense);
+    # the named scope lets the analyzer waive it by attribution.
+    with jax.named_scope("slope_dense_dw"):
+        dw = (dy2.T @ x2) * mask_r
     return dx, dw, None, None, None, None
 
 
@@ -397,7 +408,8 @@ def _compressed_matmul_bwd(static, res, dy):
     idx = unpack_indices(idx_packed, m, k)
     dy2 = dy.reshape(-1, dy.shape[-1])
     x2 = x.reshape(-1, x.shape[-1])
-    dvalues = group_compress_select(dy2.T @ x2, idx, n, m).astype(values.dtype)
+    with jax.named_scope("slope_dense_dw"):
+        dvalues = group_compress_select(dy2.T @ x2, idx, n, m).astype(values.dtype)
     return dx, dvalues, None, None, None, None, None
 
 
@@ -445,7 +457,8 @@ def _compressed_q8_matmul_bwd(static, res, dy):
     idx = unpack_indices(idx_packed, m, k)
     dy2 = dy.reshape(-1, dy.shape[-1])
     x2 = x.reshape(-1, x.shape[-1])
-    dvals = group_compress_select((dy2.T @ x2).astype(jnp.float32), idx, n, m)
+    with jax.named_scope("slope_dense_dw"):
+        dvals = group_compress_select((dy2.T @ x2).astype(jnp.float32), idx, n, m)
     d_out = values_q.shape[0]
     q_group = k // scales.shape[-1]
     dscales = (dvals * values_q.astype(jnp.float32)).reshape(
@@ -487,7 +500,8 @@ def _srste_matmul_bwd(static, res, dy):
     dx = dy @ ws
     dy2 = dy.reshape(-1, dy.shape[-1])
     x2 = x.reshape(-1, x.shape[-1])
-    dw = dy2.T @ x2 + decay * jnp.where(mask, 0.0, w)
+    with jax.named_scope("slope_dense_dw"):
+        dw = dy2.T @ x2 + decay * jnp.where(mask, 0.0, w)
     return dx, dw
 
 

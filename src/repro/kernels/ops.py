@@ -11,10 +11,22 @@ Block shapes are auto-fitted to the operand dims when not given explicitly
 (largest divisor ≤ the MXU-friendly default, ``block_k`` kept a multiple of
 M), so the model path never trips the kernels' divisibility asserts on odd
 batch/feature sizes.
+
+Lint invariants (checked by ``repro.analysis``, rule no-dense-materialization):
+
+* The q8 out-of-kernel dequant fallback in ``_q8_kernel_operands`` must never
+  engage on auto-fitted blocks. When it does engage (explicitly passed
+  straddling ``block_k``), it increments ``Q8_FALLBACK_EVENTS``, warns once
+  per process, and runs under the ``q8_dequant_fallback`` named scope — the
+  counter and scope are the markers the analyzer (and compiled-HLO scan)
+  read. Keep all three in sync if this path changes.
+* No code in this module may expand a compressed payload to a full
+  ``(d_out, d_in)`` matrix; even the fallback above stays O(nnz).
 """
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +40,13 @@ __all__ = ["nm_spmm", "nm_spmm_packed", "sparse_lora_matmul", "nm_prune",
            "dense_matmul", "default_backend", "resolve_backend", "BACKENDS"]
 
 BACKENDS = ("auto", "xla", "pallas", "pallas_interpret")
+
+#: Times the q8 out-of-kernel dequant fallback engaged in this process.
+#: Read (as a delta across a trace) by ``repro.analysis``; incremented at
+#: Python trace time, so a jitted model that hits the fallback bumps it once
+#: per compilation, not per step.
+Q8_FALLBACK_EVENTS = 0
+_q8_fallback_warned = False
 
 
 def default_backend() -> str:
@@ -89,8 +108,19 @@ def _q8_kernel_operands(values, scales, block_k, n, m, like_dtype):
         return values, None
     q_group = values.shape[-1] // scales.shape[-1]
     if (block_k * n // m) % q_group:
+        global Q8_FALLBACK_EVENTS, _q8_fallback_warned
+        Q8_FALLBACK_EVENTS += 1
+        if not _q8_fallback_warned:
+            _q8_fallback_warned = True
+            warnings.warn(
+                f"q8 dequant fallback: block_k={block_k} straddles scale "
+                f"groups (q_group={q_group}); streaming dequantized float "
+                "payload instead of int8. Pass a block_k with "
+                "(block_k*n//m) % q_group == 0 to keep int8 streaming.",
+                RuntimeWarning, stacklevel=3)
         from repro.core.sparse import dequantize_q8  # deferred: no cycle
-        return dequantize_q8(values, scales).astype(like_dtype), None
+        with jax.named_scope("q8_dequant_fallback"):
+            return dequantize_q8(values, scales).astype(like_dtype), None
     return values, scales
 
 
@@ -187,4 +217,8 @@ def dense_matmul(x, w, *, backend: str = "auto") -> jax.Array:
     ones — ``resolve_backend`` still validates the flag.
     """
     resolve_backend(backend)
-    return x @ w.T
+    # Intentionally-dense layer (paper keeps first layer / heads dense): the
+    # scope tells the analyzer this dot — and its AD transposes — are not a
+    # sparse-payload materialization even when shapes collide.
+    with jax.named_scope("slope_dense_ok"):
+        return x @ w.T

@@ -42,6 +42,7 @@ from repro.launch.specs import (abstract_caches, abstract_params,
                                 abstract_state, decode_input_specs,
                                 train_input_specs)
 from repro.models import build_model
+from repro.analysis.hlo import scan_compiled_hlo
 from repro.roofline import RooflineReport, collective_bytes, model_flops
 from repro.roofline.hlo_parse import analyze_hlo
 from repro.sharding.specs import (activation_policy, batch_specs, cache_specs,
@@ -242,6 +243,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str = "base",
         "hlo_analysis": {"dot_flops": hc.dot_flops,
                          "while_trips": hc.while_trips,
                          "unknown_whiles": hc.unknown_whiles},
+        # Report-only scope-marker scan (repro.analysis): deny markers like
+        # q8_dequant_fallback reaching compiled HLO show up here first.
+        "graph_lint": scan_compiled_hlo(hlo),
         "memory_analysis": mem,
         "collectives": coll,
         "roofline": rep.to_dict(),

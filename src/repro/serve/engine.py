@@ -44,6 +44,23 @@ drain, return outputs in order). ``StaticBatchEngine`` preserves the
 previous whole-batch loop as the scheduling baseline for
 ``benchmarks/serve_throughput.py`` (it supports the paged layout too, but
 pins every slot's full row — capacity parity, no packing win).
+
+Lint invariants (checked by ``repro.analysis``):
+
+* **single-host-sync** — a steady-state decode tick performs exactly one
+  device→host transfer (the sampled-token fetch). Every tick-path sync MUST
+  route through :func:`host_fetch`, which counts into ``HOST_SYNC_EVENTS``;
+  the analyzer cross-checks that counter against an ``np.asarray``
+  interception and statically lints the tick-path functions for stray
+  transfer calls. ``jnp.asarray``/``np.array`` over host numpy state are
+  *not* syncs (zero-copy H2D / host-side copies) and stay out of
+  ``host_fetch``.
+* **retrace-guard** — ``_decode_jit``/``_finalize_jit`` hold exactly one
+  cache entry across any admission/eviction schedule; ``_prefill_jit`` at
+  most two (``fresh`` is a static arg). Anything that varies per request
+  must be array *contents*, never Python values baked into the trace.
+* The jitted bodies run under ``serve_decode`` / ``serve_prefill_chunk`` /
+  ``serve_finalize`` named scopes so graph rules can attribute findings.
 """
 from __future__ import annotations
 
@@ -60,7 +77,25 @@ from repro.models.model_zoo import Model
 
 from .scheduler import Request, Scheduler, SchedulerStats, padded_len
 
-__all__ = ["ServeEngine", "StaticBatchEngine", "replay_stream"]
+__all__ = ["ServeEngine", "StaticBatchEngine", "replay_stream", "host_fetch"]
+
+#: Device→host transfers performed via ``host_fetch`` in this process.
+#: ``repro.analysis``'s single-host-sync rule asserts the delta over a
+#: steady-state measurement window equals exactly one per decode tick.
+HOST_SYNC_EVENTS = 0
+
+
+def host_fetch(x) -> np.ndarray:
+    """The designated device→host transfer point for the serve tick path.
+
+    Every host sync on the per-tick path MUST route through here so the
+    single-host-sync invariant stays countable (see module docstring); the
+    analyzer's AST lint flags any other transfer call in tick-path
+    functions.
+    """
+    global HOST_SYNC_EVENTS
+    HOST_SYNC_EVENTS += 1
+    return np.asarray(x)
 
 
 def _sample_tokens(lg, temps, topks, seeds, ntoks):
@@ -254,34 +289,42 @@ class ServeEngine(_EngineBase):
 
         def _prefill_chunk_fn(params, caches, tokens, off, slot, enc_out=None,
                               *, fresh=False):
-            sub = mdl.gather_cache_slot(caches, slot)
-            if fresh:
-                # First chunk of a recycled slot: blank the previous
-                # occupant's cache in the same jitted call (per-family
-                # owner resets), saving a dispatch per admission.
-                sub = mdl.reset_cache_slots(sub, jnp.ones((1,), bool))
-            _, sub = mdl.decode_step(params, tokens, sub, off, enc_out=enc_out)
-            return mdl.scatter_cache_slot(caches, sub, slot)
+            with jax.named_scope("serve_prefill_chunk"):
+                sub = mdl.gather_cache_slot(caches, slot)
+                if fresh:
+                    # First chunk of a recycled slot: blank the previous
+                    # occupant's cache in the same jitted call (per-family
+                    # owner resets), saving a dispatch per admission.
+                    sub = mdl.reset_cache_slots(sub, jnp.ones((1,), bool))
+                _, sub = mdl.decode_step(params, tokens, sub, off,
+                                         enc_out=enc_out)
+                return mdl.scatter_cache_slot(caches, sub, slot)
 
         def _finalize_fn(params, caches, last_tok, length, slot, enc_out=None):
-            sub = mdl.gather_cache_slot(caches, slot)
-            # Drop the chunk-padding cache entries, then re-decode the last
-            # real token — the same sequence the whole-batch prefill runs.
-            sub = mdl.invalidate_cache_padding(sub, length[None])
-            logits, sub = mdl.decode_step(params, last_tok, sub, length - 1,
-                                          enc_out=enc_out)
-            return logits, mdl.scatter_cache_slot(caches, sub, slot)
+            with jax.named_scope("serve_finalize"):
+                sub = mdl.gather_cache_slot(caches, slot)
+                # Drop the chunk-padding cache entries, then re-decode the
+                # last real token — the same sequence the whole-batch
+                # prefill runs.
+                sub = mdl.invalidate_cache_padding(sub, length[None])
+                logits, sub = mdl.decode_step(params, last_tok, sub,
+                                              length - 1, enc_out=enc_out)
+                return logits, mdl.scatter_cache_slot(caches, sub, slot)
 
         def _decode_fn(params, caches, tok, pos, active, temps, topks, seeds,
                        ntoks, enc_out=None):
-            logits, new_caches = mdl.decode_step(params, tok[:, None], caches,
-                                                 pos, enc_out=enc_out)
-            # Per-request sampling params live in per-slot arrays: one trace
-            # serves every temperature/top_k/seed mix.
-            nxt = _sample_tokens(logits[:, -1, :], temps, topks, seeds, ntoks)
-            # Write-mask: free / mid-prefill lanes keep their previous cache.
-            new_caches = mdl.select_cache_slots(active, new_caches, caches)
-            return nxt, new_caches
+            with jax.named_scope("serve_decode"):
+                logits, new_caches = mdl.decode_step(params, tok[:, None],
+                                                     caches, pos,
+                                                     enc_out=enc_out)
+                # Per-request sampling params live in per-slot arrays: one
+                # trace serves every temperature/top_k/seed mix.
+                nxt = _sample_tokens(logits[:, -1, :], temps, topks, seeds,
+                                     ntoks)
+                # Write-mask: free / mid-prefill lanes keep their previous
+                # cache.
+                new_caches = mdl.select_cache_slots(active, new_caches, caches)
+                return nxt, new_caches
 
         self._prefill_jit = jax.jit(_prefill_chunk_fn,
                                     static_argnames=("fresh",))
@@ -471,7 +514,7 @@ class ServeEngine(_EngineBase):
                                  jnp.asarray(self._topk[slot:slot + 1]),
                                  jnp.asarray(self._seedv[slot:slot + 1]),
                                  jnp.asarray(self._ntok[slot:slot + 1]))
-        return int(nxt[0])
+        return int(host_fetch(nxt)[0])
 
     def _decode_tick(self, decoding: list[Request]) -> None:
         active = self._active.copy()
@@ -492,7 +535,7 @@ class ServeEngine(_EngineBase):
             st.lanes_per_slot[req.slot] += 1
         if self.scheduler.trace:
             st.decode_active.append(tuple(bool(a) for a in active))
-        nxt = np.asarray(nxt)   # the one host sync per generated token
+        nxt = host_fetch(nxt)   # the one host sync per generated token
         for req in decoding:
             self._pos[req.slot] += 1
             self._emit(req, int(nxt[req.slot]))

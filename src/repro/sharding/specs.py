@@ -41,7 +41,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.repr import matrix_param_names, matrix_t_param_names
 
 __all__ = ["param_specs", "batch_specs", "cache_specs", "activation_policy",
-           "constrain", "named_shardings", "logical_axes"]
+           "constrain", "named_shardings", "logical_axes",
+           "match_param_rules", "leaf_path_str"]
 
 
 def logical_axes(mesh: Mesh) -> dict:
@@ -94,6 +95,11 @@ def _path_str(path) -> str:
     return "/" + "/".join(parts) + "/"
 
 
+#: Public alias: the path-string convention rules are written against.
+def leaf_path_str(path) -> str:
+    return _path_str(path)
+
+
 def _role(path: str) -> str | None:
     for name in _COL:
         if f"/{name}/" in path:
@@ -104,33 +110,95 @@ def _role(path: str) -> str | None:
     return None
 
 
+# --------------------------------------------------------------------------
+# Parameter rules, named and individually matchable. ``_PARAM_RULES`` is an
+# ordered (name, predicate) table: ``_param_rule`` dispatches on the first
+# hit (exactly the old ``_leaf_spec`` if/elif chain), while
+# ``match_param_rules`` evaluates every predicate independently so
+# ``repro.analysis``'s sharding-coverage rule can assert each leaf is
+# claimed by exactly one rule (the fallback ``"replicate"`` never counts as
+# a claim).
+# --------------------------------------------------------------------------
+
+_PARAM_RULES: tuple = (
+    ("embedding", lambda path, shape, mat, mat_t:
+        "/embedding/" in path),
+    ("head", lambda path, shape, mat, mat_t:
+        "/head/" in path),
+    ("pos_embed", lambda path, shape, mat, mat_t:
+        "/pos_embed/" in path),
+    ("router", lambda path, shape, mat, mat_t:
+        "/router/" in path),
+    ("lora", lambda path, shape, mat, mat_t:
+        "/lora/" in path),
+    ("bias", lambda path, shape, mat, mat_t:
+        path.endswith("/b/")),
+    # Per-feature norm gains and short conv kernels are replicated *by
+    # design* (tiny next to the matrices); naming them keeps the coverage
+    # rule's "fell through to replication" finding meaningful — stacked
+    # norm scales (L, d) and conv taps (T, k, d) are 2-D+ and big enough
+    # to trip the large-leaf threshold otherwise.
+    ("norm_scale", lambda path, shape, mat, mat_t:
+        path.endswith("/scale/")),
+    ("conv", lambda path, shape, mat, mat_t:
+        "/conv" in path),
+    ("matrix_t", lambda path, shape, mat, mat_t:
+        any(f"/{k}/" in path for k in mat_t)
+        and _role(path) is not None and len(shape) >= 2),
+    ("matrix", lambda path, shape, mat, mat_t:
+        any(f"/{k}/" in path for k in mat)
+        and _role(path) is not None and len(shape) >= 2),
+)
+
+
+def _param_rule(path: str, shape, matrix_leaves, matrix_t_leaves) -> str:
+    for name, pred in _PARAM_RULES:
+        if pred(path, shape, matrix_leaves, matrix_t_leaves):
+            return name
+    return "replicate"
+
+
+def match_param_rules(path: str, shape, matrix_leaves=None,
+                      matrix_t_leaves=None) -> list[str]:
+    """All non-fallback rule names whose predicate claims this leaf."""
+    if matrix_leaves is None:
+        matrix_leaves = matrix_param_names()
+    if matrix_t_leaves is None:
+        matrix_t_leaves = matrix_t_param_names()
+    return [name for name, pred in _PARAM_RULES
+            if pred(path, shape, matrix_leaves, matrix_t_leaves)]
+
+
 def _leaf_spec(path: str, shape, mesh: Mesh, ax: dict, moe_ep: bool,
                matrix_leaves: frozenset[str],
                matrix_t_leaves: frozenset[str]) -> P:
     tp, fsdp = ax["tp"], ax["fsdp"]
     nd = len(shape)
     role = _role(path)
+    rule = _param_rule(path, shape, matrix_leaves, matrix_t_leaves)
 
-    if "/embedding/" in path:
+    if rule == "embedding":
         return _guard(mesh, shape, [tp, None])
-    if "/head/" in path:
+    if rule == "head":
         return _guard(mesh, shape, [tp, fsdp])
-    if "/pos_embed/" in path:
+    if rule == "pos_embed":
         return _guard(mesh, shape, [None, tp])
-    if "/router/" in path:
+    if rule == "router":
         return P(*([None] * nd))
 
     in_expert = "/experts/" in path
-    if "/lora/" in path:
+    if rule == "lora":
         if "/l/" in path:  # (d_out, rank)
             return _guard(mesh, shape, [tp if role == "col" else fsdp, None])
         return _guard(mesh, shape, [None, fsdp if role == "col" else tp])
 
-    if path.endswith("/b/"):  # linear bias (d_out,)
+    if rule == "bias":  # linear bias (d_out,)
         return _guard(mesh, shape, [tp if role == "col" else None])
 
-    is_mat_t = any(f"/{k}/" in path for k in matrix_t_leaves)
-    if is_mat_t and role is not None and nd >= 2:
+    if rule in ("norm_scale", "conv"):  # replicated by design
+        return P(*([None] * nd))
+
+    if rule == "matrix_t":
         # Transposed backward metadata (idxT/rcT): leading axis is the
         # weight's d_in, so the weight's spec applies with its tail swapped —
         # the cache shards *with* the weight it serves (FSDP gathers move the
@@ -146,8 +214,7 @@ def _leaf_spec(path: str, shape, mesh: Mesh, ax: dict, moe_ep: bool,
             return _guard(mesh, shape, [fsdp, tp])
         return _guard(mesh, shape, [tp, fsdp])
 
-    is_mat = any(f"/{k}/" in path for k in matrix_leaves)
-    if is_mat and role is not None and nd >= 2:
+    if rule == "matrix":
         if in_expert:
             e_ax = tp if moe_ep else None
             inner_tp = None if moe_ep else tp
