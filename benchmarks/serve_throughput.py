@@ -1,6 +1,6 @@
-"""Serving-throughput benchmarks: scheduling and KV-cache layout.
+"""Serving-throughput benchmarks: scheduling, KV-cache layout, prefix sharing.
 
-Two sweeps share the harness:
+Three sweeps share the harness:
 
 1. **static vs continuous batching** — replays the same request trace
    (Poisson arrivals, mixed prompt lengths, mixed per-request generation
@@ -15,12 +15,24 @@ Two sweeps share the harness:
    engine as a shared page pool with more slots — short requests stop paying
    for long ones, so more requests fit in flight (``peak_admitted``) and
    more decode lanes run per step (tokens/s). Writes
-   ``BENCH_paged_kv.json`` with admitted concurrency + tokens/s per layout.
+   ``BENCH_paged_kv.json`` with admitted concurrency, tokens/s,
+   ``pool_utilization`` (peak pages in use / pool size) and
+   ``prefix_hit_rate`` per layout.
+
+3. **shared-prefix burst at equal HBM** — N requests carrying one common
+   system prompt, served once under ``admission="reserve"`` (worst-case
+   page reservation, no sharing) and once under the default optimistic
+   policy with the prefix index: the system prompt prefills once, every
+   follower ref-shares its pages, and admission gates on *current* rather
+   than worst-case need — so the same pool admits strictly more requests
+   at once. Writes ``BENCH_prefix_sharing.json`` with ``prefix_hit_rate``
+   and ``concurrency_gain``.
 
 Throughput counts only *useful* tokens (each request's own budget). Emits
 CSV rows through the shared harness; the fast-CI smoke (``--smoke`` /
-``fast=True``) runs one arrival rate per quantize setting plus one paged
-sweep pass — ``scripts/test.sh --bench-smoke`` validates both artifacts.
+``fast=True``) runs one arrival rate per quantize setting plus one pass of
+the paged and shared-prefix sweeps — ``scripts/test.sh --bench-smoke``
+validates all three artifacts.
 
 Run directly (``python -m benchmarks.serve_throughput --smoke``) or via
 ``python -m benchmarks.run --only serve_throughput``.
@@ -147,8 +159,13 @@ def paged_kv(fast: bool = True) -> None:
             r = _run_continuous(eng, trace, slots)
             r["peak_admitted"] = eng.stats.peak_admitted
             if layout == "paged":
-                r["peak_pages_in_use"] = eng.stats.peak_pages_in_use
-                r["pages_granted"] = eng.stats.pages_granted
+                st = eng.stats
+                r["peak_pages_in_use"] = st.peak_pages_in_use
+                r["pages_granted"] = st.pages_granted
+                r["pool_utilization"] = st.peak_pages_in_use / num_pages
+                r["prefix_hit_rate"] = (st.prefix_hit_tokens
+                                        / max(st.prompt_tokens, 1))
+                r["preemptions"] = st.preemptions
             best = max(best, r, key=lambda x: x["tokens_per_s"])
         rows[layout] = dict(best, layout=layout, slots=slots)
         emit("paged_kv", layout, None,
@@ -173,6 +190,97 @@ def paged_kv(fast: bool = True) -> None:
     emit("paged_kv", "json", None,
          derived=f"BENCH_paged_kv.json | {speedup:.2f}x tok/s, "
                  f"{payload['concurrency_gain']:.1f}x admitted")
+
+
+def shared_prefix(fast: bool = True) -> None:
+    """Shared-system-prompt burst: prefix sharing vs worst-case reservation.
+
+    One leader request runs first and publishes the system prompt's pages to
+    the prefix index; a burst of N followers (same system prompt, unique
+    user suffixes) then arrives at once. Under the optimistic policy each
+    follower adopts the shared pages (prefilling only its suffix) and is
+    admitted on its *current* page need; under ``admission="reserve"`` each
+    must reserve its worst-case need up front, so the same pool admits far
+    fewer at a time. Both runs get the identical pool (equal HBM) and the
+    identical prompts; ``prefix_hit_rate`` is measured over the burst only
+    (the leader can't hit an empty index).
+    """
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    from repro.serve import ServeEngine
+
+    cfg = get_smoke_config("gpt2-small")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    cache_len, chunk, ps = 256, 16, 16
+    slots, max_new = 8, 16
+    sys_len, suffix_len = 192, 8        # sys_len % lcm(chunk, ps) == 0
+    n_burst = 8 if fast else 16
+    # Equal-HBM pool, sized so reserve is page-limited: one request's
+    # worst-case need is ceil((200 + 16) / 16) = 14 pages -> reserve admits
+    # floor(34 / 14) = 2 at a time, while sharing needs 12 (trie) + 2
+    # private per follower = 28 for the whole burst of 8.
+    num_pages = 34
+    rng = np.random.default_rng(23)
+    system = list(map(int, rng.integers(2, cfg.vocab_size, sys_len)))
+    prompts = [system + list(map(int, rng.integers(2, cfg.vocab_size,
+                                                   suffix_len)))
+               for _ in range(n_burst + 1)]    # [0] is the leader
+
+    rows = {}
+    for policy in ("reserve", "optimistic"):
+        eng = ServeEngine(model, params, cache_len=cache_len,
+                          prefill_chunk=chunk, eos=-1, max_slots=slots,
+                          cache_layout="paged", page_size=ps,
+                          num_pages=num_pages, admission=policy)
+        eng.generate([prompts[0]] * slots, 2)   # warm compiles off the clock
+        eng.start(slots)
+        eng.submit(prompts[0], max_new)         # leader populates the index
+        eng.run()
+        st = eng.stats
+        base = (st.prefix_hit_tokens, st.prompt_tokens)
+        t0 = time.perf_counter()
+        burst = [eng.submit(p, max_new) for p in prompts[1:]]
+        eng.run()
+        elapsed = time.perf_counter() - t0
+        tokens = sum(len(r.out) for r in burst)
+        rows[policy] = {
+            "admission": policy,
+            "tokens": tokens, "elapsed_s": elapsed,
+            "tokens_per_s": tokens / max(elapsed, 1e-9),
+            "peak_admitted": st.peak_admitted,
+            "prefix_hit_rate": ((st.prefix_hit_tokens - base[0])
+                                / max(st.prompt_tokens - base[1], 1)),
+            "prefill_chunks": st.prefill_chunks,
+            "pool_utilization": st.peak_pages_in_use / num_pages,
+            "preemptions": st.preemptions,
+            "cow_clones": st.cow_clones,
+        }
+        emit("prefix_sharing", policy, None,
+             derived=f"{rows[policy]['tokens_per_s']:.1f} tok/s | peak "
+                     f"admitted {st.peak_admitted} | hit rate "
+                     f"{rows[policy]['prefix_hit_rate']:.2f}")
+
+    gain = (rows["optimistic"]["peak_admitted"]
+            / max(rows["reserve"]["peak_admitted"], 1))
+    payload = {"arch": "gpt2-small(smoke)", "cache_len": cache_len,
+               "page_size": ps, "num_pages": num_pages,
+               "prefill_chunk": chunk, "slots": slots,
+               "system_prompt_len": sys_len, "suffix_len": suffix_len,
+               "burst": n_burst, "max_new": max_new,
+               "results": [rows["reserve"], rows["optimistic"]],
+               "prefix_hit_rate": rows["optimistic"]["prefix_hit_rate"],
+               "concurrency_gain": gain,
+               "speedup": (rows["optimistic"]["tokens_per_s"]
+                           / max(rows["reserve"]["tokens_per_s"], 1e-9))}
+    out = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "BENCH_prefix_sharing.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("prefix_sharing", "json", None,
+         derived=f"BENCH_prefix_sharing.json | hit rate "
+                 f"{payload['prefix_hit_rate']:.2f}, {gain:.1f}x admitted")
 
 
 def main(fast: bool = True) -> None:
@@ -241,6 +349,7 @@ def main(fast: bool = True) -> None:
         json.dump(payload, f, indent=2)
     emit("serve_throughput", "json", None, derived="BENCH_serve_throughput.json")
     paged_kv(fast=fast)
+    shared_prefix(fast=fast)
 
 
 if __name__ == "__main__":

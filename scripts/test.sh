@@ -54,7 +54,7 @@ fi
 python -m pytest -x -q ${args[@]+"${args[@]}"}
 # Scheduler-throughput smoke: a bench that runs but emits no artifact (or an
 # artifact with no results) must turn the lane red, not silently pass.
-rm -f BENCH_serve_throughput.json BENCH_paged_kv.json
+rm -f BENCH_serve_throughput.json BENCH_paged_kv.json BENCH_prefix_sharing.json
 python -m benchmarks.serve_throughput --smoke
 python - <<'PY'
 import json
@@ -98,4 +98,26 @@ if paged.get("speedup", 0) < 1.0:
           f"({paged.get('speedup'):.2f}x) — noise, or the layout regressed")
 print(f"scripts/test.sh: paged-kv smoke ok — {paged['speedup']:.2f}x tok/s, "
       f"{paged['concurrency_gain']:.1f}x admitted concurrency")
+
+# Shared-prefix burst: the prefix index must actually share (hit rate > 0 —
+# a zero means followers re-prefilled the common system prompt) and
+# optimistic admission must admit strictly more than the reserve baseline
+# at equal HBM. Both are deterministic, so both are blocking.
+try:
+    with open("BENCH_prefix_sharing.json") as f:
+        pfx = json.load(f)
+except (FileNotFoundError, json.JSONDecodeError) as e:
+    sys.exit(f"scripts/test.sh: prefix-sharing smoke emitted no usable JSON: {e}")
+rows = pfx.get("results") or []
+if len(rows) != 2 or any("peak_admitted" not in r or "prefix_hit_rate" not in r
+                         for r in rows):
+    sys.exit(f"scripts/test.sh: malformed BENCH_prefix_sharing.json rows: {rows}")
+if pfx.get("prefix_hit_rate", 0) == 0:
+    sys.exit("scripts/test.sh: prefix sharing hit nothing — the shared system "
+             "prompt was re-prefilled per request")
+if pfx.get("concurrency_gain", 0) <= 1.0:
+    sys.exit("scripts/test.sh: optimistic admission admitted no more requests "
+             f"than worst-case reservation ({pfx.get('concurrency_gain')})")
+print(f"scripts/test.sh: prefix-sharing smoke ok — hit rate "
+      f"{pfx['prefix_hit_rate']:.2f}, {pfx['concurrency_gain']:.1f}x admitted")
 PY

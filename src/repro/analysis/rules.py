@@ -259,12 +259,19 @@ def _varied_schedule(eng, *, rng):
 
 def check_serve_retrace(eng) -> list[str]:
     """Run a varied schedule; report jit caches that grew past their bound
-    (decode/finalize: 1; prefill: 2 — ``fresh`` is a static arg)."""
+    (decode/finalize/COW-clone/prefix-adopt: 1; prefill: 2 — ``fresh`` is a
+    static arg). The COW/adopt paths may legitimately never fire (cache-size
+    0): what is bounded is that per-request values never bake into a trace.
+    """
     _varied_schedule(eng, rng=np.random.default_rng(0))
     probs = []
     for fn, bound in (("_decode_jit", 1), ("_finalize_jit", 1),
-                      ("_prefill_jit", 2)):
-        size = getattr(eng, fn)._cache_size()
+                      ("_prefill_jit", 2), ("_cow_jit", 1),
+                      ("_adopt_jit", 1)):
+        jitted = getattr(eng, fn, None)
+        if jitted is None:
+            continue
+        size = jitted._cache_size()
         if size > bound:
             probs.append(f"{fn}: {size} traces (bound {bound})")
     return probs
@@ -344,7 +351,7 @@ def count_host_syncs():
 #: ServeEngine methods on the per-tick path. A transfer call anywhere in
 #: these must be the designated ``host_fetch``.
 TICK_FUNCS = ("step", "_decode_tick", "_advance_prefill", "_sample_host",
-              "_push_pages", "_emit", "_evict")
+              "_push_pages", "_emit", "_evict", "_handle_preempted")
 
 _TRANSFER_CALLS = ("asarray", "device_get", "item", "tolist")
 

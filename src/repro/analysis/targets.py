@@ -245,7 +245,22 @@ class AnalysisContext:
             "serve-finalize",
             lambda p, c, t, ln, s: eng._finalize_jit(p, c, t, ln, s, None),
             finalize_args, dense_tree=eng.params)
-        return [decode, prefill, finalize]
+        traces = [decode, prefill, finalize]
+        # Multi-tenant prefix-sharing paths (absent on older engines): the
+        # COW page clone and the trie prefix adoption. Both operate on caches
+        # only, so the no-dense rule sees no payload invars — what matters is
+        # the named scope + sync discipline.
+        if getattr(eng, "_cow_jit", None) is not None:
+            traces.append(self._traced(
+                "serve-cow-clone",
+                lambda c, src, dst: eng._cow_jit(c, src, dst),
+                (eng._caches, i32(), i32()), dense_tree=eng.params))
+        if getattr(eng, "_adopt_jit", None) is not None:
+            traces.append(self._traced(
+                "serve-adopt-prefix",
+                lambda c, slot, ln: eng._adopt_jit(c, slot, ln),
+                (eng._caches, i32(), i32()), dense_tree=eng.params))
+        return traces
 
     def trace_freeze(self) -> Trace:
         return self._trace_freeze

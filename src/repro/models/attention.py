@@ -30,7 +30,8 @@ from .layers import apply_rope, make_linear, rope
 
 __all__ = ["make_attention", "KVCache", "PagedKVCache", "init_kv_cache",
            "init_paged_kv_cache", "reset_kv_slots", "invalidate_kv_padding",
-           "chunked_attention", "KV_SLOT_OPS"]
+           "copy_kv_pages", "adopt_kv_prefix", "chunked_attention",
+           "KV_SLOT_OPS"]
 
 NEG_INF = -1e30
 
@@ -113,21 +114,17 @@ def reset_kv_slots(cache, free: jax.Array):
     """Blank the cache of batch slots where ``free`` is True.
 
     Contiguous: zero the slot's k/v row and reset its position row to the
-    -1 "empty" sentinel. Paged: reset the position row and zero the pool
-    pages *currently mapped* to the slot (pages granted later start masked
-    by the -1 positions, so stale pool data is never attended to).
+    -1 "empty" sentinel. Paged: reset *only* the position row — pool bytes
+    are never touched, because a page mapped into the slot's table may now
+    be a refcounted prefix page shared with other slots (or pinned by the
+    prefix trie). This is bitwise-safe: every score against a position-
+    masked entry is exactly ``NEG_INF`` regardless of the KV bytes, so its
+    softmax weight underflows to exactly 0 under both layouts.
     """
     free = free.astype(bool)
     if isinstance(cache, PagedKVCache):
-        owned = _owned_pages(cache.page_table, free, cache.pool_k.shape[0])
-        return PagedKVCache(
-            pool_k=jnp.where(owned[:, None, None, None],
-                             jnp.zeros((), cache.pool_k.dtype), cache.pool_k),
-            pool_v=jnp.where(owned[:, None, None, None],
-                             jnp.zeros((), cache.pool_v.dtype), cache.pool_v),
-            page_table=cache.page_table,
-            positions=jnp.where(free[:, None], jnp.int32(-1), cache.positions),
-        )
+        return cache._replace(
+            positions=jnp.where(free[:, None], jnp.int32(-1), cache.positions))
     return KVCache(
         k=jnp.where(free[:, None, None, None], jnp.zeros((), cache.k.dtype), cache.k),
         v=jnp.where(free[:, None, None, None], jnp.zeros((), cache.v.dtype), cache.v),
@@ -204,11 +201,50 @@ def set_kv_pages(cache, table):
     return cache
 
 
+def copy_kv_pages(cache, src, dst):
+    """Copy-on-write clone: copy pool page ``src`` into pool page ``dst``.
+
+    The scheduler calls this (through the jitted ``_cow_jit`` path) before a
+    slot's first write into a page it shares with the prefix trie or other
+    slots — the slot's table entry has already been repointed at ``dst`` on
+    the host, so after the clone the write lands on private bytes. No-op on
+    contiguous caches (nothing is ever shared there).
+    """
+    if isinstance(cache, PagedKVCache):
+        pk = jax.lax.dynamic_update_slice_in_dim(
+            cache.pool_k,
+            jax.lax.dynamic_slice_in_dim(cache.pool_k, src, 1, 0), dst, 0)
+        pv = jax.lax.dynamic_update_slice_in_dim(
+            cache.pool_v,
+            jax.lax.dynamic_slice_in_dim(cache.pool_v, src, 1, 0), dst, 0)
+        return cache._replace(pool_k=pk, pool_v=pv)
+    return cache
+
+
+def adopt_kv_prefix(cache, slot, length):
+    """Mark ``length`` prefix tokens of ``slot`` as valid without writing KV.
+
+    Used when a request's prompt hits the prefix trie: the shared pages are
+    already linked into the slot's page table (host side, via ``set_pages``),
+    so the KV bytes exist — only the per-slot ``positions`` row must say so.
+    The whole row is rewritten (``[0..length)`` then -1), which doubles as
+    the fresh-slot reset for adopted admissions. No-op on contiguous caches.
+    """
+    if isinstance(cache, PagedKVCache):
+        L = cache.positions.shape[1]
+        ar = jnp.arange(L, dtype=jnp.int32)
+        row = jnp.where(ar < length, ar, jnp.int32(-1))[None]
+        return cache._replace(positions=jax.lax.dynamic_update_slice_in_dim(
+            cache.positions, row, slot, 0))
+    return cache
+
+
 #: Slot-op bundle for attention KV caches — one set of functions serves both
 #: layouts by dispatching on the cache type, so the stack stays layout-blind.
 KV_SLOT_OPS = SlotOps(reset=reset_kv_slots, gather=gather_kv_slot,
                       scatter=scatter_kv_slot, select=select_kv_slots,
-                      invalidate=invalidate_kv_padding, set_pages=set_kv_pages)
+                      invalidate=invalidate_kv_padding, set_pages=set_kv_pages,
+                      copy_pages=copy_kv_pages, adopt=adopt_kv_prefix)
 
 
 register_cache_layout(CacheLayout(
@@ -396,6 +432,16 @@ def make_attention(cfg: ModelConfig, *, sparse: bool, cross: bool = False,
                 # unmapped rows (free slots decoding stale state) must drop,
                 # not wrap: remap -1 past the pool end under mode="drop".
                 phys = jnp.where(phys < 0, jnp.int32(npages), phys)
+                # decode_pos < 0 flags a lane whose write must not land at
+                # all (the serve engine marks inactive lanes this way). The
+                # pool is shared: under prefix sharing an inactive lane's
+                # stale write could land on a page an *active* lane reads
+                # later in this same step — the post-step slot select
+                # restores the persistent pool but cannot unpoison that
+                # read. Contiguous rows never need this (a lane can only
+                # dirty its own row, which the select restores).
+                phys = jnp.where((decode_pos < 0)[:, None], jnp.int32(npages),
+                                 phys)
                 pool_k = cache.pool_k.at[phys, li % ps].set(
                     k.astype(cache.pool_k.dtype), mode="drop")
                 pool_v = cache.pool_v.at[phys, li % ps].set(

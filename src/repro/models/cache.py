@@ -123,6 +123,8 @@ class SlotOps(NamedTuple):
     select: Callable      # (keep (slots,) bool, new, old)     -> cache
     invalidate: Callable  # (cache, lengths (slots,) int32)    -> cache
     set_pages: Callable   # (cache, page_table (slots, mp))    -> cache
+    copy_pages: Callable  # (cache, src page id, dst page id)  -> cache
+    adopt: Callable       # (cache, slot index, length int32)  -> cache
 
 
 def tree_gather(cache, slot):
@@ -157,8 +159,11 @@ def contiguous_ops(reset: Callable, invalidate: Callable | None = None) -> SlotO
     register with just their family ``reset``; everything else is the
     generic slot-axis tree op. ``invalidate`` defaults to identity: a
     recurrent prefill consumed its padding tokens exactly like the
-    full-batch path, so there is nothing to drop. ``set_pages`` is identity
-    — only paged KV carries a page table.
+    full-batch path, so there is nothing to drop. ``set_pages``,
+    ``copy_pages`` and ``adopt`` are identity — only paged KV carries a
+    page table, and prefix adoption (linking trie-shared pages into a
+    fresh slot) is gated to all-attention stacks by the serve engine, so
+    a recurrent family never sees a non-trivial adopt.
     """
     return SlotOps(
         reset=reset,
@@ -167,4 +172,6 @@ def contiguous_ops(reset: Callable, invalidate: Callable | None = None) -> SlotO
         select=tree_select,
         invalidate=invalidate if invalidate is not None else (lambda c, lengths: c),
         set_pages=lambda c, table: c,
+        copy_pages=lambda c, src, dst: c,
+        adopt=lambda c, slot, length: c,
     )

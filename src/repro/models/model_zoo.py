@@ -56,13 +56,18 @@ class Model(NamedTuple):
     # gather_cache_slot(caches, slot), scatter_cache_slot(caches, sub, slot),
     # select_cache_slots(keep_mask, new_caches, old_caches),
     # invalidate_cache_padding(caches, lengths),
-    # set_cache_pages(caches, page_table) — paged cache layout only.
+    # set_cache_pages(caches, page_table) — paged cache layout only;
+    # copy_cache_pages(caches, src, dst) — COW clone of one pool page;
+    # adopt_cache_prefix(caches, slot, length) — validate a trie-matched
+    # prefix in a slot's position rows without re-prefilling it.
     reset_cache_slots: Callable | None = None
     gather_cache_slot: Callable | None = None
     scatter_cache_slot: Callable | None = None
     select_cache_slots: Callable | None = None
     invalidate_cache_padding: Callable | None = None
     set_cache_pages: Callable | None = None
+    copy_cache_pages: Callable | None = None
+    adopt_cache_prefix: Callable | None = None
 
 
 def cross_entropy_loss(logits: jax.Array, labels: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -186,4 +191,6 @@ def build_model(cfg: ModelConfig, *, q_chunk: int = 1024, kv_chunk: int = 1024,
                  scatter_cache_slot=slot_ops.scatter,
                  select_cache_slots=slot_ops.select,
                  invalidate_cache_padding=slot_ops.invalidate,
-                 set_cache_pages=slot_ops.set_pages)
+                 set_cache_pages=slot_ops.set_pages,
+                 copy_cache_pages=slot_ops.copy_pages,
+                 adopt_cache_prefix=slot_ops.adopt)

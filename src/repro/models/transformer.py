@@ -47,6 +47,10 @@ class CacheSlotOps(NamedTuple):
     lanes keep their previous cache (a slot mid-prefill must not be clobbered
     by the batched decode running beside it). ``set_pages`` installs a
     host-built page table into every paged KV leaf (no-op otherwise).
+    ``copy_pages`` clones one pool page into another (the copy-on-write
+    step before a slot writes into a prefix-shared page) and ``adopt``
+    validates a trie-matched prefix in a slot's position row without
+    re-prefilling it; both are no-ops on contiguous caches.
 
     Each op is assembled from the per-block-family ``models.cache.SlotOps``
     bundles — attention KV dispatches on its layout (contiguous | paged),
@@ -61,6 +65,8 @@ class CacheSlotOps(NamedTuple):
     select: Callable      # (keep (slots,) bool, new, old) -> caches
     invalidate: Callable  # (caches, lengths (slots,) int32) -> caches
     set_pages: Callable   # (caches, page_table (slots, mp) int32) -> caches
+    copy_pages: Callable  # (caches, src page id, dst page id) -> caches
+    adopt: Callable       # (caches, slot index, length int32) -> caches
 
 
 def _dict_ops(ops: SlotOps, key: str) -> SlotOps:
@@ -73,6 +79,8 @@ def _dict_ops(ops: SlotOps, key: str) -> SlotOps:
         select=lambda keep, new, old: {key: ops.select(keep, new[key], old[key])},
         invalidate=lambda c, lengths: {key: ops.invalidate(c[key], lengths)},
         set_pages=lambda c, table: {key: ops.set_pages(c[key], table)},
+        copy_pages=lambda c, src, dst: {key: ops.copy_pages(c[key], src, dst)},
+        adopt=lambda c, slot, length: {key: ops.adopt(c[key], slot, length)},
     )
 
 
@@ -396,6 +404,8 @@ def make_decoder_stack(cfg: ModelConfig, *, causal: bool = True,
     _gather_blocks = _per_block("gather")
     _invalidate_blocks = _per_block("invalidate")
     _set_pages_blocks = _per_block("set_pages", scanned_vmap=False)
+    _copy_pages_blocks = _per_block("copy_pages")
+    _adopt_blocks = _per_block("adopt")
 
     def _reset(caches, free):
         return _reset_blocks(caches, jnp.asarray(free, bool))
@@ -428,6 +438,15 @@ def make_decoder_stack(cfg: ModelConfig, *, causal: bool = True,
     def _set_pages(caches, table):
         return _set_pages_blocks(caches, jnp.asarray(table, jnp.int32))
 
+    def _copy_pages(caches, src, dst):
+        return _copy_pages_blocks(caches, jnp.asarray(src, jnp.int32),
+                                  jnp.asarray(dst, jnp.int32))
+
+    def _adopt(caches, slot, length):
+        return _adopt_blocks(caches, jnp.asarray(slot, jnp.int32),
+                             jnp.asarray(length, jnp.int32))
+
     return init, apply, init_caches, CacheSlotOps(_reset, _gather, _scatter,
                                                   _select, _invalidate,
-                                                  _set_pages)
+                                                  _set_pages, _copy_pages,
+                                                  _adopt)

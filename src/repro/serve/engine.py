@@ -11,12 +11,27 @@ on two axes, scheduling and layout:
     slot and **evicted on EOS or length**, immediately freeing the slot;
   * under ``cache_layout="paged"`` every attention layer's KV lives in one
     shared **page pool** and a slot maps only the pages its tokens occupy
-    (per-slot page table, host-side allocator in the scheduler): serve
-    memory drops from O(slots × cache_len) to O(tokens actually resident),
-    and **admission gates on page availability instead of free slots** — a
-    short request no longer pins a long request's worth of HBM. The engine
-    pushes allocator grants to the device via ``Model.set_cache_pages``; the
-    default ``cache_layout="contiguous"`` keeps the one-row-per-slot layout;
+    (per-slot page table, host-side refcounted allocator in the scheduler):
+    serve memory drops from O(slots × cache_len) to O(tokens actually
+    resident), and **admission gates on page availability instead of free
+    slots**. The default ``admission="optimistic"`` admits on a request's
+    *current* page need and, when a grant finds the pool dry, reclaims idle
+    prefix pages and then **preempts** the lowest-progress victim (released
+    pages, request re-queued for re-prefill of ``prompt + out`` — greedy
+    tokens stay bitwise identical to an uninterrupted decode);
+    ``admission="reserve"`` keeps the PR-5 worst-case reservation as the
+    never-preempts baseline. The engine pushes allocator grants to the
+    device via ``Model.set_cache_pages``; the default
+    ``cache_layout="contiguous"`` keeps the one-row-per-slot layout;
+  * with ``prefix_sharing=True`` (default; effective on paged all-attention
+    stacks without a rolling window) the scheduler keeps a **radix index
+    over token prefixes mapping to refcounted pages**: a prompt that hits
+    the index links the shared pages into its page table instead of
+    re-prefilling them (``Model.adopt_cache_prefix`` validates the span in
+    the slot's position rows), and a shared page is **cloned before the
+    slot's first write into it** (``Model.copy_cache_pages``, the
+    copy-on-write fork at finalize) — N requests with a common system
+    prompt prefill it once and pin one copy;
   * decode is a **slot-stable jitted step** over the whole pool (one
     compilation per pool size): sampling runs on device with **per-request
     params** — each ``Request(temperature, top_k, seed)`` is resolved
@@ -55,12 +70,14 @@ Lint invariants (checked by ``repro.analysis``):
   transfer calls. ``jnp.asarray``/``np.array`` over host numpy state are
   *not* syncs (zero-copy H2D / host-side copies) and stay out of
   ``host_fetch``.
-* **retrace-guard** — ``_decode_jit``/``_finalize_jit`` hold exactly one
-  cache entry across any admission/eviction schedule; ``_prefill_jit`` at
-  most two (``fresh`` is a static arg). Anything that varies per request
-  must be array *contents*, never Python values baked into the trace.
+* **retrace-guard** — ``_decode_jit``/``_finalize_jit``/``_cow_jit``/
+  ``_adopt_jit`` hold exactly one cache entry across any
+  admission/eviction/preemption schedule; ``_prefill_jit`` at most two
+  (``fresh`` is a static arg). Anything that varies per request must be
+  array *contents*, never Python values baked into the trace.
 * The jitted bodies run under ``serve_decode`` / ``serve_prefill_chunk`` /
-  ``serve_finalize`` named scopes so graph rules can attribute findings.
+  ``serve_finalize`` / ``serve_cow_clone`` / ``serve_adopt_prefix`` named
+  scopes so graph rules can attribute findings.
 """
 from __future__ import annotations
 
@@ -282,6 +299,13 @@ class ServeEngine(_EngineBase):
     # history). Counters are always maintained; disable the trace for
     # long-running streams so host memory stays flat.
     trace_stats: bool = True
+    # Paged admission policy: "optimistic" (admit on current need, preempt
+    # on a dry pool) or "reserve" (PR-5 worst-case reservation baseline).
+    admission: str = "optimistic"
+    # Prefix sharing (radix index over token prefixes → refcounted pages).
+    # Effective only under the paged layout with optimistic admission on
+    # all-attention stacks without a rolling window — see _sharing_ok.
+    prefix_sharing: bool = True
 
     def __post_init__(self):
         super().__post_init__()
@@ -314,8 +338,15 @@ class ServeEngine(_EngineBase):
         def _decode_fn(params, caches, tok, pos, active, temps, topks, seeds,
                        ntoks, enc_out=None):
             with jax.named_scope("serve_decode"):
+                # Inactive lanes (free / mid-prefill / adopted-not-yet-
+                # prefilled slots) carry stale ``pos``. Their KV write must
+                # be dropped *inside* the step, not just rolled back by the
+                # select below: with prefix sharing the stale write can land
+                # on a pool page an active neighbour reads this very step.
+                # decode_pos < 0 is the attention layer's drop flag.
+                wpos = jnp.where(active, pos, jnp.int32(-1))
                 logits, new_caches = mdl.decode_step(params, tok[:, None],
-                                                     caches, pos,
+                                                     caches, wpos,
                                                      enc_out=enc_out)
                 # Per-request sampling params live in per-slot arrays: one
                 # trace serves every temperature/top_k/seed mix.
@@ -326,10 +357,26 @@ class ServeEngine(_EngineBase):
                 new_caches = mdl.select_cache_slots(active, new_caches, caches)
                 return nxt, new_caches
 
+        def _cow_fn(caches, src, dst):
+            # COW fork: the scheduler already repointed the slot's table
+            # entry at ``dst``; clone the shared page's bytes so the
+            # finalize write lands on private storage.
+            with jax.named_scope("serve_cow_clone"):
+                return mdl.copy_cache_pages(caches, src, dst)
+
+        def _adopt_fn(caches, slot, length):
+            # Prefix adoption: the shared pages are already linked into the
+            # slot's page table; validate the span in the slot's position
+            # rows (rewrites the whole row, doubling as the slot reset).
+            with jax.named_scope("serve_adopt_prefix"):
+                return mdl.adopt_cache_prefix(caches, slot, length)
+
         self._prefill_jit = jax.jit(_prefill_chunk_fn,
                                     static_argnames=("fresh",))
         self._finalize_jit = jax.jit(_finalize_fn)
         self._decode_jit = jax.jit(_decode_fn)
+        self._cow_jit = jax.jit(_cow_fn)
+        self._adopt_jit = jax.jit(_adopt_fn)
         self._sched: Scheduler | None = None
 
     # ------------------------------------------------------------------ run
@@ -349,7 +396,9 @@ class ServeEngine(_EngineBase):
             slots, chunk=self.prefill_chunk, trace=self.trace_stats,
             page_size=spec.page_size if self._paged else 0,
             num_pages=spec.num_pages if self._paged else 0,
-            eff_len=self._eff_len if self._paged else 0)
+            eff_len=self._eff_len if self._paged else 0,
+            admission=self.admission if self._paged else "optimistic",
+            prefix_sharing=self._sharing_ok())
         self._caches = self.model.init_caches(slots, self.cache_len, spec=spec)
         self._pos = np.zeros(slots, np.int32)
         self._tok = np.zeros(slots, np.int32)
@@ -362,6 +411,20 @@ class ServeEngine(_EngineBase):
         self._temperature = float(temperature)
         self._seed = int(seed)
         self._tbl_dirty = False
+
+    def _sharing_ok(self) -> bool:
+        """Prefix sharing is sound only where adopted KV is the complete
+        decode state: paged all-attention stacks (recurrent/xattn families
+        carry per-slot state a page link can't transfer) without a rolling
+        window (a rolled row is not a pure function of the token prefix),
+        under optimistic admission (reserve accounting has no notion of
+        ref-shared grants)."""
+        cfg = self.model.cfg
+        return (self.prefix_sharing and self._paged
+                and self.admission == "optimistic"
+                and all(k == "attn" for k in cfg.block_pattern)
+                and not cfg.is_encoder_decoder
+                and self._eff_len == self.cache_len)
 
     @property
     def scheduler(self) -> Scheduler:
@@ -377,9 +440,28 @@ class ServeEngine(_EngineBase):
                temperature: float | None = None, top_k: int = 0,
                seed: int | None = None) -> Request:
         """Queue one request; it is admitted as soon as a slot (and, under
-        paging, its worst-case page reservation) frees up. ``temperature`` /
-        ``top_k`` / ``seed`` override the engine defaults per request."""
+        paging, the pages its first prefill chunk needs — or its worst-case
+        reservation under ``admission="reserve"``) frees up. ``temperature``
+        / ``top_k`` / ``seed`` override the engine defaults per request.
+        Raises ``ValueError`` for requests that could never run:
+        ``max_new_tokens < 1``, cache overflow, or page need beyond the
+        pool."""
         self._check_fits(len(prompt), max_new_tokens)
+        if (self._paged and self.scheduler.admission == "optimistic"
+                and self._bounded()):
+            # A preempted request resumes by re-prefilling prompt + out —
+            # up to max_new - 1 generated tokens — and that chunk-padded
+            # span must also fit the cache (prefill writes every padded
+            # position; a clamped dynamic_update_slice would silently
+            # overwrite mid-prompt KV instead of raising).
+            resumed = padded_len(len(prompt) + max_new_tokens - 1,
+                                 self.prefill_chunk)
+            if resumed > self.cache_len:
+                raise ValueError(
+                    f"prompt ({len(prompt)} tokens) + "
+                    f"max_new_tokens={max_new_tokens} chunk-pads to "
+                    f"{resumed} on a preemption resume, exceeding "
+                    f"cache_len={self.cache_len}")
         # A request whose page need exceeds the whole pool would deadlock at
         # the head of the pending queue — reject it up front instead.
         self.scheduler.check_capacity(len(prompt), max_new_tokens)
@@ -396,8 +478,9 @@ class ServeEngine(_EngineBase):
         sched.tick += 1
         for req in sched.admit():
             # The slot's cache is blanked inside the request's first prefill
-            # chunk (fresh=True); until then the decode write-mask keeps the
-            # stale lane from touching it.
+            # chunk (fresh=True) — or, for an adopted prefix, by the full
+            # position-row rewrite of _adopt_jit below; until then the
+            # decode write-mask keeps the stale lane from touching it.
             self._active[req.slot] = False
             self._pos[req.slot] = 0
             self._tok[req.slot] = 0
@@ -406,19 +489,42 @@ class ServeEngine(_EngineBase):
             self._topk[req.slot] = req.top_k
             seed = (self._seed + req.rid) if req.seed is None else req.seed
             self._seedv[req.slot] = np.uint32(seed & 0xFFFFFFFF)
-            self._ntok[req.slot] = 0
+            # A preemption resume keeps its generated tokens: sampling
+            # continues at token index len(out), which is what makes the
+            # resumed stream bitwise identical to uninterrupted decode.
+            self._ntok[req.slot] = len(req.out)
             if req.enc_out is not None:
                 self._enc_row(req.slot, req.enc_out)
+            if req.adopted_len:
+                # Prefix hit: admission linked shared pages into the host
+                # table; push it and validate the span on the slot.
+                self._tbl_dirty = True
+                self._push_pages()
+                self._caches = self._adopt_jit(self._caches,
+                                               jnp.int32(req.slot),
+                                               jnp.int32(req.adopted_len))
         req = sched.next_prefill()
         if req is not None:
-            # Grant the pages this chunk's writes will touch (against the
-            # admission reservation — can't fail) and push the table before
-            # the prefill runs.
+            # Grant the pages this chunk's writes will touch and push the
+            # table before the prefill runs. Under optimistic admission a
+            # grant may preempt a neighbour (drained below).
+            cow = None
             if sched.paged:
                 extent = (req.offset + sched.chunk if req.offset < req.padded
-                          else req.prompt_len)
+                          else req.seq_len)
                 self._tbl_dirty |= sched.ensure_pages(req, extent)
+                if req.offset >= req.padded:
+                    # Finalize rewrites the entry at seq_len - 1 through the
+                    # decode path; if that page is shared (a full-prompt
+                    # prefix hit), fork it first — copy-on-write.
+                    cow = sched.prepare_write(req, req.seq_len - 1)
+                    if cow is not None:
+                        self._tbl_dirty = True
+            self._handle_preempted()
             self._push_pages()
+            if cow is not None:
+                self._caches = self._cow_jit(self._caches, jnp.int32(cow[0]),
+                                             jnp.int32(cow[1]))
             self._advance_prefill(req)
         # The decoding set must be snapshotted *after* the prefill advance: a
         # request that finalized this tick is active from this very decode
@@ -427,12 +533,32 @@ class ServeEngine(_EngineBase):
         decoding = sched.decoding()
         if decoding:
             if sched.paged:
-                for r in decoding:
+                # Grant in descending progress-to-remaining order — the
+                # likeliest preemption victims grant last, so a grant that
+                # preempts never wastes pages just granted to its victim.
+                order = sorted(
+                    decoding, reverse=True,
+                    key=lambda r: (len(r.out)
+                                   / max(1, r.max_new_tokens - len(r.out))))
+                for r in order:
+                    if r.slot is None:
+                        continue        # preempted by an earlier grant
                     self._tbl_dirty |= sched.ensure_pages(
                         r, int(self._pos[r.slot]) + 1)
+            self._handle_preempted()
+            decoding = [r for r in decoding if r.slot is not None]
             self._push_pages()
-            self._decode_tick(decoding)
+            if decoding:
+                self._decode_tick(decoding)
         return sched.busy
+
+    def _handle_preempted(self) -> None:
+        """Deactivate decode lanes freed by preemption (their requests are
+        back in the pending queue) and mark the page table dirty — the
+        scheduler zeroed the victims' rows."""
+        for slot in self.scheduler.drain_preempted():
+            self._active[slot] = False
+            self._tbl_dirty = True
 
     def _push_pages(self) -> None:
         """Sync the scheduler's host page table to the device caches.
@@ -482,11 +608,17 @@ class ServeEngine(_EngineBase):
         return None if self._enc is None else self._enc[slot:slot + 1]
 
     def _advance_prefill(self, req: Request) -> None:
+        # Prefill runs over prompt + generated-so-far: a preemption resume
+        # re-prefills its own earlier output, and the decode-path attention
+        # is bitwise invariant to how positions partition into chunks, so
+        # the rebuilt cache matches the uninterrupted one exactly. An
+        # adopted prefix starts the walk at offset = adopted_len.
         slot = req.slot
+        seq = req.seq
         if req.offset < req.padded:
             chunk = self.prefill_chunk
             blk = np.zeros((1, chunk), np.int32)
-            toks = req.prompt[req.offset:req.offset + chunk]
+            toks = seq[req.offset:req.offset + chunk]
             blk[0, :len(toks)] = toks
             self._caches = self._prefill_jit(
                 self.params, self._caches, jnp.asarray(blk),
@@ -496,14 +628,17 @@ class ServeEngine(_EngineBase):
             self.stats.prefill_chunks += 1
             return
         # Finalize: drop padding entries, re-decode the last real token (the
-        # same sequence the single-request path runs) → first sampled token.
-        last = np.array([[req.prompt[-1]]], np.int32)
+        # same sequence the single-request path runs) → next sampled token.
+        last = np.array([[seq[-1]]], np.int32)
         logits, self._caches = self._finalize_jit(
             self.params, self._caches, jnp.asarray(last),
-            jnp.asarray(req.prompt_len, jnp.int32), jnp.int32(req.slot),
+            jnp.asarray(req.seq_len, jnp.int32), jnp.int32(req.slot),
             self._enc_one(slot))
         req.prefilled = True
-        self._pos[slot] = req.prompt_len
+        self._pos[slot] = req.seq_len
+        # The slot's pages now hold this prefix's pure prefill-path KV
+        # (minus the boundary page) — publish them to the prefix index.
+        self.scheduler.record_prefix(req)
         self._emit(req, self._sample_host(logits[:, -1, :], slot))
 
     def _sample_host(self, lg, slot: int) -> int:
@@ -541,9 +676,9 @@ class ServeEngine(_EngineBase):
             self._emit(req, int(nxt[req.slot]))
 
     def _emit(self, req: Request, token: int) -> None:
-        if len(req.out) >= req.max_new_tokens:       # max_new_tokens == 0
-            self._evict(req, "length")
-            return
+        # A finished (or preempted) request's handle has slot=None — landing
+        # here means lane bookkeeping aliased a recycled slot.
+        assert req.slot is not None, "emit through a stale Request handle"
         req.out.append(token)
         self._tok[req.slot] = token
         self._ntok[req.slot] += 1

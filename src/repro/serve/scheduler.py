@@ -1,12 +1,14 @@
-"""Host-side request scheduler: slot pool + paged KV-page allocator.
+"""Host-side request scheduler: slot pool, refcounted page allocator, prefix trie.
 
 The scheduler owns the *logical* serving state: a FIFO queue of submitted
 requests, a fixed pool of decode slots, and — under the paged cache layout —
-the **page pool** that actually bounds admission. It is pure Python — no JAX
-— so every decision (admit, evict, which slot prefills next, which pool page
-backs a slot's next KV block) is a cheap host operation; the engine only has
-to turn those decisions into device primitives (`reset_cache_slots`,
-gather/scatter prefill, write-masked decode, `set_cache_pages`).
+the **page pool** that actually bounds admission, plus a radix index over
+token prefixes that lets requests adopt already-prefilled pages. It is pure
+Python — no JAX — so every decision (admit, evict, preempt, which pool page
+backs a slot's next KV block, which prefix pages a new prompt can adopt) is a
+cheap host operation; the engine only has to turn those decisions into device
+primitives (`reset_cache_slots`, gather/scatter prefill, write-masked decode,
+`set_cache_pages`, `copy_cache_pages`, `adopt_cache_prefix`).
 
 Memory model
 ------------
@@ -14,40 +16,72 @@ Contiguous layout: a slot pins a full ``cache_len`` KV row for its whole
 lifetime, so admission is **slot-limited** — one long request costs the same
 HBM as a short one. Paged layout: every attention layer shares one page pool
 ``(num_pages, page_size, kv_heads, head_dim)`` and a slot holds only the
-pages its tokens actually need, so admission is **memory-limited**:
+pages its tokens actually need, so admission is **memory-limited**. Two
+admission policies:
 
-  * ``admit`` *reserves* the request's worst-case page need up front
-    (``ceil(min(max(padded, prompt+max_new), eff_len) / page_size)``) — the
-    FIFO head waits until the reservation fits, which keeps admission
-    deadlock-free without preemption while still letting short requests pack
-    many-per-pool;
-  * physical pages are *granted lazily* (``ensure_pages``) as prefill/decode
-    growth crosses page boundaries, against the reservation;
-  * ``evict`` returns the request's pages and any ungranted reservation.
+  * ``admission="reserve"`` (the PR-5 baseline): ``admit`` reserves the
+    request's worst-case page need up front, so a granted ``take`` can never
+    fail — deadlock-free without preemption, but the pool idles whenever
+    requests finish short of their ``max_new_tokens``.
+  * ``admission="optimistic"`` (default): ``admit`` gates only on the pages
+    the request needs *now* (its next prefill chunk, minus whatever a prefix
+    hit already covers). When a later grant finds the pool dry, the
+    scheduler reclaims idle prefix-index pages (LRU leaves first) and then
+    **preempts** a victim — the admitted request with the lowest
+    progress-to-remaining ratio — releasing its page refs and re-queueing it
+    at the front of the pending queue for re-prefill. Generated tokens are
+    kept: the resume re-prefills ``prompt + out`` and decodes onward.
+    Because per-request sampling is a pure function of seed × token index
+    and the decode-path attention is bitwise invariant to how positions are
+    partitioned into prefill chunks, a preempted-then-resumed request emits
+    exactly the greedy tokens of an uninterrupted decode.
+
+Prefix sharing
+--------------
+:class:`PrefixIndex` is a radix tree keyed by page-sized token blocks; each
+node pins exactly one pool page holding that block's KV (one allocator ref
+per node). At admission a request's ``prompt + out`` is matched against the
+trie (match truncated to a multiple of ``lcm(page_size, chunk)`` so prefill
+chunk boundaries never straddle shared pages); matched pages are ref-shared
+and linked into the slot's page table, and prefill starts past the match
+(``req.offset = req.adopted_len``). After a request finishes prefilling, its
+own fully-written pages are inserted (the page holding position
+``seq_len - 1`` is excluded — finalize rewrites that entry through the
+decode path). Pages are **refcounted**, never free-and-mapped: a slot may
+only write into a page it owns alone, so the engine asks ``prepare_write``
+before finalize's last-token write — if that page is shared it is forked
+onto a fresh page first (copy-on-write; the engine clones the bytes with
+``Model.copy_cache_pages``).
 
 ``page_table`` (host numpy, ``(num_slots, max_pages)`` int32, -1 = unmapped)
 mirrors the allocator state; the engine pushes it into the device caches via
-``Model.set_cache_pages`` whenever a grant or eviction dirties it. Pages are
-uniquely owned — never free and mapped, never mapped twice — which is the
-invariant the device-side write-masking relies on (`select_kv_slots` restores
-inactive slots' pages by ownership) and the allocator property test pins down.
+``Model.set_cache_pages`` whenever a grant, adoption, preemption or eviction
+dirties it. The device-side write-masking (`select_kv_slots`) restores
+inactive slots' mapped pages by ownership, which stays sound under sharing
+because shared (refcount > 1) pages are never written by any slot.
 
 Life of a request:
 
-    submit() → pending queue → admit() assigns a free slot + reserves pages →
-    chunked prefill advances ``offset`` through the padded prompt (pages
-    granted per chunk) → finalize (position fix + last-token decode) flips
+    submit() → pending queue → admit() assigns a free slot (+ adopts any
+    prefix hit) → chunked prefill advances ``offset`` through the padded
+    ``prompt + out`` (pages granted per chunk) → finalize (position fix,
+    COW fork if the last page is shared, last-token decode) flips
     ``prefilled`` → per-token decode until EOS / ``max_new_tokens`` (pages
-    granted on growth) → evict() frees the slot and its pages.
+    granted on growth, possibly preempting a neighbour) → evict() frees the
+    slot and drops its page refs. A preempted request loops back through
+    the pending queue with its ``out`` tokens intact.
 
 ``SchedulerStats`` counts admissions/evictions/lanes plus page-pool highs
-(``peak_admitted``, ``peak_pages_in_use``) — the regression tests spy on the
-trace to prove finished slots stop receiving decode compute, the bench reads
-the peaks for the equal-HBM concurrency comparison.
+(``peak_admitted``, ``peak_pages_in_use``) and the sharing/oversubscription
+counters (``preemptions``, ``cow_clones``, ``prefix_hit_tokens`` /
+``prompt_tokens``) that the bench turns into ``prefix_hit_rate`` and
+``pool_utilization`` for the equal-HBM comparison against the reserve
+baseline.
 """
 from __future__ import annotations
 
 import itertools
+import math
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any
@@ -55,14 +89,14 @@ from typing import Any
 import numpy as np
 
 __all__ = ["Request", "Scheduler", "SchedulerStats", "PageAllocator",
-           "padded_len"]
+           "PrefixIndex", "padded_len"]
 
 
 def padded_len(prompt_len: int, chunk: int) -> int:
     """Chunk-padded prefill span: prefill writes every position of every
     ``chunk``-sized block it touches. The one definition shared by request
     padding, page-need accounting, and the engines' admission checks — they
-    must agree or the reservation guarantee breaks."""
+    must agree or the capacity guarantee breaks."""
     return max(chunk, -(-prompt_len // chunk) * chunk)
 
 
@@ -88,22 +122,40 @@ class Request:
     finish_reason: str | None = None    # "eos" | "length"
     submit_tick: int = 0
     finish_tick: int | None = None
-    pages: list[int] = field(default_factory=list)  # granted pool pages
-    page_need: int = 0                  # worst-case pages reserved at admission
+    pages: list[int] = field(default_factory=list)  # page refs held (in order)
+    page_need: int = 0                  # worst-case page cap for this tenure
+    adopted_len: int = 0                # prefix tokens adopted at admission
 
     @property
     def prompt_len(self) -> int:
         return len(self.prompt)
 
+    @property
+    def seq(self) -> list[int]:
+        """Tokens whose KV must be resident: the prompt plus everything
+        generated so far. Non-empty ``out`` before prefill marks a preempted
+        resume — the whole span is re-prefilled."""
+        return self.prompt + self.out
+
+    @property
+    def seq_len(self) -> int:
+        return len(self.prompt) + len(self.out)
+
 
 class PageAllocator:
-    """Free-list page allocator with reservations.
+    """Refcounted free-list page allocator (with optional reservations).
 
-    ``reserve(n)`` promises n pages to a request without picking them (the
-    admission gate); ``take()`` grants one physical page against an existing
-    reservation; ``give(pages)`` returns pages on eviction. The reservation
-    discipline guarantees ``take`` can never fail for an admitted request —
-    growth never deadlocks on pages held by neighbours.
+    ``refs[p]`` counts the owners of page ``p``: slot page-table links plus
+    prefix-index nodes. ``take`` grants a fresh page at refcount 1,
+    ``share`` adds an owner to a granted page, ``release`` drops owners and
+    returns pages whose refcount hit zero to the free list — no page is
+    ever free and mapped, and a page's refcount hits zero exactly at its
+    last release (the property test pins both down).
+
+    The ``reserve``/``unreserve`` pair is the ``admission="reserve"``
+    discipline: worst-case need promised up front so a reserved ``take``
+    cannot fail. Optimistic admission skips reservations and handles a dry
+    pool at the scheduler level (prefix-index reclaim, then preemption).
     """
 
     def __init__(self, num_pages: int):
@@ -111,16 +163,17 @@ class PageAllocator:
             raise ValueError(f"num_pages must be >= 1, got {num_pages}")
         self.num_pages = num_pages
         self._free: deque[int] = deque(range(num_pages))
+        self.refs = [0] * num_pages
         self.reserved = 0
 
     @property
     def free_count(self) -> int:
-        """Pages not granted to any request (some may be reserved)."""
+        """Pages owned by nobody (some may be reserved)."""
         return len(self._free)
 
     @property
     def available(self) -> int:
-        """Pages neither granted nor reserved — the admission headroom."""
+        """Pages neither owned nor reserved — the reserve-mode headroom."""
         return len(self._free) - self.reserved
 
     def reserve(self, n: int) -> bool:
@@ -133,23 +186,144 @@ class PageAllocator:
         assert 0 <= n <= self.reserved
         self.reserved -= n
 
-    def take(self) -> int:
-        """Grant one page against a prior reservation."""
-        assert self.reserved > 0 and self._free, "take() without reservation"
-        self.reserved -= 1
-        return self._free.popleft()
+    def take(self, *, reserved: bool = True) -> int | None:
+        """Grant one page at refcount 1. A ``reserved`` take consumes a
+        prior reservation and cannot fail; an unreserved (optimistic) take
+        returns None when the pool is dry."""
+        if reserved:
+            assert self.reserved > 0 and self._free, "take() without reservation"
+            self.reserved -= 1
+        elif not self._free:
+            return None
+        page = self._free.popleft()
+        assert self.refs[page] == 0
+        self.refs[page] = 1
+        return page
 
-    def give(self, pages) -> None:
-        self._free.extend(pages)
+    def share(self, page: int) -> None:
+        """Add an owner to an already-granted page."""
+        assert self.refs[page] > 0, "share() of a free page"
+        self.refs[page] += 1
+
+    def release(self, pages) -> list[int]:
+        """Drop one ownership ref per page; returns the pages whose
+        refcount hit zero (now back on the free list)."""
+        freed = []
+        for page in pages:
+            assert self.refs[page] > 0, "release() of a free page"
+            self.refs[page] -= 1
+            if self.refs[page] == 0:
+                self._free.append(page)
+                freed.append(page)
+        return freed
+
+
+class _PrefixNode:
+    __slots__ = ("children", "page", "last_hit")
+
+    def __init__(self, page: int, last_hit: int):
+        self.children: dict[tuple, _PrefixNode] = {}
+        self.page = page
+        self.last_hit = last_hit
+
+
+class PrefixIndex:
+    """Radix tree over page-sized token blocks → refcounted pool pages.
+
+    Each node pins exactly one pool page (one allocator ref) holding the
+    prefill-path KV of its token block; a root-to-node path spells a prompt
+    prefix. The index is an LRU cache of prefixes: ``reclaim_lru`` drops the
+    least-recently-hit *leaf* (interior nodes are prefixes of hotter paths)
+    to give pages back when the pool runs dry.
+    """
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self.root: dict[tuple, _PrefixNode] = {}
+        self.num_nodes = 0
+
+    def match(self, tokens, tick: int) -> list[_PrefixNode]:
+        """Longest node path whose blocks prefix ``tokens`` (full blocks
+        only); refreshes each hit node's LRU stamp."""
+        ps = self.page_size
+        nodes: list[_PrefixNode] = []
+        children = self.root
+        i = 0
+        while (i + 1) * ps <= len(tokens):
+            node = children.get(tuple(tokens[i * ps:(i + 1) * ps]))
+            if node is None:
+                break
+            node.last_hit = tick
+            nodes.append(node)
+            children = node.children
+            i += 1
+        return nodes
+
+    def insert(self, tokens, nblocks: int, pages, allocator: PageAllocator,
+               tick: int) -> None:
+        """Walk/create the first ``nblocks`` block nodes of ``tokens``,
+        pinning ``pages[i]`` (ref-shared) for each newly created node.
+        Existing nodes win collisions — the offered page stays private to
+        its request."""
+        ps = self.page_size
+        children = self.root
+        for i in range(nblocks):
+            key = tuple(tokens[i * ps:(i + 1) * ps])
+            node = children.get(key)
+            if node is None:
+                allocator.share(pages[i])
+                node = _PrefixNode(pages[i], tick)
+                children[key] = node
+                self.num_nodes += 1
+            else:
+                node.last_hit = tick
+            children = node.children
+
+    def pages(self) -> list[int]:
+        """Every page currently pinned by the index."""
+        out = []
+        stack = list(self.root.values())
+        while stack:
+            node = stack.pop()
+            out.append(node.page)
+            stack.extend(node.children.values())
+        return out
+
+    def reclaim_lru(self, allocator: PageAllocator) -> bool:
+        """Drop the least-recently-hit leaf, releasing its page ref (the
+        page only frees if no request still shares it). False when empty."""
+        best = None  # (last_hit, parent_children, key, node)
+        stack = [(self.root, k, n) for k, n in self.root.items()]
+        while stack:
+            parent, key, node = stack.pop()
+            if node.children:
+                stack.extend((node.children, k, n)
+                             for k, n in node.children.items())
+            elif best is None or node.last_hit < best[0]:
+                best = (node.last_hit, parent, key, node)
+        if best is None:
+            return False
+        _, parent, key, node = best
+        del parent[key]
+        allocator.release([node.page])
+        self.num_nodes -= 1
+        return True
+
+    def drop(self, allocator: PageAllocator) -> None:
+        """Release every pinned page ref and clear the index (tests and
+        shutdown: with no admitted requests the allocator is then free)."""
+        allocator.release(self.pages())
+        self.root = {}
+        self.num_nodes = 0
 
 
 @dataclass
 class SchedulerStats:
     """Counters are always maintained (O(1) memory); the per-event lists —
-    ``admissions``/``evictions``/``decode_active`` — are the *trace*, kept
-    only while ``Scheduler(trace=True)`` (the default, what the spy tests
-    read). A long-running production stream should pass ``trace=False`` so
-    host memory stays flat regardless of tokens served."""
+    ``admissions``/``evictions``/``preempted``/``decode_active`` — are the
+    *trace*, kept only while ``Scheduler(trace=True)`` (the default, what
+    the spy tests read). A long-running production stream should pass
+    ``trace=False`` so host memory stays flat regardless of tokens served."""
 
     submitted: int = 0
     finished: int = 0
@@ -160,8 +334,14 @@ class SchedulerStats:
     peak_admitted: int = 0                             # max concurrent slots
     pages_granted: int = 0                             # cumulative page grants
     peak_pages_in_use: int = 0                         # max concurrent pages
+    preemptions: int = 0                               # requests re-queued
+    cow_clones: int = 0                                # shared pages forked
+    prefix_hits: int = 0                               # admissions with a match
+    prefix_hit_tokens: int = 0                         # tokens adopted from trie
+    prompt_tokens: int = 0                             # tokens admitted (denom)
     admissions: list = field(default_factory=list)    # (tick, slot, rid)
     evictions: list = field(default_factory=list)     # (tick, slot, rid, reason)
+    preempted: list = field(default_factory=list)     # (tick, slot, rid)
     decode_active: list = field(default_factory=list)  # per decode step: bool tuple
 
     def decode_lane_count(self, slot: int | None = None) -> int:
@@ -174,16 +354,22 @@ class SchedulerStats:
 class Scheduler:
     """Admit-on-arrival / evict-on-EOS-or-length scheduler over a slot pool.
 
-    With ``num_pages > 0`` the scheduler also runs the page allocator:
-    admission additionally requires the FIFO head's worst-case page need to
-    fit the unreserved pool (``page_size`` / ``eff_len`` give the page
-    geometry of the engine's paged KV caches).
+    With ``num_pages > 0`` the scheduler also runs the page allocator
+    (``page_size`` / ``eff_len`` give the page geometry of the engine's
+    paged KV caches). ``admission`` picks the policy — ``"reserve"``
+    (worst-case up front, never preempts) or ``"optimistic"`` (admit on
+    current need, preempt on a dry pool) — and ``prefix_sharing`` turns on
+    the radix prefix index (optimistic + paged only; the engine gates it
+    further to all-attention stacks without a rolling window).
     """
 
     def __init__(self, num_slots: int, *, chunk: int, trace: bool = True,
-                 page_size: int = 0, num_pages: int = 0, eff_len: int = 0):
+                 page_size: int = 0, num_pages: int = 0, eff_len: int = 0,
+                 admission: str = "optimistic", prefix_sharing: bool = False):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        if admission not in ("reserve", "optimistic"):
+            raise ValueError(f"unknown admission policy {admission!r}")
         self.num_slots = num_slots
         self.chunk = chunk
         self.trace = trace
@@ -196,6 +382,8 @@ class Scheduler:
         self.page_size = page_size
         self.num_pages = num_pages
         self.eff_len = eff_len
+        self.admission = admission
+        self._preempted_slots: list[int] = []
         if self.paged:
             if page_size < 1 or eff_len < 1 or eff_len % page_size:
                 raise ValueError(
@@ -205,9 +393,15 @@ class Scheduler:
             self.max_pages_per_slot = eff_len // page_size
             self.page_table = np.full((num_slots, self.max_pages_per_slot),
                                       -1, np.int32)
+            self._match_align = math.lcm(page_size, chunk)
         else:
             self.allocator = None
             self.page_table = None
+        if prefix_sharing and not (self.paged and admission == "optimistic"):
+            raise ValueError("prefix_sharing requires the paged layout with "
+                             "optimistic admission")
+        self.prefix_index = (PrefixIndex(page_size)
+                             if (self.paged and prefix_sharing) else None)
 
     # ------------------------------------------------------------- requests
     def submit(self, prompt, max_new_tokens: int, *, enc_out=None,
@@ -215,6 +409,12 @@ class Scheduler:
                seed: int | None = None) -> Request:
         if not len(prompt):
             raise ValueError("empty prompt")
+        if int(max_new_tokens) < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {max_new_tokens}: a "
+                f"request that generates nothing would still be admitted, "
+                f"prefilled and finalize-decoded, then evicted with its "
+                f"sampled token silently dropped")
         padded = padded_len(len(prompt), self.chunk)
         req = Request(next(self._ids), [int(t) for t in prompt],
                       int(max_new_tokens), enc_out=enc_out,
@@ -225,38 +425,77 @@ class Scheduler:
         return req
 
     # ---------------------------------------------------------------- pages
-    def page_need(self, prompt_len: int, padded: int, max_new: int) -> int:
-        """Worst-case pages a request can touch: prefill writes every padded
-        position and decode extends to prompt+max_new, both capped at the
-        logical length (a rolling window reuses its own pages)."""
-        extent = min(max(padded, prompt_len + max_new), self.eff_len)
+    def page_need(self, seq_len: int, padded: int, max_new: int) -> int:
+        """Worst-case pages this tenure can touch: prefill writes every
+        padded position and decode extends to ``seq_len + max_new`` more
+        tokens, both capped at the logical length (a rolling window reuses
+        its own pages)."""
+        extent = min(max(padded, seq_len + max_new), self.eff_len)
         return -(-extent // self.page_size)
 
     def check_capacity(self, prompt_len: int, max_new: int) -> None:
         """Reject a request whose page need can *never* be satisfied — it
-        would sit at the head of the pending queue forever (the admission
-        deadlock the paged layout must not introduce)."""
+        would sit at the head of the pending queue forever (reserve mode)
+        or preempt every neighbour and still find the pool short
+        (optimistic mode, where the worst tenure is a resume carrying
+        ``max_new - 1`` generated tokens into its re-prefill span)."""
         if not self.paged:
             return
-        need = self.page_need(prompt_len, padded_len(prompt_len, self.chunk),
-                              max_new)
+        padded = padded_len(prompt_len, self.chunk)
+        if self.admission == "optimistic" and max_new > 1:
+            padded = max(padded, padded_len(prompt_len + max_new - 1, self.chunk))
+        need = self.page_need(prompt_len, padded, max_new)
         if need > self.num_pages:
             raise ValueError(
                 f"request needs {need} KV pages (prompt {prompt_len}, "
                 f"max_new {max_new}, page_size {self.page_size}); the pool "
                 f"only has {self.num_pages} — it could never be admitted")
 
+    def _pick_victim(self, exclude: Request) -> Request | None:
+        """Preemption victim: the admitted request with the lowest
+        progress-to-remaining ratio (ties → most recently submitted) —
+        the one that loses the least finished work per page it frees."""
+        best, best_key = None, None
+        for r in self.slots:
+            if r is None or r is exclude:
+                continue
+            key = (len(r.out) / max(1, r.max_new_tokens - len(r.out)), -r.rid)
+            if best_key is None or key < best_key:
+                best, best_key = r, key
+        return best
+
+    def _take_page(self, req: Request) -> int:
+        """One physical page for ``req``. Reserve mode consumes the
+        admission reservation (cannot fail). Optimistic mode reclaims
+        prefix-index pages (LRU leaves first) and then preempts victims
+        until a page frees — ``check_capacity`` bounds a lone request's
+        worst case by the pool, so a page always turns up."""
+        if self.admission == "reserve":
+            return self.allocator.take()
+        while True:
+            page = self.allocator.take(reserved=False)
+            if page is not None:
+                return page
+            if (self.prefix_index is not None
+                    and self.prefix_index.reclaim_lru(self.allocator)):
+                continue
+            victim = self._pick_victim(exclude=req)
+            assert victim is not None, \
+                "page pool dry with no reclaimable prefix page or victim"
+            self.preempt(victim)
+
     def ensure_pages(self, req: Request, extent: int) -> bool:
-        """Grant pages (against the admission reservation) until the slot's
-        mapped span covers ``extent`` tokens. Returns True when the page
-        table changed and must be re-pushed to the device caches."""
+        """Grant pages until the slot's mapped span covers ``extent``
+        tokens. Returns True when the page table changed and must be
+        re-pushed to the device caches (preemptions triggered by a grant
+        dirty it too — the engine drains ``drain_preempted`` every tick)."""
         if not self.paged:
             return False
         target = min(-(-min(extent, self.eff_len) // self.page_size),
                      req.page_need)
         changed = False
         while len(req.pages) < target:
-            page = self.allocator.take()
+            page = self._take_page(req)
             self.page_table[req.slot, len(req.pages)] = page
             req.pages.append(page)
             changed = True
@@ -265,21 +504,109 @@ class Scheduler:
         self.stats.peak_pages_in_use = max(self.stats.peak_pages_in_use, in_use)
         return changed
 
+    def prepare_write(self, req: Request, pos: int) -> tuple[int, int] | None:
+        """Copy-on-write gate for a single-token write at logical ``pos``:
+        if the page holding it is shared (prefix index and/or other slots),
+        fork it — grant a fresh page, repoint the slot's table entry, drop
+        the shared ref — and return ``(src, dst)`` for the device-side
+        byte clone (``Model.copy_cache_pages``). None when the page is
+        already private (a fresh grant is private by construction)."""
+        if not self.paged:
+            return None
+        pi = pos // self.page_size
+        if pi >= len(req.pages):
+            return None
+        src = req.pages[pi]
+        if self.allocator.refs[src] <= 1:
+            return None
+        dst = self._take_page(req)
+        self.allocator.release([src])
+        req.pages[pi] = dst
+        self.page_table[req.slot, pi] = dst
+        self.stats.cow_clones += 1
+        return src, dst
+
+    def record_prefix(self, req: Request) -> None:
+        """Insert ``req``'s finished-prefill pages into the prefix index.
+        Only fully-written pages are insertable: the page holding position
+        ``seq_len - 1`` is excluded because finalize rewrites that entry
+        through the decode path, and trie pages must hold the pure
+        prefill-path KV any matching prompt would produce."""
+        if self.prefix_index is None or req.slot is None:
+            return
+        nblocks = (req.seq_len - 1) // self.page_size
+        if nblocks > 0:
+            self.prefix_index.insert(req.seq, nblocks, req.pages,
+                                     self.allocator, self.tick)
+
+    def drop_prefix_index(self) -> None:
+        """Release every prefix-index page ref (tests / shutdown)."""
+        if self.prefix_index is not None:
+            self.prefix_index.drop(self.allocator)
+
+    def _reclaimable(self) -> int:
+        """Pages the prefix index could free on demand (trie-only refs)."""
+        if self.prefix_index is None:
+            return 0
+        return sum(1 for p in self.prefix_index.pages()
+                   if self.allocator.refs[p] == 1)
+
+    def drain_preempted(self) -> list[int]:
+        """Slots freed by preemption since the last drain — the engine must
+        deactivate their decode lanes and re-push the page table."""
+        out, self._preempted_slots = self._preempted_slots, []
+        return out
+
     # ------------------------------------------------------------ lifecycle
     def admit(self) -> list[Request]:
         """Fill free slots from the pending queue (arrival order); returns
-        the newly admitted requests. Under paging the FIFO head additionally
-        waits for its worst-case page reservation to fit."""
+        the newly admitted requests. Reserve mode: the FIFO head waits for
+        its worst-case page reservation. Optimistic mode: the head waits
+        only until the pages its *next prefill chunk* needs (after prefix
+        adoption) are free or reclaimable from the prefix index."""
         admitted = []
         for slot, occupant in enumerate(self.slots):
             if occupant is None and self.pending:
                 req = self.pending[0]
+                # (Re-)derive the prefill span from prompt + generated-so-far:
+                # a preempted resume folds its tokens into the re-prefill.
+                padded = padded_len(req.seq_len, self.chunk)
                 if self.paged:
-                    need = self.page_need(req.prompt_len, req.padded,
-                                          req.max_new_tokens)
-                    if not self.allocator.reserve(need):
-                        break               # head-of-line waits for pages
+                    remaining = req.max_new_tokens - len(req.out)
+                    need = self.page_need(req.seq_len, padded, remaining)
+                    if self.admission == "reserve":
+                        if not self.allocator.reserve(need):
+                            break           # head-of-line waits for pages
+                    else:
+                        matched = (self.prefix_index.match(req.seq, self.tick)
+                                   if self.prefix_index is not None else [])
+                        # Truncate the match so prefill resumes on a chunk
+                        # boundary and chunks never straddle shared pages.
+                        aligned = (len(matched) * self.page_size
+                                   // self._match_align) * self._match_align
+                        matched = matched[:aligned // self.page_size]
+                        if padded > aligned:
+                            first_extent = min(aligned + self.chunk, padded)
+                        else:
+                            first_extent = req.seq_len
+                        need_now = (-(-min(first_extent, self.eff_len)
+                                      // self.page_size) - len(matched))
+                        if need_now > (self.allocator.free_count
+                                       + self._reclaimable()):
+                            break           # head-of-line waits for pages
+                        for i, node in enumerate(matched):
+                            self.allocator.share(node.page)
+                            self.page_table[slot, i] = node.page
+                            req.pages.append(node.page)
+                        req.adopted_len = aligned
+                        req.offset = aligned
+                        if self.prefix_index is not None:
+                            self.stats.prompt_tokens += req.seq_len
+                            if aligned:
+                                self.stats.prefix_hits += 1
+                                self.stats.prefix_hit_tokens += aligned
                     req.page_need = need
+                req.padded = padded
                 self.pending.popleft()
                 req.slot = slot
                 self.slots[slot] = req
@@ -290,21 +617,49 @@ class Scheduler:
         self.stats.peak_admitted = max(self.stats.peak_admitted, active)
         return admitted
 
-    def evict(self, req: Request, reason: str) -> None:
+    def preempt(self, req: Request) -> None:
+        """Release ``req``'s slot and page refs and re-queue it (front) for
+        re-prefill of ``prompt + out``; generated tokens are kept, so the
+        resumed decode continues exactly where it stopped."""
+        assert self.admission == "optimistic", "reserve mode never preempts"
         assert req.slot is not None and self.slots[req.slot] is req
+        slot = req.slot
+        self.slots[slot] = None
+        self.allocator.release(req.pages)
+        self.page_table[slot, :] = -1
+        req.pages = []
+        req.page_need = 0
+        req.adopted_len = 0
+        req.slot = None
+        req.offset = 0
+        req.prefilled = False
+        self.pending.appendleft(req)
+        self._preempted_slots.append(slot)
+        self.stats.preemptions += 1
+        if self.trace:
+            self.stats.preempted.append((self.tick, slot, req.rid))
+
+    def evict(self, req: Request, reason: str) -> None:
+        assert req.slot is not None and self.slots[req.slot] is req, \
+            "evict() through a stale Request handle"
+        slot = req.slot
         req.done = True
         req.finish_reason = reason
         req.finish_tick = self.tick
-        self.slots[req.slot] = None
+        self.slots[slot] = None
         if self.paged:
-            self.allocator.give(req.pages)
-            self.allocator.unreserve(req.page_need - len(req.pages))
-            self.page_table[req.slot, :] = -1
+            self.allocator.release(req.pages)
+            if self.admission == "reserve":
+                self.allocator.unreserve(req.page_need - len(req.pages))
+            self.page_table[slot, :] = -1
             req.pages = []
             req.page_need = 0
         if self.trace:
-            self.stats.evictions.append((self.tick, req.slot, req.rid, reason))
+            self.stats.evictions.append((self.tick, slot, req.rid, reason))
         self.stats.finished += 1
+        # The slot is recycled from here on: clear the handle so a finished
+        # Request held by a caller can never alias the next occupant.
+        req.slot = None
 
     def next_prefill(self) -> Request | None:
         """Lowest-slot request that still has prefill (or finalize) to run."""

@@ -104,12 +104,15 @@ def test_done_slots_receive_no_decode_compute():
     eng.run()
     assert len(short.out) == 2 and len(long.out) == 10
     masks = eng.stats.decode_active
+    # a finished handle's slot is cleared at eviction; the trace keeps it
+    short_slot = next(s for _, s, r, _ in eng.stats.evictions
+                      if r == short.rid)
     # exact lane accounting: no decode step ever computes a finished slot
     assert sum(sum(m) for m in masks) == (len(short.out) - 1) + (len(long.out) - 1)
-    assert sum(m[short.slot] for m in masks) == len(short.out) - 1
+    assert sum(m[short_slot] for m in masks) == len(short.out) - 1
     # after the short request's single decode step, its lane stays dark
-    last_active = max(i for i, m in enumerate(masks) if m[short.slot])
-    assert all(not m[short.slot] for m in masks[last_active + 1:])
+    last_active = max(i for i, m in enumerate(masks) if m[short_slot])
+    assert all(not m[short_slot] for m in masks[last_active + 1:])
 
 
 def test_lane_accounting_under_churn():
@@ -267,7 +270,9 @@ def test_paged_layout_matches_contiguous_bitwise(arch):
     sched = eng_p.scheduler
     if sched.paged:                     # pure-recurrent archs have no KV pool
         alloc = sched.allocator
-        # every page returned, none leaked; table fully unmapped
+        # every page returned, none leaked (the prefix index legitimately
+        # pins pages past the drain — release them first); table unmapped
+        sched.drop_prefix_index()
         assert alloc.free_count == alloc.num_pages and alloc.reserved == 0
         assert (sched.page_table == -1).all()
         # 5 requests through a tiny pool → pages were recycled across evicts
@@ -277,21 +282,32 @@ def test_paged_layout_matches_contiguous_bitwise(arch):
 
 def test_paged_admission_gates_on_pages_not_slots():
     """With a pool smaller than slots × per-request need, admission becomes
-    memory-limited: fewer concurrent requests than free slots, same tokens."""
+    memory-limited: fewer concurrent requests than free slots, same tokens.
+    Reserve admission gates on worst-case need; optimistic admission packs
+    strictly more requests into the same pool (and still matches tokens,
+    preempting whenever a grant would overcommit)."""
     cfg, model, params = _setup()
     prompts = [[7, 8, 9, 10], [11, 12, 13], [5, 6], [14] * 6]
     kw = dict(cache_len=64, prefill_chunk=8, max_slots=4, eos=-1)
     eng_c = ServeEngine(model, params, **kw)
     outs_c = eng_c.generate(prompts, 6)
     # per-request need ceil(max(8, len+6)/8): 2+2+1+2 pages for a 3-page
-    # pool → at most two requests (2+1 pages) ever co-resident
-    eng_p = ServeEngine(model, params, cache_layout="paged", page_size=8,
-                        num_pages=3, **kw)
-    outs_p = eng_p.generate(prompts, 6)
-    assert outs_p == outs_c
+    # pool → under reservation at most two requests (2+1 pages) co-resident
+    eng_r = ServeEngine(model, params, cache_layout="paged", page_size=8,
+                        num_pages=3, admission="reserve", **kw)
+    outs_r = eng_r.generate(prompts, 6)
+    assert outs_r == outs_c
     assert eng_c.stats.peak_admitted == 4      # slot-limited: all at once
-    assert eng_p.stats.peak_admitted == 2      # page-limited admission
-    assert eng_p.stats.finished == len(prompts)
+    assert eng_r.stats.peak_admitted == 2      # page-limited admission
+    assert eng_r.stats.finished == len(prompts)
+    # optimistic: every first prefill chunk needs one page, so three of the
+    # four requests co-reside in the same 3-page pool
+    eng_o = ServeEngine(model, params, cache_layout="paged", page_size=8,
+                        num_pages=3, admission="optimistic", **kw)
+    outs_o = eng_o.generate(prompts, 6)
+    assert outs_o == outs_c
+    assert eng_o.stats.peak_admitted > eng_r.stats.peak_admitted
+    assert eng_o.stats.finished == len(prompts)
 
 
 def test_paged_submit_rejects_never_fitting_request():
@@ -316,12 +332,13 @@ def test_paged_submit_rejects_never_fitting_request():
 
 
 def test_page_allocator_no_leak_no_double_ownership():
-    """Property test over random admit/grow/evict schedules: pool pages are
-    uniquely owned, never leaked, and reservations account exactly for the
-    ungranted remainder of every admitted request."""
+    """Property test over random admit/grow/evict schedules (reserve mode):
+    pool pages are uniquely owned, never leaked, and reservations account
+    exactly for the ungranted remainder of every admitted request."""
     for seed in range(4):
         rng = np.random.default_rng(seed)
-        sched = Scheduler(3, chunk=4, page_size=4, num_pages=10, eff_len=32)
+        sched = Scheduler(3, chunk=4, page_size=4, num_pages=10, eff_len=32,
+                          admission="reserve")
         alloc = sched.allocator
 
         def check():
@@ -364,6 +381,221 @@ def test_page_allocator_no_leak_no_double_ownership():
                 sched.evict(r, "length")
         check()
         assert alloc.free_count == 10 and alloc.reserved == 0
+
+
+def test_refcounted_allocator_oversubscribed_random_schedules():
+    """Property test for the optimistic/sharing allocator: random schedules
+    that admit beyond worst-case capacity, publish/adopt prefixes, COW-fork
+    shared pages, preempt and re-admit. Invariants after every op: each
+    page's refcount equals its owner count (slot table links + prefix-index
+    nodes), a page is on the free list iff its refcount is zero (refcounts
+    hit zero exactly at the last release, never before), no page is lost,
+    and every slot's table row mirrors its request's pages."""
+    from collections import Counter
+
+    from repro.serve.scheduler import padded_len
+
+    for seed in range(4):
+        rng = np.random.default_rng(seed)
+        sched = Scheduler(3, chunk=4, page_size=4, num_pages=10, eff_len=32,
+                          admission="optimistic", prefix_sharing=True)
+        alloc = sched.allocator
+        n = sched.num_pages
+
+        def check():
+            admitted = [r for r in sched.slots if r is not None]
+            owners = Counter(p for r in admitted for p in r.pages)
+            owners.update(sched.prefix_index.pages())
+            for p in range(n):
+                assert alloc.refs[p] == owners[p], \
+                    f"page {p}: refs {alloc.refs[p]} != owners {owners[p]}"
+            free = sorted(alloc._free)
+            assert free == [p for p in range(n) if alloc.refs[p] == 0], \
+                "free list out of sync with refcounts"
+            assert len(set(free)) == len(free)
+            for r in admitted:
+                row = sched.page_table[r.slot]
+                assert list(row[:len(r.pages)]) == r.pages
+                assert (row[len(r.pages):] == -1).all()
+                # a slot may write only pages it owns alone or that are
+                # ref-shared (never free): every mapped page is live
+                assert all(alloc.refs[p] > 0 for p in r.pages)
+
+        for _ in range(400):
+            op = rng.integers(6)
+            admitted = [r for r in sched.slots if r is not None]
+            if op == 0:                                   # submit
+                pl = int(rng.integers(1, 24))
+                mn = int(rng.integers(1, 12))
+                sched.check_capacity(pl, mn)              # always fits here
+                sched.submit(list(range(pl)), mn)
+            elif op == 1:                                 # admit (may adopt)
+                sched.admit()
+            elif op == 2 and admitted:                    # grow (may preempt)
+                r = admitted[int(rng.integers(len(admitted)))]
+                sched.ensure_pages(r, int(rng.integers(1, 40)))
+            elif op == 3 and admitted:                    # publish a prefix
+                r = admitted[int(rng.integers(len(admitted)))]
+                sched.ensure_pages(r, r.seq_len)
+                sched.record_prefix(r)
+            elif op == 4 and admitted:                    # COW-fork a write
+                r = admitted[int(rng.integers(len(admitted)))]
+                if r.pages:
+                    pos = int(rng.integers(len(r.pages) * sched.page_size))
+                    sched.prepare_write(r, pos)
+            elif op == 5 and admitted:                    # preempt → re-queue
+                r = admitted[int(rng.integers(len(admitted)))]
+                sched.preempt(r)
+                sched.drain_preempted()
+            check()
+        for r in list(sched.slots):
+            if r is not None:
+                sched.evict(r, "length")
+        check()
+        assert sched.stats.preemptions > 0                # paths exercised
+        assert sched.stats.prefix_hits > 0
+        sched.drop_prefix_index()
+        assert alloc.free_count == n and all(x == 0 for x in alloc.refs)
+
+
+def test_submit_rejects_nonpositive_max_new():
+    """Regression: max_new_tokens <= 0 used to be accepted — the request was
+    admitted, prefilled, finalize-decoded, then evicted with its sampled
+    token silently dropped. It must be rejected at submit instead."""
+    cfg, model, params = _setup()
+    eng = ServeEngine(model, params, cache_len=64, prefill_chunk=8,
+                      max_slots=1)
+    eng.start()
+    for bad in (0, -3):
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            eng.submit([5, 6, 7], bad)
+    sched = Scheduler(1, chunk=8)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        sched.submit([5, 6, 7], 0)
+    # a valid request still runs after the rejections
+    req = eng.submit([5, 6, 7], 1)
+    eng.run()
+    assert req.done and len(req.out) == 1
+
+
+def test_evict_clears_slot_and_rejects_stale_handle():
+    """Regression: evict() used to leave req.slot pointing at the recycled
+    slot, so a finished handle could alias (and evict!) the next occupant.
+    The slot must be cleared after the eviction trace is recorded, and a
+    second evict through the stale handle must assert."""
+    cfg, model, params = _setup()
+    eng = ServeEngine(model, params, cache_len=64, prefill_chunk=8,
+                      max_slots=1, eos=-1)
+    eng.start()
+    done = eng.submit([5, 6, 7], 2)
+    eng.run()
+    assert done.done and done.slot is None
+    # the eviction trace still recorded the slot it ran in
+    assert [(r, s) for t, s, r, _ in eng.stats.evictions] == [(done.rid, 0)]
+    nxt = eng.submit([9, 10, 11], 4)
+    with pytest.raises(AssertionError, match="stale"):
+        eng.scheduler.evict(done, "eos")    # must not evict nxt's slot
+    eng.run()
+    assert nxt.done and len(nxt.out) == 4
+
+
+def test_prefix_sharing_cow_parity():
+    """Prefix adoption + copy-on-write: a prompt fully covered by the index
+    skips its prefill (pages ref-shared), finalize forks the shared boundary
+    page before writing into it, and the tokens stay bitwise identical to a
+    cold engine. The trie page must survive the fork untouched: a third
+    request hitting the same prefix adopts it again and also matches."""
+    cfg, model, params = _setup()
+    kw = dict(cache_len=64, prefill_chunk=8, max_slots=2, eos=-1,
+              cache_layout="paged", page_size=4)
+    A = [int(x) for x in np.random.default_rng(3).integers(2, cfg.vocab_size, 24)]
+    B = A[:16]                          # aligned full-prompt prefix of A
+
+    cold = ServeEngine(model, params, **kw)
+    cold.start()
+    b_cold = cold.submit(B, 6)
+    cold.run()
+
+    eng = ServeEngine(model, params, **kw)
+    eng.start()
+    lead = eng.submit(A, 6)             # publishes A's pages to the index
+    eng.run()
+    st = eng.stats
+    chunks_before = st.prefill_chunks
+    b_shared = eng.submit(B, 6)
+    eng.run()
+    assert b_shared.out == b_cold.out   # sharing is invisible in the tokens
+    # B's 16-token prompt was fully adopted: no prefill chunk ran for it,
+    # and finalize COW-forked exactly the shared page it rewrites
+    assert st.prefill_chunks == chunks_before
+    assert st.prefix_hit_tokens >= 16 and st.cow_clones == 1
+    # the fork left the trie page intact: a second taker still matches fully
+    b_again = eng.submit(B, 6)
+    eng.run()
+    assert b_again.out == b_cold.out and st.cow_clones == 2
+    # partial adoption: a longer prompt sharing A's head re-prefills only
+    # its tail (hit tokens grow, chunks advance past the adopted span)
+    c_cold = ServeEngine(model, params, **kw)
+    c_prompt = A[:16] + [7, 8, 9, 10]
+    c_out = c_cold.generate([c_prompt], 6)[0]
+    hit_before = st.prefix_hit_tokens
+    c_shared = eng.submit(c_prompt, 6)
+    eng.run()
+    assert c_shared.out == c_out
+    assert st.prefix_hit_tokens == hit_before + 16
+
+
+def test_adopted_idle_lane_cannot_poison_neighbour_decode():
+    """Batched decode computes every lane, and inactive lanes (e.g. a slot
+    that adopted shared prefix pages but has not prefilled its suffix yet)
+    carry stale write positions. Their in-step pool write must be *dropped*,
+    not merely rolled back by the post-step slot select: under prefix
+    sharing the stale target can be a shared page an active neighbour reads
+    later in the very same step. Three followers of one leader — admitted
+    together, prefilled one per tick — cover the decode-while-neighbour-
+    adopted interleavings and must match a cold, sharing-free engine."""
+    cfg, model, params = _setup()
+    kw = dict(cache_len=64, prefill_chunk=8, max_slots=4, eos=-1,
+              cache_layout="paged", page_size=4, num_pages=24)
+    system = [11, 12, 13, 14] * 4                # 16 tokens = 4 shared pages
+    suffixes = [[5, 6, 7], [9, 10], [3, 4, 8], [15, 16, 17, 18]]
+    prompts = [system + s for s in suffixes]
+    cold = ServeEngine(model, params, prefix_sharing=False, **kw)
+    want = [cold.generate([p], 6)[0] for p in prompts]
+
+    eng = ServeEngine(model, params, **kw)
+    eng.start()
+    lead = eng.submit(prompts[0], 6)
+    eng.run()                                    # leader populates the index
+    followers = [eng.submit(p, 6) for p in prompts[1:]]
+    eng.run()
+    assert eng.stats.prefix_hits == 3            # every follower adopted
+    assert [r.out for r in [lead] + followers] == want
+
+
+def test_preempted_resume_matches_uninterrupted_decode():
+    """Oversubscription parity: a pool too small for both requests' full
+    spans forces a preemption mid-decode; the victim is re-queued, re-
+    prefills prompt + generated-so-far, and must finish with greedy tokens
+    bitwise identical to an uninterrupted run (contiguous layout and a
+    roomy paged pool agree)."""
+    cfg, model, params = _setup()
+    prompts = [[5, 6, 7, 9, 10, 11, 12, 13], [3, 4, 8, 14, 15, 16, 17, 18]]
+    kw = dict(cache_len=64, prefill_chunk=8, max_slots=2, eos=-1)
+    outs_c = ServeEngine(model, params, **kw).generate(prompts, 12)
+    # 8-token prompts + 12 new tokens → 5 pages each at page_size=4; an
+    # 8-page pool fits both prefills but not both full spans → one victim
+    eng = ServeEngine(model, params, cache_layout="paged", page_size=4,
+                      num_pages=8, prefix_sharing=False, **kw)
+    outs_p = eng.generate(prompts, 12)
+    assert eng.stats.preemptions >= 1       # the path actually fired
+    assert outs_p == outs_c
+    assert eng.stats.finished == len(prompts)
+    # roomy pool: same tokens with no preemption (control for the control)
+    eng_big = ServeEngine(model, params, cache_layout="paged", page_size=4,
+                          num_pages=32, prefix_sharing=False, **kw)
+    assert eng_big.generate(prompts, 12) == outs_c
+    assert eng_big.stats.preemptions == 0
 
 
 def test_paged_pool_leaves_shard_like_kv():
