@@ -114,6 +114,41 @@ def _paged_trace(cfg, *, num_requests: int, max_new_long: int,
     return [(0.0, p, int(b)) for p, b in zip(prompts, budgets)]
 
 
+def _static_decode_stats(eng, slots: int) -> dict:
+    """Static (traced, not timed) decode-tick cost of a started engine.
+
+    Cross-checks the wall-clock bench against ``repro.analysis.memory``'s
+    jaxpr accounting: ``bytes_per_token`` is the analyzer's bytes-moved for
+    one decode tick divided over the pool, ``analytic_bytes_per_token`` the
+    first-principles floor (every weight byte once + the KV pool read and
+    written once). scripts/test.sh --bench-smoke fails if they diverge 2×.
+    """
+    import jax.numpy as jnp
+
+    from repro.analysis.memory import measure_closed
+
+    i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    closed = jax.make_jaxpr(
+        lambda p, c, t, po, a, te, tk, se, nt:
+            eng._decode_jit(p, c, t, po, a, te, tk, se, nt, None))(
+        eng.params, eng._caches, i32(slots), i32(slots),
+        jax.ShapeDtypeStruct((slots,), jnp.bool_),
+        jax.ShapeDtypeStruct((slots,), jnp.float32),
+        i32(slots), jax.ShapeDtypeStruct((slots,), jnp.uint32), i32(slots))
+    cost = measure_closed(closed, what="serve-decode")
+    weights = sum(l.nbytes for l in jax.tree_util.tree_leaves(eng.params))
+    cache = sum(l.nbytes for l in jax.tree_util.tree_leaves(eng._caches))
+    return {
+        "slots": slots,
+        "bytes_moved_per_tick": cost.bytes_moved,
+        "bytes_per_token": cost.bytes_moved / slots,
+        "analytic_bytes_per_token": (weights + 2 * cache) / slots,
+        "weights_bytes": weights,
+        "kv_cache_bytes": cache,
+        "peak_live_bytes": cost.peak_live_bytes,
+    }
+
+
 def paged_kv(fast: bool = True) -> None:
     """Paged vs contiguous layout at an equal KV-row (HBM) budget.
 
@@ -180,6 +215,7 @@ def paged_kv(fast: bool = True) -> None:
                "prefill_chunk": chunk, "requests": num_requests,
                "max_new": {"long": max_new_long, "short": max_new_short},
                "results": [rows["contiguous"], rows["paged"]],
+               "static": _static_decode_stats(eng_p, paged_slots),
                "speedup": speedup,
                "concurrency_gain": (rows["paged"]["peak_admitted"]
                                     / max(rows["contiguous"]["peak_admitted"], 1))}

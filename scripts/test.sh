@@ -8,7 +8,12 @@
 #                                   # a valid BENCH_serve_throughput.json
 #   scripts/test.sh --analyze       # graph-invariant lint lane only:
 #                                   # python -m repro.analysis over the CI
-#                                   # config set (train+serve+freeze)
+#                                   # config set (train+serve+freeze);
+#                                   # stale allowlist entries are fatal
+#   scripts/test.sh --budgets       # memory/bandwidth budget lane only:
+#                                   # python -m repro.analysis --what memory
+#                                   # over the CI config set, diffing against
+#                                   # src/repro/analysis/budgets/*.json
 #   scripts/test.sh -m "not slow"   # explicit marker expression
 #   scripts/test.sh tests/test_repr.py -k parity
 set -euo pipefail
@@ -23,10 +28,20 @@ for a in "$@"; do
     bench_smoke=1
   elif [[ "$a" == "--analyze" ]]; then
     # Blocking lint lane: every rule over three architectures (decoder LM,
-    # large dense LM, recurrent-hybrid), all three traced paths.
+    # large dense LM, recurrent-hybrid), all three traced paths. A waiver
+    # that matches nothing anywhere is dead weight — fail, don't nag
+    # (python -m repro.analysis --prune-stale rewrites the file).
     exec python -m repro.analysis \
       --config gpt2-small,qwen2-72b,recurrentgemma-9b \
-      --what train,serve,freeze
+      --what train,serve,freeze --strict-stale
+  elif [[ "$a" == "--budgets" ]]; then
+    # Blocking quantitative lane: liveness peak-HBM + per-scope bytes/FLOPs
+    # of every traced entry point, ratcheted against the checked-in budget
+    # files, plus the paper's memory claims (q8 payload <= 0.35x dense,
+    # sparse train state < dense equivalent, peak-live <= 0.65x).
+    exec python -m repro.analysis \
+      --config gpt2-small,qwen2-72b,recurrentgemma-9b \
+      --what memory
   else
     args+=("$a")
   fi
@@ -96,8 +111,23 @@ if paged.get("speedup", 0) < 1.0:
     # wall-clock ratio is noisy on shared CI runners, so only warn.
     print("scripts/test.sh: WARNING paged tokens/s below contiguous "
           f"({paged.get('speedup'):.2f}x) — noise, or the layout regressed")
+# Static analyzer cross-check: the jaxpr-level bytes-per-decode-token must
+# agree with the first-principles floor (weights once + KV pool in/out)
+# within 2x. Deterministic (no wall clock), so a miss means the decode
+# graph grew a traffic source the analytic model doesn't know about — or
+# the analyzer stopped seeing real traffic.
+st = paged.get("static") or {}
+bpt, ana = st.get("bytes_per_token"), st.get("analytic_bytes_per_token")
+if not bpt or not ana:
+    sys.exit(f"scripts/test.sh: BENCH_paged_kv.json missing static decode "
+             f"stats: {st}")
+ratio = bpt / ana
+if not 0.5 <= ratio <= 2.0:
+    sys.exit(f"scripts/test.sh: static decode bytes/token {bpt:.4g} is "
+             f"{ratio:.2f}x the analytic floor {ana:.4g} — outside [0.5, 2]")
 print(f"scripts/test.sh: paged-kv smoke ok — {paged['speedup']:.2f}x tok/s, "
-      f"{paged['concurrency_gain']:.1f}x admitted concurrency")
+      f"{paged['concurrency_gain']:.1f}x admitted concurrency, static "
+      f"{ratio:.2f}x analytic bytes/token")
 
 # Shared-prefix burst: the prefix index must actually share (hit rate > 0 —
 # a zero means followers re-prefilled the common system prompt) and

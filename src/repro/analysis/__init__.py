@@ -20,9 +20,21 @@ CLI (what CI runs; see ``scripts/test.sh --analyze``)::
     python -m repro.analysis --config gpt2_small --rules dtype-drift -v
     python -m repro.analysis --list-rules
 
-Exit codes: 0 green (all findings waived or none), 1 unwaived findings,
-2 analyzer error. ``--allowlist`` points at an alternate ratchet file
-(default: the checked-in ``allowlist.json`` next to this module).
+Quantitative lane (see ``scripts/test.sh --budgets``): ``--what memory``
+runs the jaxpr-level memory/bandwidth analyzer (``memory.py``) and diffs
+every entry point against the checked-in per-config budget files::
+
+    python -m repro.analysis --config gpt2-small --what memory
+    python -m repro.analysis --config gpt2-small --what memory \
+        --update-budgets          # re-baseline after an intentional change
+
+Exit codes: 0 green (all findings waived or none), 1 unwaived findings or
+budget/paper-check failures, 2 analyzer error. ``--allowlist`` points at an
+alternate ratchet file (default: the checked-in ``allowlist.json`` next to
+this module); ``--strict-stale`` (CI default via ``--analyze``) fails the
+run when an allowlist entry matched nothing across the whole sweep, and
+``--prune-stale`` rewrites the file without them. ``--budget-dir``
+relocates the budget JSONs (tests use a tmp dir).
 
 Library::
 
@@ -46,6 +58,16 @@ Architecture
                 entries are surfaced so the net only tightens.
 ``hlo.py``      compiled-HLO re-check of the scope markers (wired into
                 ``launch/dryrun.py`` as a report-only field).
+``memory.py``   jaxpr-level cost interpreter: liveness-based peak-HBM
+                (donation/carry aliasing credited), bytes-moved + FLOPs
+                per named scope (scan bodies × trip count), and the
+                paper's quantitative claims (q8 payload ≤ 0.35× dense,
+                sparse train state < dense equivalent, claim-geometry
+                peak ≤ 0.65×).
+``budget.py``   the ratchet over those numbers: per-config JSON budgets
+                under ``budgets/``, keyed ``<entry-point>:<repr>``;
+                regressions past tolerance fail CI naming the offending
+                scopes/equations, improvements emit tighten hints.
 
 Markers rules rely on (grep for them before refactoring):
 ``slope_dense_dw``, ``slope_dense_bwd2_fallback``, ``slope_dense_ok``,
@@ -88,10 +110,19 @@ class Report:
 
 
 def run_analysis(config: str, whats=ALL_WHATS, *, rules=None,
-                 allowlist: str | None = None) -> Report:
-    """Run ``rules`` (default: all) for one config; apply the allowlist."""
+                 allowlist: "str | Allowlist | None" = None) -> Report:
+    """Run ``rules`` (default: all) for one config; apply the allowlist.
+
+    ``allowlist`` may be a path or an ``Allowlist`` instance. Pass one
+    shared instance across several configs to judge staleness over the
+    whole sweep (the caller then reads ``allowlist.stale()`` at the end;
+    the per-config ``Report.stale`` stays empty in that mode).
+    """
     ctx = AnalysisContext(config, whats)
     findings = run_rules(ctx, rules)
+    if isinstance(allowlist, Allowlist):
+        unwaived = allowlist.apply(findings)
+        return Report(config, findings, unwaived, [])
     al = Allowlist.load(allowlist)
     unwaived = al.apply(findings)
     return Report(config, findings, unwaived, al.stale())

@@ -1,29 +1,46 @@
-"""CLI for the graph-invariant linter. See the package docstring for usage."""
+"""CLI for the graph-invariant linter + memory budgets. See the package
+docstring for usage."""
 from __future__ import annotations
 
 import argparse
 import sys
 import traceback
 
-from . import ALL_WHATS, available_rules, run_analysis
+from . import ALL_WHATS, Allowlist, available_rules, run_analysis
+
+#: --what beyond the lint whats: the quantitative budget/claims pass.
+MEMORY_WHAT = "memory"
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="Lint traced train/serve/freeze graphs for SLoPe's "
-                    "sparsity/memory/sync invariants.")
+                    "sparsity/memory/sync invariants, and ratchet the "
+                    "quantitative memory/bandwidth budgets (--what memory).")
     ap.add_argument("--config", default="gpt2-small",
                     help="comma-separated model_zoo config names")
     ap.add_argument("--what", default=",".join(ALL_WHATS),
-                    help="comma-separated subset of train,serve,freeze")
+                    help="comma-separated subset of train,serve,freeze,memory")
     ap.add_argument("--rules", default=None,
                     help="comma-separated rule subset (default: all)")
     ap.add_argument("--allowlist", default=None,
                     help="alternate allowlist JSON (default: checked-in)")
     ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--strict-stale", action="store_true",
+                    help="fail (exit 1) when allowlist entries matched "
+                         "nothing across the whole run")
+    ap.add_argument("--prune-stale", action="store_true",
+                    help="rewrite the allowlist keeping only entries that "
+                         "matched something this run")
+    ap.add_argument("--update-budgets", action="store_true",
+                    help="(--what memory) rewrite analysis/budgets/<config>."
+                         "json from this run instead of diffing against it")
+    ap.add_argument("--budget-dir", default=None,
+                    help="alternate budget directory (default: checked-in "
+                         "analysis/budgets/)")
     ap.add_argument("-v", "--verbose", action="store_true",
-                    help="show waived findings too")
+                    help="show waived findings / per-entry-point costs too")
     args = ap.parse_args(argv)
 
     if args.list_rules:
@@ -33,25 +50,59 @@ def main(argv=None) -> int:
 
     configs = [c.strip().replace("_", "-") for c in args.config.split(",") if c.strip()]
     whats = tuple(w.strip() for w in args.what.split(",") if w.strip())
-    bad = set(whats) - set(ALL_WHATS)
+    bad = set(whats) - set(ALL_WHATS) - {MEMORY_WHAT}
     if bad:
-        ap.error(f"unknown --what {sorted(bad)}; choose from {ALL_WHATS}")
+        ap.error(f"unknown --what {sorted(bad)}; choose from "
+                 f"{ALL_WHATS + (MEMORY_WHAT,)}")
+    lint_whats = tuple(w for w in whats if w in ALL_WHATS)
     rules = ([r.strip() for r in args.rules.split(",") if r.strip()]
              if args.rules else None)
+
+    # One allowlist instance across every config: staleness is a property
+    # of the whole sweep (see ratchet.py), and --prune-stale must only drop
+    # entries no config hit.
+    al = Allowlist.load(args.allowlist)
 
     exit_code = 0
     for config in configs:
         print(f"== {config} ({','.join(whats)}) ==")
         try:
-            report = run_analysis(config, whats, rules=rules,
-                                  allowlist=args.allowlist)
+            if lint_whats:
+                report = run_analysis(config, lint_whats, rules=rules,
+                                      allowlist=al)
+                print(report.render(verbose=args.verbose))
+                if report.unwaived:
+                    exit_code = 1
+            if MEMORY_WHAT in whats:
+                from .memory import run_memory_analysis
+                mem = run_memory_analysis(config,
+                                          update=args.update_budgets,
+                                          budget_dir=args.budget_dir)
+                print(mem.render(verbose=args.verbose))
+                if not mem.ok:
+                    exit_code = 1
         except Exception:
             traceback.print_exc()
             print(f"  {config}: analyzer error")
             return 2
-        print(report.render(verbose=args.verbose))
-        if report.unwaived:
+
+    if lint_whats:
+        stale = al.stale()
+        for e in stale:
+            print(f"stale allowlist entry: {e.match!r} ({e.reason})")
+        if args.prune_stale:
+            if stale:
+                al.prune_stale()
+                al.save()
+                print(f"pruned {len(stale)} stale entr"
+                      f"{'y' if len(stale) == 1 else 'ies'} from {al.path}")
+            else:
+                print("no stale allowlist entries to prune")
+        elif stale and args.strict_stale:
+            print("stale allowlist entries are fatal under --strict-stale "
+                  "(run with --prune-stale to rewrite the file)")
             exit_code = 1
+
     print("ANALYSIS", "FAILED" if exit_code else "OK")
     return exit_code
 

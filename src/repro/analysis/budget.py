@@ -1,0 +1,131 @@
+"""Checked-in memory/bandwidth budgets: the ratchet over ``memory.py``.
+
+One JSON per config under ``analysis/budgets/``, entries keyed
+``<entry-point>:<repr>`` (``train:compressed``, ``serve-decode:compressed_q8``,
+…), each recording the traced graph's peak-live bytes, total bytes-moved,
+FLOPs, unknown-while count, and per-scope bytes. ``compare`` fails a run
+when any number regresses beyond the file's tolerance — naming the offending
+scopes and their top equations — and emits a tighten hint when the graph got
+cheaper, so the net only moves one way (the ``ratchet.py`` idiom, applied to
+quantities instead of findings).
+
+Re-baseline with ``python -m repro.analysis --what memory --update-budgets``
+after an *intentional* change, and say why in the commit. Tolerances exist
+because the numbers are static trace properties — deterministic on one jax
+version, but jit internals (how many pjit wrappers, where a transpose lands)
+drift slightly across versions; 5% absorbs that without hiding a real 2×.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+
+__all__ = ["BudgetDiff", "DEFAULT_BUDGET_DIR", "budget_path", "load_budget",
+           "save_budget", "compare"]
+
+DEFAULT_BUDGET_DIR = Path(__file__).with_name("budgets")
+
+#: Default relative tolerance when a budget file does not set one.
+DEFAULT_TOLERANCE = 0.05
+
+#: Per-scope regressions below this many bytes never fail on their own —
+#: tiny scopes (scalar bookkeeping) would otherwise flap on jaxpr noise.
+SCOPE_ABS_FLOOR = 16 * 1024
+
+
+def budget_path(config: str, budget_dir=None) -> Path:
+    d = Path(budget_dir) if budget_dir is not None else DEFAULT_BUDGET_DIR
+    return d / f"{config}.json"
+
+
+def load_budget(config: str, budget_dir=None) -> dict | None:
+    p = budget_path(config, budget_dir)
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def save_budget(config: str, data: dict, budget_dir=None) -> Path:
+    p = budget_path(config, budget_dir)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+    return p
+
+
+@dataclass
+class BudgetDiff:
+    key: str                              # "<entry-point>:<repr>"
+    failures: list = field(default_factory=list)
+    hints: list = field(default_factory=list)
+
+    def render(self) -> str:
+        lines = [f"  [{self.key}] {f}" for f in self.failures]
+        lines += [f"  [{self.key}] hint: {h}" for h in self.hints]
+        return "\n".join(lines)
+
+
+def _pct(cur: float, bud: float) -> str:
+    return f"{cur / bud - 1.0:+.1%}" if bud else "new"
+
+
+def compare(key: str, cost, entry: dict | None,
+            tolerance: float = DEFAULT_TOLERANCE) -> BudgetDiff:
+    """Diff one measured ``MemoryCost`` against its budget entry.
+
+    No entry → failure (a new entry point must be budgeted explicitly via
+    ``--update-budgets``, never silently adopted).
+    """
+    diff = BudgetDiff(key)
+    if entry is None:
+        diff.failures.append(
+            "no budget entry — run `python -m repro.analysis --what memory "
+            "--update-budgets` and commit the result")
+        return diff
+
+    scalars = [
+        ("peak_live_bytes", cost.peak_live_bytes, cost.peak_buffers),
+        ("bytes_moved", cost.bytes_moved, None),
+        ("flops", cost.flops, None),
+    ]
+    for name, cur, detail in scalars:
+        bud = entry.get(name)
+        if bud is None:
+            continue
+        if cur > bud * (1.0 + tolerance):
+            msg = f"{name} regression: {cur:.4g} vs budget {bud:.4g} ({_pct(cur, bud)})"
+            if detail:  # peak: name the buffers alive at the peak instant
+                msg += "\n      live at peak: " + "; ".join(detail[:5])
+            diff.failures.append(msg)
+        elif cur * (1.0 + tolerance) < bud:
+            diff.hints.append(
+                f"{name} improved: {cur:.4g} vs budget {bud:.4g} "
+                f"({_pct(cur, bud)}) — tighten the budget (--update-budgets)")
+
+    bud_uw = entry.get("unknown_whiles", 0)
+    if cost.unknown_whiles > bud_uw:
+        diff.failures.append(
+            f"unknown_whiles grew {bud_uw} → {cost.unknown_whiles}: a new "
+            "dynamic while-loop is invisible to trip-count accounting")
+
+    diff.failures.extend(_scope_diff_lines(cost, entry, tolerance))
+    return diff
+
+
+def _scope_diff_lines(cost, entry: dict, tolerance: float) -> list:
+    """Per-scope bytes diff naming the offending equations.
+
+    A scope that vanished or shrank is an improvement (covered by the
+    scalar tighten hints), never a failure.
+    """
+    lines = []
+    budget_scopes = entry.get("by_scope_bytes", {})
+    for scope, cur in sorted(cost.by_scope_bytes.items()):
+        bud = budget_scopes.get(scope, 0.0)
+        if cur <= bud * (1.0 + tolerance) or cur - bud <= SCOPE_ABS_FLOOR:
+            continue
+        sites = "; ".join(cost.top_sites.get(scope, [])[:3])
+        what = "new scope" if not bud else f"scope regression ({_pct(cur, bud)})"
+        lines.append(f"{what} {scope!r}: {cur:.4g}B vs {bud:.4g}B"
+                     + (f" — top eqns: {sites}" if sites else ""))
+    return lines

@@ -1,0 +1,841 @@
+"""Jaxpr-level memory & bandwidth cost interpreter.
+
+The lint rules (``rules.py``) prove *structural* facts — no dense
+materialization, one host sync. This module makes the paper's *quantitative*
+shape checkable: for each traced entry point (``targets.py``'s real
+train-step / serve decode-tick / prefill-chunk / finalize / freeze graphs)
+it computes
+
+* **peak live bytes** — linear-scan liveness over equation order. A buffer
+  is live from its defining equation to its last use; jaxpr inputs are
+  caller-owned and resident for the whole program; donated inputs (the train
+  state under ``donate_argnums=(0,)``, the serve caches under the engine's
+  ``donate_caches``) are credited by aliasing them to the matching output so
+  the pair costs one buffer, not two. Call-like equations (pjit / remat /
+  custom-VJP / scan / while / cond) contribute a transient *excess*
+  ``max(0, interior_peak - boundary_bytes)`` on top of the outer liveness;
+  scan/while bodies are analyzed once (the carry is aliased in place, as XLA
+  lowers it), cond takes the max over branches, and ``pallas_call`` is
+  costed from its operand/result shapes.
+
+* **bytes-moved + FLOPs per named scope** — every leaf equation's operand +
+  result bytes (the HBM upper bound under perfect fusion, mirroring
+  ``roofline/hlo_parse.py``) and FLOPs (exact ``2·out·contract`` for
+  ``dot_general``, ~1 flop/output element otherwise), multiplied by scan
+  trip counts (jaxpr-level ``while`` has no static trip count: counted once
+  and surfaced via ``unknown_whiles``), attributed to the ``slope_*`` /
+  ``serve_*`` / ``q8_*`` named scopes the kernels and engine wire in.
+
+Budgets (``budget.py``) ratchet these numbers per (config, entry-point,
+repr); the paper checks here (``dense_equivalent_stats`` /
+``paper_checks``) compare the sparse representations against their
+analytically-substituted dense-bf16 equivalents — q8 payload ≤ 0.35× dense,
+sparse train state strictly below dense state, transposed backward reading
+packed metadata (``slope_sparse_bwd2`` scope, never the
+``slope_dense_bwd2_fallback`` recompression), and the headline train-step
+peak-live ratio ≤ 0.65× dense (paper: 0.63×).
+
+Dtype widths come from ``roofline.dtypes`` — one table for the HLO parsers
+and this jaxpr view, sub-byte (s4/s2/fp8) aware.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import jax.core as jcore
+
+from repro.roofline.dtypes import aval_bytes
+
+from .walk import scope_of
+
+__all__ = ["MemoryCost", "MemoryReport", "measure_closed", "measure_trace",
+           "dense_equivalent_stats", "run_memory_analysis", "UNSCOPED"]
+
+#: Scope bucket for equations outside any recognized marker scope.
+UNSCOPED = "<unscoped>"
+
+_MARKER_RE = re.compile(r"(?:slope_|serve_|q8_)[A-Za-z0-9_]*")
+
+#: Leaves metadata-only under a dense-equivalent substitution (dense
+#: training stores no indices/scales/masks).
+_META_LEAVES = frozenset({
+    "scales", "idx_packed", "rc_packed", "idxT_packed", "rcT_packed",
+    "permT", "mask",
+})
+_VALUE_LEAVES = frozenset({"values", "values_q"})
+
+
+# --------------------------------------------------------------------------
+# shared jaxpr plumbing
+# --------------------------------------------------------------------------
+
+def _jx(sub) -> "jcore.Jaxpr":
+    return sub.jaxpr if isinstance(sub, jcore.ClosedJaxpr) else sub
+
+
+def _sub_jaxprs(eqn) -> list:
+    """Embedded jaxprs of a call-like equation ([] for leaf primitives)."""
+    p = eqn.params
+    prim = eqn.primitive.name
+    if prim == "pjit":
+        return [p["jaxpr"]]
+    if prim in ("closed_call", "core_call", "call"):
+        return [p["call_jaxpr"]]
+    if prim in ("remat2", "checkpoint"):
+        return [p["jaxpr"]]
+    if prim == "custom_vjp_call_jaxpr":
+        return [p["fun_jaxpr"]]
+    if prim in ("custom_jvp_call", "custom_vjp_call"):
+        return [p["call_jaxpr"]] if p.get("call_jaxpr") is not None else []
+    if prim == "scan":
+        return [p["jaxpr"]]
+    if prim == "while":
+        return [p["body_jaxpr"], p["cond_jaxpr"]]
+    if prim == "cond":
+        return list(p["branches"])
+    if prim == "pallas_call":
+        return []  # opaque: costed from full operand/result shapes
+    return [v for v in p.values()
+            if isinstance(v, (jcore.Jaxpr, jcore.ClosedJaxpr))]
+
+
+def _same_aval(a, b) -> bool:
+    return (getattr(a, "shape", None) == getattr(b, "shape", None)
+            and getattr(a, "dtype", None) == getattr(b, "dtype", None))
+
+
+def _donation_pairs(eqn) -> list:
+    """(operand_var, outvar) pairs sharing one buffer across this equation.
+
+    * ``pjit`` carries explicit ``donated_invars`` flags (from
+      ``donate_argnums`` on the jitted callable); each donated operand is
+      greedily matched to the first unmatched result with an identical aval
+      — the same aval-matching XLA's input/output aliasing performs.
+    * ``scan``/``while`` carries are updated in place by the lowered loop:
+      init carry operand ↔ final carry result alias positionally.
+    """
+    prim = eqn.primitive.name
+    pairs = []
+    if prim == "pjit":
+        don = eqn.params.get("donated_invars")
+        if don:
+            taken = set()
+            for inv, d in zip(eqn.invars, don):
+                if not d or not isinstance(inv, jcore.Var):
+                    continue
+                for ov in eqn.outvars:
+                    if id(ov) in taken or isinstance(ov, jcore.DropVar):
+                        continue
+                    if _same_aval(inv.aval, ov.aval):
+                        taken.add(id(ov))
+                        pairs.append((inv, ov))
+                        break
+    elif prim == "scan":
+        nc, ncarry = eqn.params["num_consts"], eqn.params["num_carry"]
+        for inv, ov in zip(eqn.invars[nc:nc + ncarry], eqn.outvars[:ncarry]):
+            if isinstance(inv, jcore.Var):
+                pairs.append((inv, ov))
+    elif prim == "while":
+        cn, bn = eqn.params["cond_nconsts"], eqn.params["body_nconsts"]
+        for inv, ov in zip(eqn.invars[cn + bn:], eqn.outvars):
+            if isinstance(inv, jcore.Var):
+                pairs.append((inv, ov))
+    return pairs
+
+
+# --------------------------------------------------------------------------
+# peak live bytes: linear-scan liveness with donation aliasing
+# --------------------------------------------------------------------------
+
+def _eqn_extra(eqn) -> int:
+    """Transient interior excess of a call-like equation.
+
+    The outer scan already holds the equation's operands and (non-aliased)
+    results live; anything the interior allocates beyond that boundary —
+    remat-recomputed activations, a loop body's temporaries — spikes memory
+    only *while the call runs*, at this equation's instant.
+    """
+    subs = _sub_jaxprs(eqn)
+    if not subs:
+        return 0
+    donated_idx = ()
+    if eqn.primitive.name == "pjit":
+        don = eqn.params.get("donated_invars")
+        if don:
+            donated_idx = tuple(i for i, d in enumerate(don) if d)
+    interior = max(_peak(_jx(s), donated_idx)[0] for s in subs)
+    aliased = {id(ov) for _, ov in _donation_pairs(eqn)}
+    seen = set()
+    boundary = 0
+    for a in eqn.invars:
+        if isinstance(a, jcore.Var) and id(a) not in seen:
+            seen.add(id(a))
+            boundary += aval_bytes(a.aval)
+    for ov in eqn.outvars:
+        if id(ov) not in aliased:
+            boundary += aval_bytes(ov.aval)
+    return max(0, interior - boundary)
+
+
+def _peak(jaxpr: "jcore.Jaxpr", donated=(), invar_names=None):
+    """(peak_bytes, peak_buffers, input_bytes) of one jaxpr.
+
+    ``donated``: invar indices whose buffers are reused for an aval-matching
+    jaxpr output (``jax.jit``'s ``donate_argnums`` semantics).
+    ``invar_names`` (optional, aligned with invars) labels the buffers named
+    in ``peak_buffers`` — the top live allocations at the peak instant.
+    """
+    N = len(jaxpr.eqns)
+    definition, last_use, label = {}, {}, {}
+    for v in list(jaxpr.constvars) + list(jaxpr.invars):
+        definition[v] = 0
+        last_use[v] = N  # caller-owned: resident for the whole program
+        label[v] = "const"
+    if invar_names is not None:
+        for v, name in zip(jaxpr.invars, invar_names):
+            label[v] = f"invar:{name}"
+    else:
+        for i, v in enumerate(jaxpr.invars):
+            label[v] = f"invar#{i}"
+
+    for i, eqn in enumerate(jaxpr.eqns):
+        for a in eqn.invars:
+            if isinstance(a, jcore.Var) and a in definition:
+                last_use[a] = max(last_use[a], i)
+        for v in eqn.outvars:
+            definition[v] = i
+            last_use[v] = i
+            scope = scope_of(eqn)
+            label[v] = (f"{eqn.primitive.name}@{scope}" if scope
+                        else eqn.primitive.name)
+    for v in jaxpr.outvars:
+        if isinstance(v, jcore.Var) and v in definition:
+            last_use[v] = N
+
+    # Union-find over aliased buffers: donated jaxpr inputs ↔ matching
+    # outputs, plus per-equation pairs (pjit donation, loop carries).
+    parent: dict = {}
+
+    def find(v):
+        r = v
+        while parent.get(r, r) is not r:
+            r = parent[r]
+        while parent.get(v, v) is not v:
+            parent[v], v = r, parent[v]
+        return r
+
+    def union(a, b):
+        ra, rb = find(a), find(b)
+        if ra is not rb:
+            parent[rb] = ra
+
+    taken = set()
+    for idx in donated:
+        if idx >= len(jaxpr.invars):
+            continue
+        inv = jaxpr.invars[idx]
+        for ov in jaxpr.outvars:
+            if (isinstance(ov, jcore.Var) and id(ov) not in taken
+                    and ov is not inv and ov in definition
+                    and _same_aval(inv.aval, ov.aval)):
+                taken.add(id(ov))
+                union(inv, ov)
+                break
+    for eqn in jaxpr.eqns:
+        for inv, ov in _donation_pairs(eqn):
+            if inv in definition and ov in definition:
+                union(inv, ov)
+
+    invar_set = set(jaxpr.invars)
+    classes: dict = {}
+    for v in definition:
+        r = find(v)
+        c = classes.get(r)
+        b = aval_bytes(v.aval)
+        if c is None:
+            classes[r] = [b, definition[v], last_use[v], label[v],
+                          v in invar_set]
+        else:
+            c[0] = max(c[0], b)
+            c[1] = min(c[1], definition[v])
+            c[2] = max(c[2], last_use[v])
+            if v in invar_set:  # prefer the named input label
+                c[3], c[4] = label[v], True
+
+    input_bytes = sum(aval_bytes(v.aval) for v in jaxpr.invars)
+    if N == 0:
+        peak = sum(c[0] for c in classes.values())
+        bufs = sorted(((c[0], c[3]) for c in classes.values()), reverse=True)
+        return peak, [f"{b}B {l}" for b, l in bufs[:6]], input_bytes
+
+    delta = [0] * (N + 1)
+    for b, d, lu, _, _ in classes.values():
+        delta[d] += b
+        if lu + 1 <= N:
+            delta[lu + 1] -= b
+    extra = [_eqn_extra(eqn) for eqn in jaxpr.eqns]
+    running, peak, peak_i = 0, 0, 0
+    for i in range(N):
+        running += delta[i]
+        tot = running + extra[i]
+        if tot > peak:
+            peak, peak_i = tot, i
+    bufs = sorted(((c[0], c[3]) for c in classes.values()
+                   if c[1] <= peak_i <= c[2]), reverse=True)
+    buf_lines = [f"{b}B {l}" for b, l in bufs[:6]]
+    if extra[peak_i]:
+        buf_lines.insert(0, f"{extra[peak_i]}B transient inside "
+                            f"{jaxpr.eqns[peak_i].primitive.name}")
+    return peak, buf_lines, input_bytes
+
+
+# --------------------------------------------------------------------------
+# bytes-moved + FLOPs per named scope
+# --------------------------------------------------------------------------
+
+def _scope_key(eqn) -> str:
+    """Marker path of an equation: the ordered, deduplicated ``slope_*`` /
+    ``serve_*`` / ``q8_*`` segments of its named-scope stack (transform
+    wrappers like ``transpose(jvp(slope_x))`` still expose the marker)."""
+    marks = []
+    for m in _MARKER_RE.findall(scope_of(eqn)):
+        if not marks or marks[-1] != m:
+            marks.append(m)
+    return "/".join(marks) if marks else UNSCOPED
+
+
+def _prod(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n
+
+
+def _eqn_flops(eqn) -> float:
+    out_elems = sum(_prod(getattr(v.aval, "shape", ()))
+                    for v in eqn.outvars)
+    if eqn.primitive.name == "dot_general":
+        (lc, _), _ = eqn.params["dimension_numbers"]
+        lhs_shape = getattr(eqn.invars[0].aval, "shape", ())
+        contract = 1
+        for d in lc:
+            contract *= int(lhs_shape[d])
+        return 2.0 * out_elems * contract
+    return float(out_elems)
+
+
+def _eqn_io_bytes(eqn) -> int:
+    b = 0
+    for a in eqn.invars:
+        b += aval_bytes(a.aval)
+    for v in eqn.outvars:
+        b += aval_bytes(v.aval)
+    return b
+
+
+@dataclass
+class _Accum:
+    bytes_by_scope: dict = field(default_factory=dict)
+    flops_by_scope: dict = field(default_factory=dict)
+    sites: dict = field(default_factory=dict)  # scope -> [(bytes, desc)]
+    unknown_whiles: int = 0
+
+    def add(self, scope: str, b: float, f: float, desc: str | None):
+        self.bytes_by_scope[scope] = self.bytes_by_scope.get(scope, 0.0) + b
+        self.flops_by_scope[scope] = self.flops_by_scope.get(scope, 0.0) + f
+        if desc is not None:
+            top = self.sites.setdefault(scope, [])
+            top.append((b, desc))
+            top.sort(reverse=True)
+            del top[3:]
+
+    def merge(self, other: "_Accum", mult: float = 1.0):
+        for s, b in other.bytes_by_scope.items():
+            self.bytes_by_scope[s] = self.bytes_by_scope.get(s, 0.0) + b * mult
+        for s, f in other.flops_by_scope.items():
+            self.flops_by_scope[s] = self.flops_by_scope.get(s, 0.0) + f * mult
+        for s, top in other.sites.items():
+            mine = self.sites.setdefault(s, [])
+            mine.extend((b * mult, d) for b, d in top)
+            mine.sort(reverse=True)
+            del mine[3:]
+        self.unknown_whiles += other.unknown_whiles
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_scope.values())
+
+    @property
+    def total_flops(self) -> float:
+        return sum(self.flops_by_scope.values())
+
+
+def _collect(jaxpr: "jcore.Jaxpr", mult: float, acc: _Accum) -> None:
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "scan":
+            _collect(_jx(eqn.params["jaxpr"]), mult * eqn.params["length"], acc)
+            continue
+        if prim == "while":
+            # No static trip count at jaxpr level: count the body once and
+            # surface the undercount — budgets fail if the count grows.
+            acc.unknown_whiles += 1
+            _collect(_jx(eqn.params["body_jaxpr"]), mult, acc)
+            _collect(_jx(eqn.params["cond_jaxpr"]), mult, acc)
+            continue
+        if prim == "cond":
+            branch_accs = []
+            for br in eqn.params["branches"]:
+                a = _Accum()
+                _collect(_jx(br), 1.0, a)
+                branch_accs.append(a)
+            # Worst-case branch (by bytes): a data-dependent branch can't be
+            # averaged statically, and budgets must bound the expensive arm.
+            acc.merge(max(branch_accs, key=lambda a: a.total_bytes), mult)
+            continue
+        subs = _sub_jaxprs(eqn)
+        if subs:
+            for s in subs:
+                _collect(_jx(s), mult, acc)
+            continue
+        out_aval = max((v.aval for v in eqn.outvars),
+                       key=lambda a: aval_bytes(a), default=None)
+        desc = prim
+        if out_aval is not None and getattr(out_aval, "shape", None) is not None:
+            desc = f"{prim} {getattr(out_aval.dtype, 'name', '?')}" \
+                   f"{list(out_aval.shape)}"
+        acc.add(_scope_key(eqn), _eqn_io_bytes(eqn) * mult,
+                _eqn_flops(eqn) * mult, desc)
+
+
+# --------------------------------------------------------------------------
+# public API
+# --------------------------------------------------------------------------
+
+@dataclass
+class MemoryCost:
+    what: str
+    repr_label: str
+    peak_live_bytes: int
+    input_bytes: int
+    bytes_moved: float
+    flops: float
+    by_scope_bytes: dict
+    by_scope_flops: dict
+    unknown_whiles: int
+    top_sites: dict           # scope -> ["<bytes>B <prim> <shape>"]
+    peak_buffers: list        # largest live buffers at the peak instant
+
+    def budget_entry(self) -> dict:
+        return {
+            "peak_live_bytes": int(self.peak_live_bytes),
+            "input_bytes": int(self.input_bytes),
+            "bytes_moved": float(self.bytes_moved),
+            "flops": float(self.flops),
+            "unknown_whiles": int(self.unknown_whiles),
+            "by_scope_bytes": {k: float(v)
+                               for k, v in sorted(self.by_scope_bytes.items())},
+        }
+
+
+def measure_closed(closed, *, donated=(), invar_names=None,
+                   what: str = "", repr_label: str = "") -> MemoryCost:
+    """Cost one ClosedJaxpr: liveness peak + per-scope traffic/FLOPs."""
+    jaxpr = closed.jaxpr
+    peak, peak_bufs, input_bytes = _peak(jaxpr, tuple(donated), invar_names)
+    acc = _Accum()
+    _collect(jaxpr, 1.0, acc)
+    top_sites = {s: [f"{int(b)}B {d}" for b, d in top]
+                 for s, top in acc.sites.items()}
+    return MemoryCost(
+        what=what, repr_label=repr_label,
+        peak_live_bytes=int(peak), input_bytes=int(input_bytes),
+        bytes_moved=float(acc.total_bytes), flops=float(acc.total_flops),
+        by_scope_bytes=dict(acc.bytes_by_scope),
+        by_scope_flops=dict(acc.flops_by_scope),
+        unknown_whiles=acc.unknown_whiles,
+        top_sites=top_sites, peak_buffers=peak_bufs)
+
+
+def measure_trace(trace, *, repr_label: str | None = None) -> MemoryCost:
+    """Cost one ``targets.Trace`` (donation + invar labels from the trace)."""
+    return measure_closed(
+        trace.closed, donated=getattr(trace, "donated", ()),
+        invar_names=trace.invar_paths, what=trace.what,
+        repr_label=repr_label if repr_label is not None
+        else getattr(trace, "repr_label", ""))
+
+
+# --------------------------------------------------------------------------
+# dense-equivalent analytics (the paper's comparison point)
+# --------------------------------------------------------------------------
+
+def _leaf_name(path: str) -> str:
+    return path.rstrip("/").rsplit("/", 1)[-1]
+
+
+def _dense_equiv_bytes(path: str, aval, nms) -> int:
+    """Bytes this invar would occupy under dense-bf16 training.
+
+    * ``values``/``values_q`` payloads (and their optimizer moments, which
+      inherit the payload's ``(…, d_out, k)`` shape) → the full
+      ``d_out × d_in`` dense tensor, ``d_in = k·m/n``. Float leaves keep
+      their own itemsize (bf16 weights → dense bf16, f32 moments → dense
+      f32); int8 q8 payloads map to the dense-bf16 weight (2 B/elem) and
+      their integer moment mirrors to dense-f32 moments (4 B/elem).
+    * metadata (indices, scales, masks, transposed-gather permutations) → 0:
+      dense training stores none of it.
+    * everything else (embeddings, norms, adapters, activations) → own size.
+    """
+    name = _leaf_name(path)
+    if name in _META_LEAVES:
+        return 0
+    if name not in _VALUE_LEAVES:
+        return aval_bytes(aval)
+    shape = getattr(aval, "shape", ())
+    if len(shape) < 2:
+        return aval_bytes(aval)
+    d_out, k = int(shape[-2]), int(shape[-1])
+    d_in = None
+    for n, m in nms:
+        if (k * m) % n == 0:
+            d_in = k * m // n
+            break
+    if d_in is None:
+        return aval_bytes(aval)
+    lead = _prod(shape[:-2])
+    dt = getattr(aval, "dtype", None)
+    if dt is not None and dt.kind == "f":
+        item = dt.itemsize
+    else:
+        in_opt = "/mu/" in f"/{path}/" or "/nu/" in f"/{path}/"
+        item = 4 if in_opt else 2
+    return lead * d_out * d_in * item
+
+
+def _dense_nm_elems(aval, nms) -> int:
+    """Dense ``lead·d_out·d_in`` element count of a payload aval (0 if its
+    trailing dims invert under no candidate N:M)."""
+    shape = getattr(aval, "shape", ())
+    if len(shape) < 2:
+        return 0
+    d_out, k = int(shape[-2]), int(shape[-1])
+    for n, m in nms:
+        if (k * m) % n == 0:
+            return _prod(shape[:-2]) * d_out * (k * m // n)
+    return 0
+
+
+def dense_equivalent_stats(trace, cfg) -> dict:
+    """Per-invar own vs dense-equivalent accounting over one trace.
+
+    Two comparison levels:
+
+    * **leaf substitution** (``own_total``/``dense_total``, ``sparse_own``/
+      ``sparse_dense``): each invar mapped independently by
+      ``_dense_equiv_bytes``. Exact for leaves that exist in both worlds,
+      but blind to state dense training would *add* — a payload the sparse
+      optimizer doesn't moment (q8's frozen int8 values) maps to the dense
+      weight alone, with no f32 moments.
+    * **state totals** (``sparse_own_state``/``sparse_dense_state``): the
+      training-memory claim's comparison. Sparse side = every
+      representation leaf as stored, params *and* optimizer mirrors. Dense
+      side = per payload **param** leaf, the dense weight at its float
+      itemsize (int8 → bf16) plus the 2×f32 Adam moments dense training
+      always carries. This is what makes the bound non-vacuous: the permT/
+      idxT acceleration metadata costs real bytes that the payload-only
+      view would hide.
+
+    ``payload_dense_bf16`` is the dense-bf16 weight-byte denominator of the
+    q8 ≤ 0.35× serve-payload claim.
+    """
+    nms = [(cfg.slope.n, cfg.slope.m)]
+    if cfg.slope.tail_nm:
+        nms.append(tuple(cfg.slope.tail_nm))
+    own_total = dense_total = 0
+    sparse_own = sparse_dense = 0
+    sparse_own_state = sparse_dense_state = 0
+    payload_dense_bf16 = 0
+    for path, v in zip(trace.invar_paths, trace.closed.jaxpr.invars):
+        a = v.aval
+        ob = aval_bytes(a)
+        db = _dense_equiv_bytes(path, a, nms)
+        own_total += ob
+        dense_total += db
+        name = _leaf_name(path)
+        if name not in _VALUE_LEAVES and name not in _META_LEAVES:
+            continue
+        sparse_own += ob
+        sparse_dense += db
+        sparse_own_state += ob
+        if name in _VALUE_LEAVES and "/opt/" not in f"/{path}/":
+            elems = _dense_nm_elems(a, nms)
+            payload_dense_bf16 += elems * 2
+            dt = getattr(a, "dtype", None)
+            w_item = dt.itemsize if dt is not None and dt.kind == "f" else 2
+            sparse_dense_state += elems * (w_item + 8)  # + f32 mu, nu
+    return {
+        "own_total": own_total,
+        "dense_total": dense_total,
+        "sparse_own": sparse_own,
+        "sparse_dense": sparse_dense,
+        "sparse_own_state": sparse_own_state,
+        "sparse_dense_state": sparse_dense_state,
+        "payload_dense_bf16": payload_dense_bf16,
+    }
+
+
+# --------------------------------------------------------------------------
+# orchestration: budgets + paper checks per config
+# --------------------------------------------------------------------------
+
+#: Paper Table-1/§4.3: a compressed_q8 model's total train-step footprint vs
+#: the dense-bf16 equivalent (paper reports 0.63× at scale; 0.65 leaves room
+#: for the small-geometry overheads that don't amortize).
+PEAK_RATIO_BOUND = 0.65
+
+#: Paper §4.2: the quantized serve payload (int8 values + scales + packed
+#: indices) vs the dense-bf16 weight bytes it replaces.
+Q8_PAYLOAD_BOUND = 0.35
+
+#: Sparse-dominated trace geometry for the headline peak-ratio check: at the
+#: default smoke scale (2 layers, d=64) the *shared* dense mass — embeddings,
+#: the intentionally-dense first layer — dominates and the ratio the paper
+#: states over full-depth models is unreachable. Four layers at d=192 put
+#: >70% of parameter bytes in sparse linears, like the real archs; rope
+#: replaces the learned-position table, whose fixed 64k rows are pure shared
+#: mass that would drown the ratio at this scale.
+CLAIM_CONFIG = "gpt2-small"
+CLAIM_DIMS = {"num_layers": 4, "d_model": 192, "d_ff": 768, "pos": "rope"}
+
+
+@dataclass
+class MemoryReport:
+    config: str
+    costs: dict = field(default_factory=dict)      # key -> MemoryCost
+    diffs: list = field(default_factory=list)      # failing/hinting BudgetDiff
+    check_failures: list = field(default_factory=list)
+    check_notes: list = field(default_factory=list)
+    updated_path: str | None = None
+
+    @property
+    def ok(self) -> bool:
+        return not self.check_failures and not any(d.failures
+                                                   for d in self.diffs)
+
+    def render(self, verbose: bool = False) -> str:
+        n_fail = sum(len(d.failures) for d in self.diffs) \
+            + len(self.check_failures)
+        head = f"[memory] {self.config}: " + (
+            f"{n_fail} failure(s)" if n_fail else
+            f"ok ({len(self.costs)} entry points)")
+        if self.updated_path:
+            head += f" — budgets written to {self.updated_path}"
+        lines = [head]
+        for d in self.diffs:
+            if d.failures or (verbose and d.hints):
+                lines.append(d.render())
+        lines += [f"  [paper-check] {f}" for f in self.check_failures]
+        if verbose:
+            lines += [f"  [paper-check] ok: {n}" for n in self.check_notes]
+            for key, c in sorted(self.costs.items()):
+                lines.append(
+                    f"  {key}: peak {c.peak_live_bytes:,}B, "
+                    f"moved {c.bytes_moved:.4g}B, flops {c.flops:.4g}")
+        return "\n".join(lines)
+
+
+def _budget_keyed_costs(ctx) -> dict:
+    """Measure every graph trace of one context, keyed ``what:repr``."""
+    out = {}
+    for tr in ctx.graph_traces():
+        cost = measure_trace(tr)
+        out[f"{cost.what}:{cost.repr_label}"] = (cost, tr)
+    return out
+
+
+def _payload_ratio(trace, cfg) -> tuple[float, int]:
+    """(q8 payload bytes / dense-bf16 weight bytes, dense bytes) over the
+    *forward* payload leaves of a serve trace (values_q + scales +
+    idx_packed — the bytes a decode matmul streams; transposed backward
+    metadata is train-only and excluded from the serve claim)."""
+    fwd = {"values", "values_q", "scales", "idx_packed"}
+    nms = [(cfg.slope.n, cfg.slope.m)]
+    if cfg.slope.tail_nm:
+        nms.append(tuple(cfg.slope.tail_nm))
+    own = dense = 0
+    for path, v in zip(trace.invar_paths, trace.closed.jaxpr.invars):
+        name = _leaf_name(path)
+        if name not in fwd:
+            continue
+        own += aval_bytes(v.aval)
+        if name in _VALUE_LEAVES:
+            shape = getattr(v.aval, "shape", ())
+            if len(shape) >= 2:
+                d_out, k = int(shape[-2]), int(shape[-1])
+                for n, m in nms:
+                    if (k * m) % n == 0:
+                        dense += _prod(shape[:-2]) * d_out * (k * m // n) * 2
+                        break
+    return (own / dense if dense else float("inf")), dense
+
+
+def _paper_checks(ctx, costs: dict, report: MemoryReport) -> None:
+    """The SLoPe quantitative claims, checked on the traced graphs.
+
+    Skipped (with a note) for configs whose representation is not the
+    compressed family — dense_masked/srste baselines are dense by design.
+    """
+    from .targets import AnalysisContext
+
+    cfg = ctx.graph_cfg
+    rep = cfg.slope.representation
+    if not rep.startswith("compressed"):
+        report.check_notes.append(
+            f"representation {rep!r}: compressed-family claims not applicable")
+        return
+
+    # 1. Double-pruned backward runs on packed transposed metadata: the
+    #    slope_sparse_bwd2 scope moves bytes, the dense recompression
+    #    fallback never appears in the train graph.
+    train = next(((c, t) for k, (c, t) in costs.items()
+                  if c.what == "train"), None)
+    if train is not None:
+        cost, _ = train
+        bwd2 = sum(b for s, b in cost.by_scope_bytes.items()
+                   if "slope_sparse_bwd2" in s)
+        fallback = [s for s, b in cost.by_scope_bytes.items()
+                    if "slope_dense_bwd2_fallback" in s and b > 0]
+        if bwd2 <= 0:
+            report.check_failures.append(
+                "train graph has no slope_sparse_bwd2 traffic — the "
+                "transposed backward is not reading the packed metadata")
+        else:
+            report.check_notes.append(
+                f"slope_sparse_bwd2 streams {bwd2:.4g}B in the train step")
+        if fallback:
+            report.check_failures.append(
+                "train graph recompresses/densifies in the backward: "
+                f"slope_dense_bwd2_fallback active in scopes {fallback}")
+
+    # 2. Serve payload ≤ 0.35× dense-bf16 (engine re-quantizes to q8).
+    decode = next(((c, t) for k, (c, t) in costs.items()
+                   if c.what == "serve-decode"), None)
+    if decode is not None:
+        cost, tr = decode
+        if cost.repr_label.endswith("_q8"):
+            ratio, dense = _payload_ratio(tr, cfg)
+            if dense == 0:
+                report.check_failures.append(
+                    "serve-decode trace exposes no sparse payload invars")
+            elif ratio > Q8_PAYLOAD_BOUND:
+                report.check_failures.append(
+                    f"q8 serve payload is {ratio:.3f}× dense-bf16 "
+                    f"(bound {Q8_PAYLOAD_BOUND}) — quantized weights are "
+                    "fatter than the paper's §4.2 claim allows")
+            else:
+                report.check_notes.append(
+                    f"q8 serve payload {ratio:.3f}× dense-bf16 "
+                    f"(≤ {Q8_PAYLOAD_BOUND})")
+
+    # 3. Sparse training state strictly below its dense-equivalent bound,
+    #    for the config's own repr and its compressed_q8 variant. The state
+    #    totals charge the sparse side everything it stores (payload +
+    #    idx/rc/permT metadata + optimizer mirrors) against dense weights +
+    #    f32 Adam moments — non-vacuous: permT alone costs as many bytes as
+    #    the dense bf16 weight, and only the moment savings pay for it.
+    def _state_check(label, tr_v, cfg_v):
+        st = dense_equivalent_stats(tr_v, cfg_v)
+        own, dense = st["sparse_own_state"], st["sparse_dense_state"]
+        if dense == 0:
+            report.check_failures.append(
+                f"{label} train trace exposes no sparse payload invars")
+        elif own >= dense:
+            report.check_failures.append(
+                f"{label} train sparse-state bytes {own:,} ≥ dense-equivalent "
+                f"{dense:,} — the representation stopped saving memory")
+        else:
+            report.check_notes.append(
+                f"{label} train sparse-state bytes {own:,} < dense-equivalent "
+                f"{dense:,} ({own / dense:.2f}×)")
+
+    if train is not None:
+        _state_check(rep, train[1], cfg)
+    if rep != "compressed_q8":
+        ctx_q8 = AnalysisContext(ctx.config_name, whats=("train",),
+                                 adapter_rank=ctx.adapter_rank,
+                                 repr_override="compressed_q8")
+        _state_check("compressed_q8", ctx_q8.trace_train(), ctx_q8.graph_cfg)
+
+    # 4. Headline claim (one config, sparse-dominated geometry): the whole
+    #    q8 train-step peak vs the dense-bf16 equivalent peak. The dense
+    #    peak is the measured sparse peak plus the analytic *state* growth
+    #    (dense weights + f32 moments replacing payload + metadata +
+    #    mirrors) — activations are representation-independent, so the
+    #    substitution is exact at the state level and conservative overall.
+    if ctx.config_name == CLAIM_CONFIG:
+        ctx_claim = AnalysisContext(CLAIM_CONFIG, whats=("train",),
+                                    adapter_rank=ctx.adapter_rank,
+                                    repr_override="compressed_q8",
+                                    dims_override=CLAIM_DIMS)
+        tr_claim = ctx_claim.trace_train()
+        cost_claim = measure_trace(tr_claim)
+        stc = dense_equivalent_stats(tr_claim, ctx_claim.graph_cfg)
+        dense_peak = cost_claim.peak_live_bytes \
+            + (stc["sparse_dense_state"] - stc["sparse_own_state"])
+        ratio = cost_claim.peak_live_bytes / dense_peak
+        if ratio > PEAK_RATIO_BOUND:
+            report.check_failures.append(
+                f"claim geometry train peak-live is {ratio:.3f}× the "
+                f"dense-bf16 equivalent (bound {PEAK_RATIO_BOUND}; paper "
+                "0.63×) — check donation credit and payload sizes")
+        else:
+            report.check_notes.append(
+                f"claim geometry train peak-live {ratio:.3f}× dense-bf16 "
+                f"equivalent (≤ {PEAK_RATIO_BOUND})")
+
+
+def run_memory_analysis(config: str, *, update: bool = False,
+                        budget_dir=None) -> MemoryReport:
+    """Measure one config's entry points, diff against its budget file,
+    and run the paper's quantitative claims. ``update=True`` rewrites the
+    budget file from the measurement instead of diffing."""
+    from . import budget as budget_mod
+    from .targets import AnalysisContext
+
+    report = MemoryReport(config)
+    ctx = AnalysisContext(config)
+    costs = _budget_keyed_costs(ctx)
+    report.costs = {k: c for k, (c, _) in costs.items()}
+
+    if update:
+        data = {"tolerance": budget_mod.DEFAULT_TOLERANCE,
+                "entries": {k: c.budget_entry()
+                            for k, c in report.costs.items()}}
+        report.updated_path = str(
+            budget_mod.save_budget(config, data, budget_dir))
+    else:
+        data = budget_mod.load_budget(config, budget_dir)
+        entries = (data or {}).get("entries", {})
+        tol = (data or {}).get("tolerance", budget_mod.DEFAULT_TOLERANCE)
+        if data is None:
+            d = budget_mod.BudgetDiff("*")
+            d.failures.append(
+                f"no budget file {budget_mod.budget_path(config, budget_dir)}"
+                " — run with --update-budgets and commit it")
+            report.diffs.append(d)
+        else:
+            stale = sorted(set(entries) - set(report.costs))
+            for key in sorted(report.costs):
+                report.diffs.append(budget_mod.compare(
+                    key, report.costs[key], entries.get(key), tol))
+            if stale:
+                d = budget_mod.BudgetDiff("*")
+                d.hints.append(
+                    f"budget entries with no matching trace (stale): {stale}"
+                    " — re-run --update-budgets")
+                report.diffs.append(d)
+
+    _paper_checks(ctx, costs, report)
+    return report

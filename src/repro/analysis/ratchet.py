@@ -6,9 +6,16 @@ indivisible-vocab embedding replication) are recorded in
 ``allowlist.json`` next to this module with a reason, and matched against
 ``Finding.key`` (``rule:config:what:where``) with ``fnmatch`` globs.
 
-Ratcheting: entries that stop matching anything are reported as *stale* —
-a nudge to delete them so the net can only get tighter. Stale entries never
-fail the run; unwaived findings do.
+Ratcheting: entries that stop matching anything over a whole analyzer run
+are *stale*. Under ``scripts/test.sh --analyze`` (which passes
+``--strict-stale``) stale entries are a hard failure — a waiver that waives
+nothing is a landmine: it silently re-waives the finding when it comes back,
+possibly for a different, unreviewed reason. ``--prune-stale`` rewrites the
+file keeping only entries that matched, so the fix is one command.
+
+Staleness is judged across *all* configs of a run (one ``Allowlist``
+instance is shared), not per config — an entry matching only qwen2 findings
+is not stale just because gpt2 ran first.
 """
 from __future__ import annotations
 
@@ -32,17 +39,19 @@ class AllowEntry:
 
 
 class Allowlist:
-    def __init__(self, entries: list[AllowEntry]):
+    def __init__(self, entries: list[AllowEntry],
+                 path: str | Path | None = None):
         self.entries = entries
+        self.path = Path(path) if path is not None else None
 
     @classmethod
     def load(cls, path: str | Path | None = None) -> "Allowlist":
         path = Path(path) if path is not None else DEFAULT_ALLOWLIST
         if not path.exists():
-            return cls([])
+            return cls([], path)
         data = json.loads(path.read_text())
         return cls([AllowEntry(e["match"], e.get("reason", ""))
-                    for e in data.get("entries", [])])
+                    for e in data.get("entries", [])], path)
 
     def apply(self, findings: list[Finding]) -> list[Finding]:
         """Mark waived findings in place; returns the unwaived remainder."""
@@ -60,3 +69,22 @@ class Allowlist:
     def stale(self) -> list[AllowEntry]:
         """Entries that matched nothing — candidates for deletion."""
         return [e for e in self.entries if e.hits == 0]
+
+    def save(self, path: str | Path | None = None) -> Path:
+        path = Path(path) if path is not None else self.path
+        if path is None:
+            raise ValueError("Allowlist has no path to save to")
+        data = {"entries": [{"match": e.match, "reason": e.reason}
+                            for e in self.entries]}
+        path.write_text(json.dumps(data, indent=2) + "\n")
+        return path
+
+    def prune_stale(self) -> list[AllowEntry]:
+        """Drop (and return) entries with zero hits; caller ``save()``s.
+
+        Only meaningful after ``apply`` ran over every finding of a full
+        analyzer sweep — pruning on a partial run would delete live waivers.
+        """
+        dropped = self.stale()
+        self.entries = [e for e in self.entries if e.hits > 0]
+        return dropped

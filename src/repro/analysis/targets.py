@@ -74,6 +74,13 @@ class Trace:
     taints: tuple                  # Taint per invar (payload-leaf seeding)
     dense_shapes: frozenset        # {(d_out, d_in)} incl. transposes
     q8_fallback_delta: int         # ops.Q8_FALLBACK_EVENTS during tracing
+    #: invar indices whose buffers the caller donates (train state under
+    #: ``donate_argnums=(0,)``); serve-side donation travels inside the
+    #: traced pjit's ``donated_invars`` instead. Read by analysis/memory.py.
+    donated: tuple = ()
+    #: weight representation of the traced graph ("compressed",
+    #: "compressed_q8", …) — the repr axis of the budget key.
+    repr_label: str = ""
 
 
 def _flat_paths(tree):
@@ -148,16 +155,29 @@ class AnalysisContext:
     """
 
     def __init__(self, config_name: str, whats=ALL_WHATS, *,
-                 adapter_rank: int = 4):
+                 adapter_rank: int = 4, repr_override: str | None = None,
+                 dims_override: dict | None = None,
+                 engine_kwargs: dict | None = None):
         self.config_name = config_name
         self.whats = tuple(whats)
         self.adapter_rank = adapter_rank
         self.smoke = get_smoke_config(config_name)
+        if dims_override:
+            # memory.py's paper-claim check traces a sparse-dominated
+            # geometry (at smoke scale the dense embeddings/first layer
+            # drown the ratio the paper states over 100+-layer models).
+            self.smoke = self.smoke.replace(**dims_override)
+        self.repr_override = repr_override
+        self.engine_kwargs = dict(engine_kwargs or {})
 
     # ------------------------------------------------------------- graph side
     @cached_property
     def graph_cfg(self) -> ModelConfig:
-        return _interpret_cfg(self.smoke)
+        cfg = _interpret_cfg(self.smoke)
+        if self.repr_override:
+            cfg = cfg.replace(slope=dataclasses.replace(
+                cfg.slope, representation=self.repr_override))
+        return cfg
 
     @cached_property
     def graph_model(self):
@@ -167,7 +187,8 @@ class AnalysisContext:
     def full_cfg(self) -> ModelConfig:
         return get_config(self.config_name)
 
-    def _traced(self, what, fn, args, dense_tree):
+    def _traced(self, what, fn, args, dense_tree, *, donated=(),
+                repr_label=None):
         """make_jaxpr ``fn`` over ``args``; taints seeded by payload leaf name."""
         before = ops.Q8_FALLBACK_EVENTS
         closed = jax.make_jaxpr(fn)(*args)
@@ -180,7 +201,10 @@ class AnalysisContext:
         taints = _payload_taints(paths)
         dense = _dense_shapes(dense_tree, self.graph_cfg)
         _check_collisions(dense, self.graph_cfg, what)
-        return Trace(what, closed, tuple(paths), tuple(taints), dense, delta)
+        if repr_label is None:
+            repr_label = self.graph_cfg.slope.representation
+        return Trace(what, closed, tuple(paths), tuple(taints), dense, delta,
+                     donated=tuple(donated), repr_label=repr_label)
 
     @cached_property
     def _train_pieces(self):
@@ -199,7 +223,12 @@ class AnalysisContext:
     @cached_property
     def _trace_train(self) -> Trace:
         step, state, batch = self._train_pieces
-        return self._traced("train", step, (state, batch), dense_tree=state)
+        # Real launch jits the step with donate_argnums=(0,): every state
+        # leaf's buffer is reused for the updated state. Memory analysis
+        # must model that or it double-counts optimizer state at peak.
+        n_state = len(jax.tree_util.tree_leaves(state))
+        return self._traced("train", step, (state, batch), dense_tree=state,
+                            donated=range(n_state))
 
     @cached_property
     def _graph_engine(self):
@@ -208,12 +237,24 @@ class AnalysisContext:
         params = model.init(jax.random.PRNGKey(0),
                             adapter_rank=self.adapter_rank)
         quantize = "q8" if self.graph_cfg.slope.quantize == "none" else None
-        eng = ServeEngine(model, params, cache_len=TRACE_CACHE_LEN,
-                          prefill_chunk=TRACE_CHUNK, freeze=True,
-                          quantize=quantize, cache_layout="paged",
-                          page_size=TRACE_CHUNK, max_slots=TRACE_SLOTS)
-        eng.start(TRACE_SLOTS)
+        kw = dict(cache_len=TRACE_CACHE_LEN, prefill_chunk=TRACE_CHUNK,
+                  freeze=True, quantize=quantize, cache_layout="paged",
+                  page_size=TRACE_CHUNK, max_slots=TRACE_SLOTS)
+        kw.update(self.engine_kwargs)
+        eng = ServeEngine(model, params, **kw)
+        eng.start(kw["max_slots"])
         return eng
+
+    @property
+    def _serve_repr_label(self) -> str:
+        """Budget repr axis for engine traces: the engine re-quantizes
+        non-quantized configs to q8 at freeze time (see ``_graph_engine``),
+        so the traced graph's representation differs from the train one."""
+        rep = self.graph_cfg.slope.representation
+        if self.graph_cfg.slope.quantize == "none" and \
+                self.engine_kwargs.get("quantize", "q8") is not None:
+            rep += "_q8"
+        return rep
 
     def trace_serve(self) -> list[Trace]:
         return self._trace_serve
@@ -221,6 +262,7 @@ class AnalysisContext:
     @cached_property
     def _trace_serve(self) -> list[Trace]:
         eng = self._graph_engine
+        rep = self._serve_repr_label
         slots = TRACE_SLOTS
         i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
         decode_args = (eng.params, eng._caches, i32(slots), i32(slots),
@@ -232,19 +274,19 @@ class AnalysisContext:
             "serve-decode",
             lambda p, c, t, po, a, te, tk, se, nt:
                 eng._decode_jit(p, c, t, po, a, te, tk, se, nt, None),
-            decode_args, dense_tree=eng.params)
+            decode_args, dense_tree=eng.params, repr_label=rep)
         prefill_args = (eng.params, eng._caches, i32(1, TRACE_CHUNK),
                         i32(), i32())
         prefill = self._traced(
             "serve-prefill",
             lambda p, c, t, o, s:
                 eng._prefill_jit(p, c, t, o, s, None, fresh=True),
-            prefill_args, dense_tree=eng.params)
+            prefill_args, dense_tree=eng.params, repr_label=rep)
         finalize_args = (eng.params, eng._caches, i32(1, 1), i32(), i32())
         finalize = self._traced(
             "serve-finalize",
             lambda p, c, t, ln, s: eng._finalize_jit(p, c, t, ln, s, None),
-            finalize_args, dense_tree=eng.params)
+            finalize_args, dense_tree=eng.params, repr_label=rep)
         traces = [decode, prefill, finalize]
         # Multi-tenant prefix-sharing paths (absent on older engines): the
         # COW page clone and the trie prefix adoption. Both operate on caches
@@ -254,12 +296,14 @@ class AnalysisContext:
             traces.append(self._traced(
                 "serve-cow-clone",
                 lambda c, src, dst: eng._cow_jit(c, src, dst),
-                (eng._caches, i32(), i32()), dense_tree=eng.params))
+                (eng._caches, i32(), i32()), dense_tree=eng.params,
+                repr_label=rep))
         if getattr(eng, "_adopt_jit", None) is not None:
             traces.append(self._traced(
                 "serve-adopt-prefix",
                 lambda c, slot, ln: eng._adopt_jit(c, slot, ln),
-                (eng._caches, i32(), i32()), dense_tree=eng.params))
+                (eng._caches, i32(), i32()), dense_tree=eng.params,
+                repr_label=rep))
         return traces
 
     def trace_freeze(self) -> Trace:
@@ -273,7 +317,8 @@ class AnalysisContext:
         return self._traced(
             "freeze",
             lambda p: freeze_for_inference(model, p, quantize="q8"),
-            (params,), dense_tree=params)
+            (params,), dense_tree=params,
+            repr_label=self.graph_cfg.slope.representation + "_q8")
 
     def graph_traces(self) -> list[Trace]:
         out = []

@@ -22,6 +22,27 @@ Lint invariants (checked by ``repro.analysis``, rule no-dense-materialization):
   read. Keep all three in sync if this path changes.
 * No code in this module may expand a compressed payload to a full
   ``(d_out, d_in)`` matrix; even the fallback above stays O(nnz).
+
+Named scopes & analytic weight-traffic (read by ``analysis/memory.py``):
+every public matmul wrapper runs under a ``slope_*`` named scope so the
+static bytes-moved/FLOPs accounting can attribute traffic to the kernel
+that caused it. Per representation, the weight bytes one forward matmul
+must stream (d_out × d_in dense shape, N:M sparsity, q8 group size g):
+
+====================  =====================================================
+representation        weight bytes / matmul
+====================  =====================================================
+dense (bf16)          ``2·d_out·d_in``
+dense_masked/srste    ``2·d_out·d_in`` (+``d_out·d_in/8`` mask on prune)
+compressed (bf16)     ``2·d_out·d_in·N/M`` values ``+ d_out·d_in·N/M·
+                      ceil(log2 M)/8`` packed indices
+compressed_q8         ``1·d_out·d_in·N/M`` int8 values ``+ 2·d_out·d_in·
+                      N/(M·g)`` scales ``+`` packed indices as above
+====================  =====================================================
+
+The transposed backward (``slope_sparse_bwd2`` in ``core/repr.py``) streams
+the same payload again via the cached ``idxT``/``rcT`` metadata — never a
+recompressed or densified copy.
 """
 from __future__ import annotations
 
@@ -138,16 +159,18 @@ def nm_spmm(x, values, indices, *, n: int, m: int, backend: str = "auto",
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     b = resolve_backend(backend)
-    if b in ("pallas", "pallas_interpret"):
-        block_kw = _fit_blocks(block_kw, x2.shape[0], values.shape[0],
-                               x2.shape[1], m,
-                               k_multiple=_q8_k_multiple(values, scales, n, m))
-        values, scales = _q8_kernel_operands(values, scales,
-                                             block_kw["block_k"], n, m, x2.dtype)
-        y = nm_spmm_pallas(x2, values, indices, scales, n=n, m=m,
-                           interpret=(b == "pallas_interpret"), **block_kw)
-    else:
-        y = ref.nm_spmm_ref(x2, values, indices, n=n, m=m, scales=scales)
+    with jax.named_scope("slope_sparse_mm"):
+        if b in ("pallas", "pallas_interpret"):
+            block_kw = _fit_blocks(block_kw, x2.shape[0], values.shape[0],
+                                   x2.shape[1], m,
+                                   k_multiple=_q8_k_multiple(values, scales, n, m))
+            values, scales = _q8_kernel_operands(values, scales,
+                                                 block_kw["block_k"], n, m,
+                                                 x2.dtype)
+            y = nm_spmm_pallas(x2, values, indices, scales, n=n, m=m,
+                               interpret=(b == "pallas_interpret"), **block_kw)
+        else:
+            y = ref.nm_spmm_ref(x2, values, indices, n=n, m=m, scales=scales)
     return y.reshape(*lead, -1)
 
 
@@ -168,8 +191,10 @@ def nm_spmm_packed(x, values, idx_packed, *, n: int, m: int,
         per = index_pack_ratio(m)
         kw = _fit_blocks(block_kw, x2.shape[0], d_out, x2.shape[1], m)
         if (kw["block_k"] * n // m) % per == 0:
-            y = nm_spmm_pallas(x2, values, idx_packed, n=n, m=m, packed=True,
-                               interpret=(b == "pallas_interpret"), **kw)
+            with jax.named_scope("slope_sparse_mm_packed"):
+                y = nm_spmm_pallas(x2, values, idx_packed, n=n, m=m,
+                                   packed=True,
+                                   interpret=(b == "pallas_interpret"), **kw)
             return y.reshape(*lead, -1)
     from repro.core.sparse import unpack_indices  # deferred: no import cycle
     idx = unpack_indices(idx_packed, m, k_comp)
@@ -184,17 +209,20 @@ def sparse_lora_matmul(x, values, indices, l, r, *, n: int, m: int,
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     b = resolve_backend(backend)
-    if b in ("pallas", "pallas_interpret"):
-        block_kw = _fit_blocks(block_kw, x2.shape[0], values.shape[0],
-                               x2.shape[1], m,
-                               k_multiple=_q8_k_multiple(values, scales, n, m))
-        values, scales = _q8_kernel_operands(values, scales,
-                                             block_kw["block_k"], n, m, x2.dtype)
-        y = sparse_lora_pallas(x2, values, indices, l, r, scales, n=n, m=m,
-                               interpret=(b == "pallas_interpret"), **block_kw)
-    else:
-        y = ref.sparse_lora_ref(x2, values, indices, l, r, n=n, m=m,
-                                scales=scales)
+    with jax.named_scope("slope_sparse_lora"):
+        if b in ("pallas", "pallas_interpret"):
+            block_kw = _fit_blocks(block_kw, x2.shape[0], values.shape[0],
+                                   x2.shape[1], m,
+                                   k_multiple=_q8_k_multiple(values, scales, n, m))
+            values, scales = _q8_kernel_operands(values, scales,
+                                                 block_kw["block_k"], n, m,
+                                                 x2.dtype)
+            y = sparse_lora_pallas(x2, values, indices, l, r, scales, n=n, m=m,
+                                   interpret=(b == "pallas_interpret"),
+                                   **block_kw)
+        else:
+            y = ref.sparse_lora_ref(x2, values, indices, l, r, n=n, m=m,
+                                    scales=scales)
     return y.reshape(*lead, -1)
 
 

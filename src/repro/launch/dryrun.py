@@ -225,6 +225,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str = "base",
     # Trip-count-aware analysis (primary source — XLA's cost_analysis counts
     # while bodies once; see roofline/hlo_parse.py).
     hc = analyze_hlo(hlo)
+    trip_gap = (hc.flops / hc.flops_single_count - 1.0
+                if hc.flops_single_count else 0.0)
     coll = {"total_bytes": hc.collective_bytes,
             "per_op_bytes": hc.per_collective,
             "per_op_counts": hc.collective_counts}
@@ -240,9 +242,17 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str = "base",
         "xla_cost_analysis": {k: float(v) for k, v in cost.items()
                               if k in ("flops", "transcendentals",
                                        "bytes accessed", "optimal_seconds")},
+        # Trip-count-corrected vs raw (while-bodies-once, XLA cost_analysis
+        # semantics) FLOPs side by side: scan-heavy graphs (sLSTM time steps,
+        # microbatch loops) undercount badly in the raw number, and a cell
+        # whose gap exceeds 10% must not be roofline-ranked by it.
         "hlo_analysis": {"dot_flops": hc.dot_flops,
                          "while_trips": hc.while_trips,
-                         "unknown_whiles": hc.unknown_whiles},
+                         "unknown_whiles": hc.unknown_whiles,
+                         "flops_raw_single_count": hc.flops_single_count,
+                         "flops_trip_corrected": hc.flops,
+                         "trip_count_gap": trip_gap,
+                         "trip_gap_exceeds_10pct": trip_gap > 0.10},
         # Report-only scope-marker scan (repro.analysis): deny markers like
         # q8_dequant_fallback reaching compiled HLO show up here first.
         "graph_lint": scan_compiled_hlo(hlo),
@@ -288,8 +298,13 @@ def main() -> None:
                     t0 = time.time()
                     res = run_cell(arch, shp.name, mesh_kind, args.variant, args.out)
                     r = res["roofline"]
+                    ha = res["hlo_analysis"]
+                    gap_note = (f" TRIP-GAP {ha['trip_count_gap']:+.0%} "
+                                f"(raw {ha['flops_raw_single_count']:.3e})"
+                                if ha["trip_gap_exceeds_10pct"] else "")
                     print(f"[dryrun OK ] {tag}: compile {res['compile_s']:.1f}s "
-                          f"flops/chip {r['hlo_flops']:.3e} "
+                          f"flops/chip {r['hlo_flops']:.3e} (trip-corrected)"
+                          f"{gap_note} "
                           f"coll {r['collective']['total_bytes']:.3e}B "
                           f"bottleneck={r['bottleneck']} ({time.time()-t0:.0f}s)",
                           flush=True)

@@ -194,10 +194,18 @@ def select_kv_slots(keep, new, old):
 
 def set_kv_pages(cache, table):
     """Install a host-built ``(slots, max_pages)`` page table (broadcast over
-    a scanned segment's stacked leading axis). No-op on contiguous caches."""
+    a scanned segment's stacked leading axis). No-op on contiguous caches.
+
+    The installed leaf must be a buffer this layer *owns*: when the target
+    shape already matches, ``broadcast_to`` returns its operand unchanged,
+    and every layer sharing the one table buffer breaks the engine's cache
+    donation (XLA rejects donating the same buffer twice in one call)."""
     if isinstance(cache, PagedKVCache):
-        return cache._replace(page_table=jnp.broadcast_to(
-            jnp.asarray(table, jnp.int32), cache.page_table.shape))
+        new = jnp.broadcast_to(jnp.asarray(table, jnp.int32),
+                               cache.page_table.shape)
+        if new is table:
+            new = new.copy()
+        return cache._replace(page_table=new)
     return cache
 
 

@@ -257,7 +257,11 @@ def make_slstm_block(cfg: ModelConfig, *, sparse: bool, dtype=jnp.bfloat16):
         return lin_o[1](p["o"], y), new_state
 
     def init_state(batch: int):
-        z = jnp.zeros((batch, h, dh), jnp.float32)
-        return SLSTMState(z, z, z, jnp.full((batch, h, dh), -1e30, jnp.float32))
+        # One zeros array per leaf: the serve engine donates the cache tree
+        # into its jitted steps, and XLA rejects donating a buffer shared by
+        # several leaves ("donate the same buffer twice").
+        z = lambda: jnp.zeros((batch, h, dh), jnp.float32)
+        return SLSTMState(z(), z(), z(),
+                          jnp.full((batch, h, dh), -1e30, jnp.float32))
 
     return init, apply, init_state

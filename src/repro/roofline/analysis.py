@@ -22,36 +22,24 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .dtypes import hlo_shape_elems_bytes
 from .hw import HW, V5E
 
 __all__ = ["collective_bytes", "model_flops", "param_count",
            "active_param_count", "RooflineReport"]
 
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
-    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16, "token": 0, "u4": 1,
-}
-
 _COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
              "collective-permute")
 
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-
 
 def _shape_bytes(shape_str: str) -> int:
-    """Bytes of one HLO shape like ``bf16[128,1024]{1,0}`` or a tuple."""
-    total = 0
-    for m in _SHAPE_RE.finditer(shape_str):
-        dt, dims = m.group(1), m.group(2)
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
+    """Bytes of one HLO shape like ``bf16[128,1024]{1,0}`` or a tuple.
+
+    Dtype widths come from the shared ``roofline.dtypes`` table — sub-byte
+    types (s4/u4 metadata, fp8) account at their real width instead of
+    silently contributing 0 bytes.
+    """
+    return hlo_shape_elems_bytes(shape_str)[1]
 
 
 def collective_bytes(hlo_text: str) -> dict:

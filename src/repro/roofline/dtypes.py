@@ -1,0 +1,84 @@
+"""One dtype→width table for every byte-accounting view of the system.
+
+Three consumers previously kept private (and mutually inconsistent) copies:
+``roofline/analysis.py`` (collective bytes from HLO text, missing fp8 and
+counting s4 as a full byte), ``roofline/hlo_parse.py`` (trip-count-aware HLO
+cost), and now ``analysis/memory.py`` (jaxpr-level liveness/bandwidth). All
+widths are stored in **bits** so sub-byte types (s4/u4 2:4-metadata indices,
+s2/u2 packed index pairs, future fp8 payloads) account correctly: a
+``u4[128,64]`` buffer is 4096 bytes, not 8192, and never silently 0.
+
+HLO spells dtypes one way (``bf16``, ``f8e4m3fn``), numpy/jax another
+(``bfloat16``, ``float8_e4m3fn``); both spellings resolve here.
+"""
+from __future__ import annotations
+
+import re
+
+__all__ = ["DTYPE_BITS", "HLO_SHAPE_RE", "hlo_shape_elems_bytes",
+           "dtype_bits", "aval_bytes"]
+
+#: HLO dtype name → storage bits. ``token`` is a scheduling edge, 0 bytes;
+#: ``pred`` is byte-stored.
+DTYPE_BITS = {
+    "pred": 8, "token": 0,
+    "s2": 2, "u2": 2, "s4": 4, "u4": 4, "s8": 8, "u8": 8,
+    "s16": 16, "u16": 16, "s32": 32, "u32": 32, "s64": 64, "u64": 64,
+    "f8e4m3": 8, "f8e4m3fn": 8, "f8e4m3fnuz": 8, "f8e4m3b11fnuz": 8,
+    "f8e5m2": 8, "f8e5m2fnuz": 8, "f8e3m4": 8,
+    "f16": 16, "bf16": 16, "f32": 32, "f64": 64,
+    "c64": 64, "c128": 128,
+}
+
+#: Matches ``dtype[dims]`` in HLO text, e.g. ``bf16[128,1024]{1,0}``.
+#: Alternation is longest-first so ``f8e4m3fn`` wins over any shorter prefix.
+HLO_SHAPE_RE = re.compile(
+    "(" + "|".join(sorted(DTYPE_BITS, key=len, reverse=True)) + r")\[([0-9,]*)\]")
+
+#: numpy/jax dtype-name → bits, for the widths ``dtype.itemsize`` misstates
+#: (jax stores int4 in byte containers) or lacks (bool is byte-stored).
+_NP_BITS = {
+    "bool": 8, "int2": 2, "uint2": 2, "int4": 4, "uint4": 4,
+    "float8_e4m3": 8, "float8_e4m3fn": 8, "float8_e4m3fnuz": 8,
+    "float8_e4m3b11fnuz": 8, "float8_e5m2": 8, "float8_e5m2fnuz": 8,
+    "float8_e3m4": 8, "bfloat16": 16,
+}
+
+
+def hlo_shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    """(elements, bytes) summed over every shape in one HLO shape string.
+
+    Handles tuples and layout suffixes by regex extraction. Unknown dtype
+    names cannot occur: the regex only matches table keys.
+    """
+    elems, nbytes = 0, 0
+    for m in HLO_SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        nbytes += (n * DTYPE_BITS[dt] + 7) // 8
+    return elems, nbytes
+
+
+def dtype_bits(dtype) -> int:
+    """Storage bits of a numpy/jax dtype (sub-byte aware)."""
+    name = getattr(dtype, "name", str(dtype))
+    got = _NP_BITS.get(name)
+    if got is not None:
+        return got
+    return getattr(dtype, "itemsize", 0) * 8
+
+
+def aval_bytes(aval) -> int:
+    """Storage bytes of one abstract value (0 for tokens/opaque avals)."""
+    shape = getattr(aval, "shape", None)
+    dtype = getattr(aval, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return (n * dtype_bits(dtype) + 7) // 8

@@ -26,38 +26,18 @@ import math
 import re
 from dataclasses import dataclass, field
 
-__all__ = ["analyze_hlo", "HloCost"]
+from .dtypes import HLO_SHAPE_RE as _SHAPE_RE
+from .dtypes import hlo_shape_elems_bytes as _shape_elems_bytes
 
-_DTYPE_BYTES = {
-    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
-    "s16": 2, "u16": 2, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16, "token": 0,
-}
+__all__ = ["analyze_hlo", "HloCost"]
 
 _COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
          "collective-permute")
 
-_SHAPE_RE = re.compile(r"(f8e4m3fn|f8e5m2|[a-z]+[0-9]+|pred|token)\[([0-9,]*)\]")
 _COMP_HDR = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(.*\{\s*$")
 _INSTR = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
 _CALLED_MULTI = re.compile(r"(body|condition|to_apply)=%?([\w\.\-]+)")
 _TRIP_CFG = re.compile(r"known_trip_count\D+(\d+)")
-
-
-def _shape_elems_bytes(shape_str: str):
-    elems, nbytes = 0, 0
-    for m in _SHAPE_RE.finditer(shape_str):
-        dt, dims = m.group(1), m.group(2)
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        elems += n
-        nbytes += n * _DTYPE_BYTES[dt]
-    return elems, nbytes
 
 
 @dataclass
@@ -71,6 +51,11 @@ class _Instr:
 @dataclass
 class HloCost:
     flops: float = 0.0
+    #: FLOPs with every while body counted ONCE — XLA cost_analysis
+    #: semantics. ``flops / flops_single_count`` isolates the trip-count
+    #: correction so reports can flag scan-heavy graphs whose raw numbers
+    #: undercount (the sLSTM caveat in roofline/analysis.py).
+    flops_single_count: float = 0.0
     bytes_accessed: float = 0.0
     collective_bytes: float = 0.0
     per_collective: dict = field(default_factory=dict)
@@ -86,6 +71,7 @@ class HloCost:
     def as_dict(self) -> dict:
         return {
             "flops": self.flops,
+            "flops_single_count": self.flops_single_count,
             "bytes_accessed": self.bytes_accessed,
             "collective_bytes": self.collective_bytes,
             "per_collective": self.per_collective,
@@ -336,17 +322,22 @@ def analyze_hlo(hlo: str) -> HloCost:
                 cost.bytes_by_opcode[key] = cost.bytes_by_opcode.get(key, 0) + bb
                 out_elems, _ = _shape_elems_bytes(ins.out_shape)
                 cost.flops += out_elems * mult  # ~1 flop/output element
+                cost.flops_single_count += out_elems
                 if fm and fm.group(1) in comps:
                     # dots inside fusions (at any nesting depth) contribute
                     # their full flops, scaled by the enclosing multiplicity
-                    f = _fused_dot_flops(fm.group(1), comps, shapes) * mult
+                    f1 = _fused_dot_flops(fm.group(1), comps, shapes)
+                    f = f1 * mult
                     cost.dot_flops += f
                     cost.flops += f
+                    cost.flops_single_count += f1
                 continue
             if op == "dot":
-                f = _dot_flops(ins, shapes) * mult
+                f1 = _dot_flops(ins, shapes)
+                f = f1 * mult
                 cost.dot_flops += f
                 cost.flops += f
+                cost.flops_single_count += f1
                 bb = _instr_bytes(ins, shapes) * mult
                 cost.bytes_accessed += bb
                 cost.bytes_by_opcode["dot"] = cost.bytes_by_opcode.get("dot", 0) + bb
@@ -356,6 +347,7 @@ def analyze_hlo(hlo: str) -> HloCost:
             # generic op: bytes + ~1 flop/elem
             out_elems, _ = _shape_elems_bytes(ins.out_shape)
             cost.flops += out_elems * mult
+            cost.flops_single_count += out_elems
             if op in _ALIASING:
                 bb = _aliasing_bytes(ins, shapes) * mult
             else:

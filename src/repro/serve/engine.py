@@ -125,7 +125,8 @@ def _sample_tokens(lg, temps, topks, seeds, ntoks):
     is reproducible regardless of which slot it lands in or what shares the
     pool. All parameters are array contents — no per-request retrace.
     """
-    greedy = jnp.argmax(lg, axis=-1)
+    with jax.named_scope("serve_sample"):
+        greedy = jnp.argmax(lg, axis=-1)
 
     def sample(_):
         scaled = lg.astype(jnp.float32) / jnp.where(temps > 0, temps, 1.0)[:, None]
@@ -145,7 +146,8 @@ def _sample_tokens(lg, temps, topks, seeds, ntoks):
 
     # An all-greedy pool (the default) skips the O(slots·V log V) sort and
     # the discarded categorical draw at runtime — same single trace.
-    nxt = jax.lax.cond(jnp.any(temps > 0), sample, lambda _: greedy, None)
+    with jax.named_scope("serve_sample"):
+        nxt = jax.lax.cond(jnp.any(temps > 0), sample, lambda _: greedy, None)
     return nxt.astype(jnp.int32)
 
 
@@ -306,6 +308,12 @@ class ServeEngine(_EngineBase):
     # Effective only under the paged layout with optimistic admission on
     # all-attention stacks without a rolling window — see _sharing_ok.
     prefix_sharing: bool = True
+    # Donate the cache pytree into every jitted tick function: the engine's
+    # call sites all rebind ``self._caches`` to the returned tree immediately,
+    # so XLA can update KV pages in place instead of holding old + new cache
+    # copies live across a tick (halves steady-state cache footprint, and
+    # lets the static analyzer's peak-live budget credit the aliasing).
+    donate_caches: bool = True
 
     def __post_init__(self):
         super().__post_init__()
@@ -371,12 +379,17 @@ class ServeEngine(_EngineBase):
             with jax.named_scope("serve_adopt_prefix"):
                 return mdl.adopt_cache_prefix(caches, slot, length)
 
+        # caches arg index: 1 in the model tick functions, 0 in the two
+        # cache-only maintenance ops. Safe to donate — see ``donate_caches``.
+        dn1 = (1,) if self.donate_caches else ()
+        dn0 = (0,) if self.donate_caches else ()
         self._prefill_jit = jax.jit(_prefill_chunk_fn,
-                                    static_argnames=("fresh",))
-        self._finalize_jit = jax.jit(_finalize_fn)
-        self._decode_jit = jax.jit(_decode_fn)
-        self._cow_jit = jax.jit(_cow_fn)
-        self._adopt_jit = jax.jit(_adopt_fn)
+                                    static_argnames=("fresh",),
+                                    donate_argnums=dn1)
+        self._finalize_jit = jax.jit(_finalize_fn, donate_argnums=dn1)
+        self._decode_jit = jax.jit(_decode_fn, donate_argnums=dn1)
+        self._cow_jit = jax.jit(_cow_fn, donate_argnums=dn0)
+        self._adopt_jit = jax.jit(_adopt_fn, donate_argnums=dn0)
         self._sched: Scheduler | None = None
 
     # ------------------------------------------------------------------ run
