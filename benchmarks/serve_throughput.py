@@ -1,6 +1,7 @@
-"""Serving-throughput benchmarks: scheduling, KV-cache layout, prefix sharing.
+"""Serving-throughput benchmarks: scheduling, KV-cache layout, prefix
+sharing, paged-attention read path.
 
-Three sweeps share the harness:
+Four sweeps share the harness:
 
 1. **static vs continuous batching** — replays the same request trace
    (Poisson arrivals, mixed prompt lengths, mixed per-request generation
@@ -28,11 +29,17 @@ Three sweeps share the harness:
    at once. Writes ``BENCH_prefix_sharing.json`` with ``prefix_hit_rate``
    and ``concurrency_gain``.
 
+4. **gathered-row vs direct-pool attention reads** — the same paged layout
+   decoded through the XLA row-gather fallback and through the Pallas
+   paged-attention kernel, over cache lengths × page sizes: static
+   bytes/decode-token from the jaxpr analyzer next to timed tokens/s.
+   Writes ``BENCH_paged_attention.json``.
+
 Throughput counts only *useful* tokens (each request's own budget). Emits
 CSV rows through the shared harness; the fast-CI smoke (``--smoke`` /
 ``fast=True``) runs one arrival rate per quantize setting plus one pass of
-the paged and shared-prefix sweeps — ``scripts/test.sh --bench-smoke``
-validates all three artifacts.
+the paged, shared-prefix and paged-attention sweeps — ``scripts/test.sh
+--bench-smoke`` validates all four artifacts.
 
 Run directly (``python -m benchmarks.serve_throughput --smoke``) or via
 ``python -m benchmarks.run --only serve_throughput``.
@@ -319,6 +326,84 @@ def shared_prefix(fast: bool = True) -> None:
                  f"{payload['prefix_hit_rate']:.2f}, {gain:.1f}x admitted")
 
 
+def paged_attention(fast: bool = True) -> None:
+    """Gathered-row vs direct-pool decode attention over cache lengths ×
+    page sizes.
+
+    Both engines serve the identical paged layout; they differ only in how
+    decode reads KV. ``backend="xla"`` gathers the pool rows into a dense
+    ``(b, cache_len, kvh, dh)`` intermediate every tick; the Pallas kernel
+    (``backend="pallas_interpret"`` here — tracing and byte accounting are
+    identical to the TPU path, only the timed numbers measure the emulator)
+    reads pages in place through the page table. ``bytes_per_token`` is the
+    static analyzer's jaxpr accounting for one decode tick, which costs the
+    kernel's pallas_call at O(pages touched); ``scripts/test.sh
+    --bench-smoke`` cross-checks it against the first-principles floor
+    (every weight byte once + the KV pool read/written once) and fails if
+    the direct-pool path stops undercutting the gather path. Writes
+    ``BENCH_paged_attention.json``.
+    """
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    from repro.serve import ServeEngine
+
+    cfg = get_smoke_config("gpt2-small")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    slots, chunk, max_new = 2, 8, 3
+    cells = ([(64, 8), (64, 16), (128, 8), (128, 16)] if fast else
+             [(64, 8), (64, 16), (128, 8), (128, 16), (256, 16)])
+    rng = np.random.default_rng(3)
+    results = []
+    for cache_len, ps in cells:
+        prompts = [list(map(int, rng.integers(2, cfg.vocab_size, 12)))
+                   for _ in range(slots)]
+        row = {"cache_len": cache_len, "page_size": ps, "slots": slots,
+               "paths": {}}
+        for path, backend in (("gathered-row", "xla"),
+                              ("direct-pool", "pallas_interpret")):
+            eng = ServeEngine(model, params, backend=backend,
+                              cache_len=cache_len, prefill_chunk=chunk,
+                              eos=-1, max_slots=slots, cache_layout="paged",
+                              page_size=ps)
+            eng.generate(prompts, 2)        # warm compiles off the clock
+            t0 = time.perf_counter()
+            outs = eng.generate(prompts, max_new)
+            dt = time.perf_counter() - t0
+            st = _static_decode_stats(eng, slots)
+            row["paths"][path] = {
+                "backend": backend,
+                "tokens_per_s": sum(len(o) for o in outs) / max(dt, 1e-9),
+                "bytes_per_token": st["bytes_per_token"],
+                "analytic_bytes_per_token": st["analytic_bytes_per_token"],
+                "peak_live_bytes": st["peak_live_bytes"],
+            }
+        g = row["paths"]["gathered-row"]
+        d = row["paths"]["direct-pool"]
+        row["bytes_ratio"] = (g["bytes_per_token"]
+                              / max(d["bytes_per_token"], 1e-9))
+        results.append(row)
+        emit("paged_attention", f"L{cache_len}_ps{ps}", None,
+             derived=f"gather {g['bytes_per_token']:.3g} B/tok | direct "
+                     f"{d['bytes_per_token']:.3g} B/tok | "
+                     f"{row['bytes_ratio']:.2f}x")
+
+    payload = {"arch": "gpt2-small(smoke)", "prefill_chunk": chunk,
+               "slots": slots, "max_new": max_new, "results": results,
+               "note": ("tokens_per_s under pallas_interpret times the "
+                        "Pallas emulator, not TPU execution; bytes_per_token "
+                        "columns are backend-independent static accounting")}
+    out = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "BENCH_paged_attention.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    worst = min(r["bytes_ratio"] for r in results)
+    emit("paged_attention", "json", None,
+         derived=f"BENCH_paged_attention.json | gather/direct bytes "
+                 f">= {worst:.2f}x over {len(results)} cells")
+
+
 def main(fast: bool = True) -> None:
     from repro.configs import get_smoke_config
     from repro.models import build_model
@@ -386,6 +471,7 @@ def main(fast: bool = True) -> None:
     emit("serve_throughput", "json", None, derived="BENCH_serve_throughput.json")
     paged_kv(fast=fast)
     shared_prefix(fast=fast)
+    paged_attention(fast=fast)
 
 
 if __name__ == "__main__":

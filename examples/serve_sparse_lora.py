@@ -147,6 +147,29 @@ def main():
           f"(hit rate {hit_rate:.2f} incl. the leader); tokens identical to "
           f"cold decode")
 
+    # 7. Direct-pool paged attention + the block-shape autotuner. With a
+    # Pallas backend the decode tick skips the gathered-row KV read: the
+    # kernel streams pages straight from the shared pool through the page
+    # table (HBM traffic O(pages touched)), and greedy tokens stay bitwise
+    # identical to the XLA gather path above. Block shapes resolve
+    # explicit kwarg > committed autotune_cache.json > heuristic; the
+    # decision log shows which tier each call site actually used (a
+    # "stale-cache" source means re-run
+    # `python -m repro.kernels.autotune --warm`).
+    from repro.kernels import autotune
+
+    autotune.clear_decisions()
+    eng_direct = ServeEngine(model, state.params, cache_len=128,
+                             prefill_chunk=16, max_slots=4,
+                             cache_layout="paged", page_size=16, num_pages=16,
+                             backend="pallas_interpret")
+    direct = eng_direct.generate(stream, 8)
+    assert direct == [r.out for r in paged_reqs[:len(stream)]]
+    print("direct-pool kernel tokens identical to gathered-row XLA path")
+    for d in autotune.decisions():
+        if d.op == "paged_attention":
+            print(f"autotune: {d.op} [{d.source}] {d.blocks} x{d.count}")
+
 
 if __name__ == "__main__":
     main()

@@ -69,7 +69,8 @@ fi
 python -m pytest -x -q ${args[@]+"${args[@]}"}
 # Scheduler-throughput smoke: a bench that runs but emits no artifact (or an
 # artifact with no results) must turn the lane red, not silently pass.
-rm -f BENCH_serve_throughput.json BENCH_paged_kv.json BENCH_prefix_sharing.json
+rm -f BENCH_serve_throughput.json BENCH_paged_kv.json \
+      BENCH_prefix_sharing.json BENCH_paged_attention.json
 python -m benchmarks.serve_throughput --smoke
 python - <<'PY'
 import json
@@ -150,4 +151,40 @@ if pfx.get("concurrency_gain", 0) <= 1.0:
              f"than worst-case reservation ({pfx.get('concurrency_gain')})")
 print(f"scripts/test.sh: prefix-sharing smoke ok — hit rate "
       f"{pfx['prefix_hit_rate']:.2f}, {pfx['concurrency_gain']:.1f}x admitted")
+
+# Paged-attention read-path sweep: per (cache_len, page_size) cell the
+# direct-pool kernel's static bytes/decode-token must undercut the
+# gathered-row fallback (that gap *is* the kernel's reason to exist) and
+# stay within 2x of the analyzer's O(pages) floor. Both checks are traced,
+# not timed, so both are blocking.
+try:
+    with open("BENCH_paged_attention.json") as f:
+        pa = json.load(f)
+except (FileNotFoundError, json.JSONDecodeError) as e:
+    sys.exit(f"scripts/test.sh: paged-attention smoke emitted no usable "
+             f"JSON: {e}")
+rows = pa.get("results") or []
+if not rows or any("paths" not in r or
+                   set(r["paths"]) != {"gathered-row", "direct-pool"}
+                   for r in rows):
+    sys.exit(f"scripts/test.sh: malformed BENCH_paged_attention.json rows: "
+             f"{rows}")
+for r in rows:
+    cell = f"L{r['cache_len']}/ps{r['page_size']}"
+    g = r["paths"]["gathered-row"]["bytes_per_token"]
+    d = r["paths"]["direct-pool"]["bytes_per_token"]
+    ana = r["paths"]["direct-pool"]["analytic_bytes_per_token"]
+    if d >= g:
+        sys.exit(f"scripts/test.sh: direct-pool decode moves {d:.4g} B/token "
+                 f">= gathered-row {g:.4g} at {cell} — the kernel stopped "
+                 "eliminating the row gather")
+    ratio = d / ana
+    if not 0.5 <= ratio <= 2.0:
+        sys.exit(f"scripts/test.sh: direct-pool bytes/token {d:.4g} is "
+                 f"{ratio:.2f}x the O(pages) floor {ana:.4g} at {cell} — "
+                 "outside [0.5, 2]")
+worst = min(r["paths"]["gathered-row"]["bytes_per_token"]
+            / r["paths"]["direct-pool"]["bytes_per_token"] for r in rows)
+print(f"scripts/test.sh: paged-attention smoke ok — gather/direct bytes "
+      f">= {worst:.2f}x over {len(rows)} cells")
 PY

@@ -334,6 +334,43 @@ def _eqn_io_bytes(eqn) -> int:
     return b
 
 
+def _paged_attn_io_bytes(eqn) -> float:
+    """O(pages-touched) HBM bytes of the ``serve_paged_attn`` pallas_call.
+
+    The direct-pool kernel reads KV through the page table: each grid lane
+    streams only the ≤ ``b·max_pages`` pages its slot has mapped, never the
+    whole pool — that is the decode-bandwidth claim the budgets ratchet.
+    Pool operands are recognized by their leading ``num_pages`` axis (the
+    float 4-D K/V pools and the ``(num_pages, kv_heads)`` q8 scales) and
+    scaled by ``touched/num_pages``, where ``touched = b·max_pages`` comes
+    from the int32 page-table operand (the int32 2-D operand with the
+    *smallest* trailing dim — positions are ``(b, cache_len)``,
+    ``cache_len = max_pages·page_size``). Everything else (q, table,
+    positions) and the outputs stream in full. Falls back to full operand
+    sizes when the operand pattern doesn't match.
+    """
+    avals = [a.aval for a in eqn.invars]
+    pools = [a for a in avals
+             if getattr(a, "ndim", 0) == 4 and a.dtype.kind == "f"]
+    tables = [a for a in avals
+              if getattr(a, "ndim", 0) == 2 and a.dtype.kind == "i"]
+    if not pools or not tables:
+        return float(_eqn_io_bytes(eqn))
+    num_pages = max(int(a.shape[0]) for a in pools)
+    tbl = min(tables, key=lambda a: int(a.shape[1]))
+    touched = int(tbl.shape[0]) * int(tbl.shape[1])
+    frac = min(1.0, touched / num_pages) if num_pages else 1.0
+    b = 0.0
+    for a in avals:
+        ab = aval_bytes(a)
+        if getattr(a, "ndim", 0) >= 2 and int(a.shape[0]) == num_pages:
+            ab *= frac
+        b += ab
+    for v in eqn.outvars:
+        b += aval_bytes(v.aval)
+    return b
+
+
 @dataclass
 class _Accum:
     bytes_by_scope: dict = field(default_factory=dict)
@@ -405,7 +442,11 @@ def _collect(jaxpr: "jcore.Jaxpr", mult: float, acc: _Accum) -> None:
         if out_aval is not None and getattr(out_aval, "shape", None) is not None:
             desc = f"{prim} {getattr(out_aval.dtype, 'name', '?')}" \
                    f"{list(out_aval.shape)}"
-        acc.add(_scope_key(eqn), _eqn_io_bytes(eqn) * mult,
+        if prim == "pallas_call" and "serve_paged_attn" in scope_of(eqn):
+            io_bytes = _paged_attn_io_bytes(eqn)
+        else:
+            io_bytes = _eqn_io_bytes(eqn)
+        acc.add(_scope_key(eqn), io_bytes * mult,
                 _eqn_flops(eqn) * mult, desc)
 
 
@@ -617,6 +658,10 @@ class MemoryReport:
     diffs: list = field(default_factory=list)      # failing/hinting BudgetDiff
     check_failures: list = field(default_factory=list)
     check_notes: list = field(default_factory=list)
+    #: kernels.autotune.Decision log harvested while tracing — which block
+    #: shapes the traced graphs actually used and where they came from
+    #: (explicit kwarg / committed cache / heuristic / stale-cache).
+    autotune_decisions: list = field(default_factory=list)
     updated_path: str | None = None
 
     @property
@@ -637,8 +682,22 @@ class MemoryReport:
             if d.failures or (verbose and d.hints):
                 lines.append(d.render())
         lines += [f"  [paper-check] {f}" for f in self.check_failures]
+        # Stale autotune-cache entries always print (they mean the traced
+        # graphs silently ran on heuristic blocks, not the committed
+        # winners); the full decision log is verbose-only.
+        for d in self.autotune_decisions:
+            if d.source == "stale-cache":
+                lines.append(
+                    f"  [autotune] STALE cache entry for {d.op} "
+                    f"({d.key.split('|')[1]}) — heuristic used instead; "
+                    "re-run `python -m repro.kernels.autotune --warm`")
         if verbose:
             lines += [f"  [paper-check] ok: {n}" for n in self.check_notes]
+            for d in self.autotune_decisions:
+                if d.source != "stale-cache":
+                    lines.append(
+                        f"  [autotune] {d.op} [{d.source}] {d.blocks} "
+                        f"({d.key.split('|')[1]}) x{d.count}")
             for key, c in sorted(self.costs.items()):
                 lines.append(
                     f"  {key}: peak {c.peak_live_bytes:,}B, "
@@ -801,12 +860,19 @@ def run_memory_analysis(config: str, *, update: bool = False,
     """Measure one config's entry points, diff against its budget file,
     and run the paper's quantitative claims. ``update=True`` rewrites the
     budget file from the measurement instead of diffing."""
+    from repro.kernels import autotune
+
     from . import budget as budget_mod
     from .targets import AnalysisContext
 
     report = MemoryReport(config)
     ctx = AnalysisContext(config)
+    autotune.clear_decisions()
     costs = _budget_keyed_costs(ctx)
+    # Tracing above ran every kernel call site through choose_blocks();
+    # harvest which blocks were used and from which source so the report
+    # shows them next to the costs (stale cache entries surface loudly).
+    report.autotune_decisions = autotune.decisions()
     report.costs = {k: c for k, (c, _) in costs.items()}
 
     if update:

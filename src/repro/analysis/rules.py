@@ -438,6 +438,78 @@ class SingleHostSync(LintRule):
 
 
 # ---------------------------------------------------------------------------
+# paged-attn-direct
+# ---------------------------------------------------------------------------
+
+@register_rule
+class PagedAttnDirect(LintRule):
+    """Serve decode must read KV pages directly from the shared pool.
+
+    Two invariants over the traced serve-decode graph (interpret backend,
+    so the Pallas kernel is in play — see models/attention.py dispatch):
+
+    * the decode tick contains the ``serve_paged_attn`` scope — the Pallas
+      direct-pool kernel actually engaged; its absence means attention
+      silently fell back to the XLA row gather;
+    * no float intermediate takes the gathered-row shape
+      ``(b, eff_len, kv_heads, head_dim)`` — the O(b·cache_len) KV row
+      materialization (``pool[k_tbl].reshape(...)``) the kernel exists to
+      eliminate from decode HBM traffic.
+
+    Skipped when the engine has no paged KV to read (contiguous layout, or
+    a config with no attention blocks).
+    """
+    name = "paged-attn-direct"
+    requires = ("serve",)
+
+    def run(self, ctx):
+        cfg = ctx.graph_cfg
+        if not any(k in ("attn", "xattn") for k in cfg.block_pattern):
+            return []
+        eng = ctx._graph_engine
+        if not getattr(eng, "_paged", False):
+            return []
+        kvh = cfg.num_kv_heads or cfg.num_heads
+        dh = cfg.resolved_head_dim
+        row_shapes = {(b, eng._eff_len, kvh, dh)
+                      for b in (1, eng.max_slots)}
+        findings = []
+        for tr in ctx.trace_serve():
+            if tr.what != "serve-decode":
+                continue
+            scopes: set = set()
+            rows: set = set()
+
+            def visit(eqn, ins, outs, scopes=scopes, rows=rows):
+                scopes.add(scope_of(eqn))
+                for v in eqn.outvars:
+                    av = getattr(v, "aval", None)
+                    if (av is not None
+                            and tuple(getattr(av, "shape", ())) in row_shapes
+                            and str(av.dtype) in FLOAT_DTYPES):
+                        rows.add((eqn.primitive.name, tuple(av.shape),
+                                  scope_of(eqn)))
+                return None
+
+            walk_closed(tr.closed, [EMPTY] * len(tr.closed.jaxpr.invars),
+                        visit)
+            if not any("serve_paged_attn" in s for s in scopes):
+                findings.append(Finding(
+                    self.name, ctx.config_name, tr.what, "kernel-missing",
+                    "decode tick has no serve_paged_attn scope — attention "
+                    "is not reading KV pages directly from the pool"))
+            for prim, shape, scope in sorted(rows):
+                where = (f"{prim}@{'x'.join(map(str, shape))}"
+                         f"@{scope or 'unscoped'}")
+                findings.append(Finding(
+                    self.name, ctx.config_name, tr.what, where,
+                    "float intermediate materializes the gathered KV rows "
+                    f"{shape} — the O(b·cache_len) decode traffic the paged "
+                    "kernel eliminates"))
+        return findings
+
+
+# ---------------------------------------------------------------------------
 # sharding-coverage
 # ---------------------------------------------------------------------------
 

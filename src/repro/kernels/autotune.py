@@ -1,0 +1,467 @@
+"""Measured block-shape autotuner for the Pallas kernels.
+
+Replaces the guessed ``_fit_blocks`` defaults in ``kernels/ops.py`` with a
+three-level resolution order, applied per kernel call site:
+
+1. **Explicit kwargs** — a caller-passed ``block_*`` always wins (the
+   kernels' own divisibility asserts remain the final authority).
+2. **Committed cache** — ``autotune_cache.json`` (next to this module) maps
+   ``(op, shapes, dtypes, backend)`` keys to winning block dicts. Entries
+   are produced by :func:`search` (roofline-costed) or
+   :func:`measure_candidates` (timed on real hardware via the CLI below)
+   and checked in, so every host resolves the same blocks. A **stale**
+   entry — one whose blocks are no longer legal for the shape (dims
+   changed, constraint tightened) — is *ignored*, the heuristic result is
+   used, and the decision log marks it ``stale-cache``, which
+   ``repro.analysis --what memory`` and ``launch/dryrun.py`` surface.
+3. **Heuristic** — the divisor-fitting defaults (:func:`fit_block`, the
+   fixed version of the old ``ops._fit_block``: a prime/awkward dim now
+   takes the next divisor *above* the target instead of degenerating to
+   block size 1).
+
+Cost model (:func:`search`): enumerate legal candidates — divisors of each
+dim (respecting the q8 scale-group constraint and N:M multiples via
+``k_multiple``), drop any whose resident blocks overflow
+``roofline.hw.vmem_bytes`` (×2 for double buffering) — then score
+``max(bytes_streamed / hbm_bw, flops / peak_flops)`` plus a per-grid-step
+pipeline overhead. Bytes include operand *reloads*: with grid
+``(b/bb, o/bo, k/bk)``, the activation block re-streams once per output
+column block and the weight block once per batch block, so bigger blocks
+trade VMEM for bandwidth — exactly the tradeoff the old fixed targets
+guessed at.
+
+Every resolution is appended to a process-wide **decision log**
+(:func:`decisions`), keyed and deduplicated, recording the source
+(``explicit`` / ``cache`` / ``heuristic`` / ``stale-cache``) so analysis
+reports can show which blocks the traced graphs actually used.
+
+CLI::
+
+    python -m repro.kernels.autotune --warm            # roofline search over
+        # every shape the CI analysis traces touch; rewrites the cache JSON
+    python -m repro.kernels.autotune --warm --measure  # additionally time
+        # candidates on real hardware (TPU only) and pick the fastest
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+import json
+import math
+from dataclasses import dataclass, field
+from pathlib import Path
+
+__all__ = ["fit_block", "choose_blocks", "search", "decisions",
+           "clear_decisions", "load_cache", "cache_path",
+           "measure_candidates"]
+
+#: Per-grid-step pipeline overhead (s) in the roofline score. Not a claim
+#: about any one chip — just enough pressure to prefer fewer, larger blocks
+#: when bandwidth/compute terms tie.
+STEP_OVERHEAD_S = 2e-7
+
+#: Resident-block budget multiplier: in/out blocks are double-buffered.
+_VMEM_BUFFERING = 2
+
+_CACHE_FILE = "autotune_cache.json"
+
+
+def cache_path() -> Path:
+    return Path(__file__).with_name(_CACHE_FILE)
+
+
+@functools.lru_cache(maxsize=1)
+def _cache() -> dict:
+    try:
+        with open(cache_path()) as f:
+            return json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        return {}
+
+
+def load_cache() -> dict:
+    """The committed ``key -> blocks`` mapping (read once per process)."""
+    return _cache()
+
+
+def _reload_cache():
+    _cache.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# Decision log (read by repro.analysis --what memory and launch/dryrun.py)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Decision:
+    op: str
+    key: str
+    blocks: dict
+    source: str          # "explicit" | "cache" | "heuristic" | "stale-cache"
+    dims: dict = field(default_factory=dict)
+    count: int = 1
+
+
+_DECISIONS: dict[str, Decision] = {}
+
+
+def _record(op, key, blocks, source, dims):
+    d = _DECISIONS.get(key)
+    if d is not None and d.blocks == blocks and d.source == source:
+        d.count += 1
+        return
+    _DECISIONS[key] = Decision(op, key, dict(blocks), source, dict(dims))
+
+
+def decisions() -> list[Decision]:
+    """Deduplicated block-shape resolutions made so far in this process."""
+    return list(_DECISIONS.values())
+
+
+def clear_decisions() -> None:
+    _DECISIONS.clear()
+
+
+# ---------------------------------------------------------------------------
+# Divisor fitting (the fixed heuristic)
+# ---------------------------------------------------------------------------
+
+def _divisors(dim: int) -> list[int]:
+    out = []
+    for i in range(1, int(math.isqrt(dim)) + 1):
+        if dim % i == 0:
+            out.append(i)
+            if i != dim // i:
+                out.append(dim // i)
+    return sorted(out)
+
+
+def fit_block(dim: int, target: int, multiple: int = 1) -> int:
+    """Best divisor of ``dim`` that is % ``multiple`` == 0, preferring the
+    largest one ≤ ``target``.
+
+    Degenerate-tiling fix: when the best at-or-under-target divisor is tiny
+    (an awkward/prime ``dim`` — e.g. 131, or 262 whose only small divisor
+    is 2), fall *up* to the smallest conforming divisor above the target
+    instead, as long as it stays within 4× the target (VMEM headroom);
+    beyond that the small divisor is kept — a long grid is slow but
+    correct, while an oversized block can genuinely not fit.
+    """
+    if dim % multiple:
+        raise ValueError(
+            f"dimension {dim} is not a multiple of the N:M group size {multiple}")
+    divs = [d for d in _divisors(dim) if d % multiple == 0]
+    under = [d for d in divs if d <= target]
+    best = max(under) if under else 0
+    # Degenerate: nothing at/under target beats a quarter of the usable
+    # span. Primes land here (best == multiple or 1), as do 2·prime dims.
+    if best * 4 >= min(dim, target) and best >= multiple:
+        return best
+    over = [d for d in divs if target < d <= 4 * target]
+    if over:
+        return min(over)
+    return best if best >= max(multiple, 1) else min(dim, max(multiple, 1))
+
+
+# ---------------------------------------------------------------------------
+# Candidate enumeration + roofline cost
+# ---------------------------------------------------------------------------
+
+def _hw():
+    from repro.roofline.hw import V5E
+    return V5E
+
+
+def _esize(dtype) -> float:
+    import numpy as np
+
+    from repro.roofline.dtypes import dtype_bits
+    name = getattr(dtype, "name", str(dtype))
+    bits = dtype_bits(name) or dtype_bits(np.dtype(name))
+    return bits / 8
+
+
+def _matmul_dims(dims: dict) -> tuple:
+    return (dims["b"], dims["d_out"], dims["d_in"], dims.get("n", 1),
+            dims.get("m", 1), dims.get("k_multiple") or dims.get("m", 1))
+
+
+def _matmul_candidates(dims: dict) -> list[dict]:
+    b, d_out, d_in, n, m, km = _matmul_dims(dims)
+    bs = [d for d in _divisors(b) if d <= 512]
+    os_ = [d for d in _divisors(d_out) if d <= 1024]
+    ks = [d for d in _divisors(d_in) if d % km == 0 and d <= 4096]
+    # Keep the search tractable: at most the 8 largest options per axis.
+    return [dict(block_b=bb, block_o=bo, block_k=bk)
+            for bb, bo, bk in itertools.product(bs[-8:], os_[-8:], ks[-8:])]
+
+
+def _matmul_cost(blocks: dict, dims: dict, dtypes, hw) -> float | None:
+    """Roofline time for a blocked ``X(b,k) @ W_nm(o,k·n/m)^T`` sweep."""
+    b, d_out, d_in, n, m, km = _matmul_dims(dims)
+    bb, bo, bk = blocks["block_b"], blocks["block_o"], blocks["block_k"]
+    ex = _esize(dtypes[0])
+    ew = _esize(dtypes[1]) if len(dtypes) > 1 else ex
+    k_comp = d_in * n // m
+    bk_comp = bk * n // m
+    # Resident VMEM: x, w(+idx), f32 accumulator; double-buffered.
+    resident = (bb * bk * ex + bo * bk_comp * (ew + 0.5) + bb * bo * 4)
+    if resident * _VMEM_BUFFERING > hw.vmem_bytes:
+        return None
+    steps = (b // bb) * (d_out // bo) * (d_in // bk)
+    # x re-streams once per output-column block; w once per batch block.
+    bytes_moved = ((d_out // bo) * b * d_in * ex
+                   + (b // bb) * d_out * k_comp * (ew + 0.5)
+                   + b * d_out * 4)
+    flops = 2.0 * b * d_out * k_comp
+    return max(bytes_moved / hw.hbm_bw, flops / hw.peak_flops_bf16) \
+        + steps * STEP_OVERHEAD_S
+
+
+def _paged_attn_candidates(dims: dict) -> list[dict]:
+    return [dict(block_h=d) for d in _divisors(dims["kvh"])]
+
+
+def _paged_attn_cost(blocks: dict, dims: dict, dtypes, hw) -> float | None:
+    """Roofline time for one paged-attention sweep (see paged_attention.py).
+
+    KV bytes are O(pages touched) regardless of ``block_h``; what the knob
+    moves is grid-step count (fewer, bigger head blocks) vs VMEM residency.
+    """
+    bh = blocks["block_h"]
+    b, s, kvh, grp, dh = (dims["b"], dims["s"], dims["kvh"], dims["grp"],
+                          dims["dh"])
+    ps, mp = dims["page_size"], dims["max_pages"]
+    if kvh % bh:
+        return None
+    e = _esize(dtypes[0])
+    resident = (s * bh * grp * dh * e          # q block
+                + 2 * ps * bh * dh * e        # k + v page blocks
+                + bh * s * grp * (dh + 2) * 4)  # f32 acc + m + l scratch
+    if resident * _VMEM_BUFFERING > hw.vmem_bytes:
+        return None
+    steps = b * (kvh // bh) * mp
+    bytes_moved = (b * (kvh // bh) * mp * s * bh * grp * dh * e   # q reloads
+                   + 2 * b * mp * ps * kvh * dh * e               # kv pages
+                   + b * s * kvh * grp * dh * e)                  # out
+    flops = 4.0 * b * s * kvh * grp * dh * mp * ps
+    return max(bytes_moved / hw.hbm_bw, flops / hw.peak_flops_bf16) \
+        + steps * STEP_OVERHEAD_S
+
+
+_OPS = {
+    "nm_spmm": (_matmul_candidates, _matmul_cost),
+    "sparse_lora_matmul": (_matmul_candidates, _matmul_cost),
+    "paged_attention": (_paged_attn_candidates, _paged_attn_cost),
+}
+
+
+def _heuristic(op: str, dims: dict) -> dict:
+    if op == "paged_attention":
+        # Largest head block that fits VMEM: KV bytes don't depend on the
+        # choice, so fewer grid steps always win until residency bites.
+        hw = _hw()
+        for cand in sorted(_paged_attn_candidates(dims),
+                           key=lambda c: -c["block_h"]):
+            if _paged_attn_cost(cand, dims, ("bfloat16",), hw) is not None:
+                return cand
+        return dict(block_h=1)
+    b, d_out, d_in, n, m, km = _matmul_dims(dims)
+    return dict(block_b=fit_block(b, 128),
+                block_o=fit_block(d_out, 128),
+                block_k=fit_block(d_in, 512, km))
+
+
+def _legal(op: str, blocks: dict, dims: dict) -> bool:
+    """A cache entry is legal iff its blocks pass the op's cost filter
+    (divisibility + VMEM) for the current dims — the staleness gate."""
+    _, cost = _OPS[op]
+    try:
+        if op == "paged_attention":
+            ok = dims["kvh"] % blocks["block_h"] == 0
+        else:
+            b, d_out, d_in, n, m, km = _matmul_dims(dims)
+            ok = (b % blocks["block_b"] == 0 and d_out % blocks["block_o"] == 0
+                  and d_in % blocks["block_k"] == 0
+                  and blocks["block_k"] % km == 0)
+        return ok and cost(blocks, dims, ("bfloat16",), _hw()) is not None
+    except (KeyError, ZeroDivisionError, TypeError):
+        return False
+
+
+def shape_key(op: str, dims: dict, dtypes, backend: str) -> str:
+    dd = ",".join(f"{k}={dims[k]}" for k in sorted(dims)
+                  if dims[k] is not None)
+    dt = "x".join(str(d) for d in dtypes)
+    return f"{op}|{dd}|{dt}|{backend}"
+
+
+def search(op: str, dims: dict, dtypes=("bfloat16",), hw=None) -> dict:
+    """Roofline-costed best legal candidate (falls back to the heuristic
+    when every candidate is filtered out)."""
+    cands, cost = _OPS[op]
+    hw = hw or _hw()
+    best, best_c = None, float("inf")
+    for cand in cands(dims):
+        c = cost(cand, dims, dtypes, hw)
+        if c is not None and c < best_c:
+            best, best_c = cand, c
+    return best if best is not None else _heuristic(op, dims)
+
+
+def choose_blocks(op: str, dims: dict, *, block_kw: dict | None = None,
+                  dtypes=("bfloat16",), backend: str = "pallas") -> dict:
+    """Resolve block shapes: explicit kwargs > committed cache > heuristic.
+
+    ``block_kw`` entries always pass through untouched (partial overrides
+    merge over the resolved base). Returns a dict ready to splat into the
+    kernel call; the resolution is recorded in the decision log.
+    """
+    block_kw = dict(block_kw or {})
+    key = shape_key(op, dims, dtypes, backend)
+    needed = set(_heuristic(op, dims))
+    if needed <= set(block_kw):
+        _record(op, key, block_kw, "explicit", dims)
+        return block_kw
+    entry = load_cache().get(key)
+    if entry is not None:
+        if _legal(op, entry, dims):
+            out = {**entry, **block_kw}
+            _record(op, key, out, "cache", dims)
+            return out
+        _record(op, key, entry, "stale-cache", dims)
+    out = {**_heuristic(op, dims), **block_kw}
+    if entry is None or not _legal(op, entry, dims):
+        _record(op, key, out,
+                "heuristic" if entry is None else "stale-cache", dims)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Measured path (real hardware) + cache generation
+# ---------------------------------------------------------------------------
+
+def measure_candidates(make_call, candidates: list[dict], *,
+                       iters: int = 10) -> tuple[dict, float]:
+    """Time ``make_call(blocks)() `` per candidate, return (best, seconds).
+
+    ``make_call(blocks)`` must return a zero-arg callable producing a
+    ``jax.Array`` (jitted kernel invocation); one warmup call compiles, then
+    ``iters`` timed calls are block-until-ready'd. Only meaningful on real
+    hardware — interpret-mode timings measure the emulator.
+    """
+    import time
+
+    import jax
+    best, best_t = None, float("inf")
+    for blocks in candidates:
+        try:
+            fn = make_call(blocks)
+            jax.block_until_ready(fn())        # compile + warm
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn()
+            jax.block_until_ready(out)
+            dt = (time.perf_counter() - t0) / iters
+        except Exception:                      # illegal candidate on this hw
+            continue
+        if dt < best_t:
+            best, best_t = blocks, dt
+    if best is None:
+        raise RuntimeError("no candidate ran successfully")
+    return best, best_t
+
+
+def warm_cache(*, measure: bool = False, configs=("gpt2-small", "qwen2-72b",
+                                                  "recurrentgemma-9b")) -> dict:
+    """Regenerate cache entries for every shape the CI analysis traces touch.
+
+    Traces the serve/train entry points of ``configs`` (interpret backend —
+    tracing never executes), harvests the decision log for the distinct
+    ``(op, dims, dtypes, backend)`` keys that resolved, and replaces each
+    with the :func:`search` winner. With ``measure=True`` (TPU only) the
+    matmul shapes are additionally timed via :func:`measure_candidates` and
+    the measured winner is kept when it beats the roofline pick.
+    """
+    from repro.analysis.targets import AnalysisContext
+    clear_decisions()
+    for name in configs:
+        ctx = AnalysisContext(name, whats=("train", "serve"))
+        ctx.graph_traces()
+    entries = {}
+    for d in decisions():
+        dtypes = tuple(d.key.split("|")[2].split("x"))
+        entries[d.key] = search(d.op, d.dims, dtypes=dtypes)
+    if measure:
+        from . import ops
+        if ops.default_backend() != "pallas":
+            raise RuntimeError("--measure needs real TPU hardware")
+        entries.update(_measure_entries(entries))
+    return entries
+
+
+def _measure_entries(entries: dict) -> dict:
+    """Time matmul cache entries against their top roofline candidates."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from . import ops
+    out = {}
+    for key in entries:
+        op, dd, dt, backend = key.split("|")
+        if op not in ("nm_spmm", "sparse_lora_matmul"):
+            continue
+        dims = {k: int(v) for k, v in
+                (kv.split("=") for kv in dd.split(","))}
+        b, d_out, d_in = dims["b"], dims["d_out"], dims["d_in"]
+        n, m = dims.get("n", 2), dims.get("m", 4)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((b, d_in)), jnp.bfloat16)
+        from .ref import nm_prune_ref
+        w = jnp.asarray(rng.standard_normal((d_out, d_in)), jnp.bfloat16)
+        _, values, indices = nm_prune_ref(w, n=n, m=m)
+
+        def make_call(blocks, x=x, values=values, indices=indices, n=n, m=m):
+            return lambda: ops.nm_spmm(x, values, indices, n=n, m=m,
+                                       backend="pallas", **blocks)
+
+        cands, cost = _OPS[op]
+        hw = _hw()
+        scored = [(cost(c, dims, ("bfloat16",), hw), c) for c in cands(dims)]
+        top = [c for s, c in sorted((s, c) for s, c in scored
+                                    if s is not None)[:8]]
+        best, _ = measure_candidates(make_call, top)
+        out[key] = best
+    return out
+
+
+def _main(argv=None):
+    import argparse
+
+    # `python -m repro.kernels.autotune` executes this file as __main__ —
+    # a *second* module object with its own decision log, while the kernels
+    # record into the imported `repro.kernels.autotune`. Route everything
+    # through the canonical import or --warm harvests an empty log.
+    from repro.kernels import autotune as mod
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--warm", action="store_true",
+                    help="regenerate autotune_cache.json from the CI shapes")
+    ap.add_argument("--measure", action="store_true",
+                    help="time candidates on real hardware (TPU only)")
+    args = ap.parse_args(argv)
+    if not args.warm:
+        for k, v in sorted(mod.load_cache().items()):
+            print(f"{k}  ->  {v}")
+        return 0
+    entries = mod.warm_cache(measure=args.measure)
+    with open(mod.cache_path(), "w") as f:
+        json.dump(dict(sorted(entries.items())), f, indent=1, sort_keys=True)
+        f.write("\n")
+    mod._reload_cache()
+    print(f"wrote {len(entries)} entries to {mod.cache_path()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

@@ -7,10 +7,20 @@ validation on any host. The model's linear representations
 so flipping ``SlopeConfig.backend`` moves the whole model between XLA
 reference compute and the TPU kernels.
 
-Block shapes are auto-fitted to the operand dims when not given explicitly
-(largest divisor ≤ the MXU-friendly default, ``block_k`` kept a multiple of
-M), so the model path never trips the kernels' divisibility asserts on odd
-batch/feature sizes.
+Block shapes resolve through ``kernels/autotune.py`` in a fixed order —
+**explicit kwargs > committed autotune cache > heuristic** — at every kernel
+call site (``nm_spmm`` / ``nm_spmm_packed`` / ``sparse_lora_matmul`` and the
+paged-attention decode kernel). A caller-passed ``block_*`` always wins;
+otherwise the committed ``autotune_cache.json`` entry for
+``(op, shapes, dtypes, backend)`` is used when its blocks are still legal
+for the shape (stale entries are ignored and surfaced in the analysis
+reports); otherwise the divisor-fitting heuristic applies (largest divisor ≤
+the MXU-friendly target, ``block_k`` kept a multiple of M — and an awkward/
+prime dim takes the next divisor *above* the target instead of degenerating
+to block size 1). The model path never trips the kernels' divisibility
+asserts on odd batch/feature sizes, and
+``python -m repro.kernels.autotune --warm [--measure]`` regenerates the
+cache (roofline-costed, optionally timed on real hardware).
 
 Lint invariants (checked by ``repro.analysis``, rule no-dense-materialization):
 
@@ -52,7 +62,7 @@ import warnings
 import jax
 import jax.numpy as jnp
 
-from . import ref
+from . import autotune, ref
 from .nm_prune import nm_prune_pallas
 from .nm_spmm import index_pack_ratio, nm_spmm_pallas
 from .sparse_lora import sparse_lora_pallas
@@ -82,26 +92,21 @@ def resolve_backend(backend: str) -> str:
     return default_backend() if backend == "auto" else backend
 
 
-def _fit_block(dim: int, target: int, multiple: int = 1) -> int:
-    """Largest divisor of ``dim`` that is ≤ ``target`` and % ``multiple`` == 0."""
-    c = min(target, dim)
-    while c > 1:
-        if dim % c == 0 and c % multiple == 0:
-            return c
-        c -= 1
-    if dim % multiple:
-        raise ValueError(
-            f"dimension {dim} is not a multiple of the N:M group size {multiple}")
-    return min(dim, max(multiple, 1))
+# Divisor fitting lives in kernels/autotune.py (shared with the search);
+# re-exported here because nm_prune and tests reach for it by this name.
+_fit_block = autotune.fit_block
 
 
 def _fit_blocks(block_kw: dict, b: int, d_out: int, d_in: int, m: int,
-                k_multiple: int | None = None) -> dict:
-    kw = dict(block_kw)
-    kw.setdefault("block_b", _fit_block(b, 128))
-    kw.setdefault("block_o", _fit_block(d_out, 128))
-    kw.setdefault("block_k", _fit_block(d_in, 512, k_multiple or m))
-    return kw
+                k_multiple: int | None = None, *, op: str = "nm_spmm",
+                n: int = 1, dtypes=("bfloat16",),
+                backend: str = "pallas") -> dict:
+    """Resolve matmul block shapes: explicit kwargs > autotune cache >
+    heuristic (see ``kernels/autotune.py``)."""
+    dims = dict(b=b, d_out=d_out, d_in=d_in, n=n, m=m,
+                k_multiple=k_multiple or m)
+    return autotune.choose_blocks(op, dims, block_kw=block_kw, dtypes=dtypes,
+                                  backend=backend)
 
 
 def _q8_k_multiple(values, scales, n: int, m: int) -> int | None:
@@ -163,7 +168,9 @@ def nm_spmm(x, values, indices, *, n: int, m: int, backend: str = "auto",
         if b in ("pallas", "pallas_interpret"):
             block_kw = _fit_blocks(block_kw, x2.shape[0], values.shape[0],
                                    x2.shape[1], m,
-                                   k_multiple=_q8_k_multiple(values, scales, n, m))
+                                   k_multiple=_q8_k_multiple(values, scales, n, m),
+                                   op="nm_spmm", n=n,
+                                   dtypes=(x2.dtype, values.dtype), backend=b)
             values, scales = _q8_kernel_operands(values, scales,
                                                  block_kw["block_k"], n, m,
                                                  x2.dtype)
@@ -189,7 +196,9 @@ def nm_spmm_packed(x, values, idx_packed, *, n: int, m: int,
     k_comp = values.shape[-1]
     if b in ("pallas", "pallas_interpret"):
         per = index_pack_ratio(m)
-        kw = _fit_blocks(block_kw, x2.shape[0], d_out, x2.shape[1], m)
+        kw = _fit_blocks(block_kw, x2.shape[0], d_out, x2.shape[1], m,
+                         op="nm_spmm", n=n,
+                         dtypes=(x2.dtype, values.dtype), backend=b)
         if (kw["block_k"] * n // m) % per == 0:
             with jax.named_scope("slope_sparse_mm_packed"):
                 y = nm_spmm_pallas(x2, values, idx_packed, n=n, m=m,
@@ -213,7 +222,9 @@ def sparse_lora_matmul(x, values, indices, l, r, *, n: int, m: int,
         if b in ("pallas", "pallas_interpret"):
             block_kw = _fit_blocks(block_kw, x2.shape[0], values.shape[0],
                                    x2.shape[1], m,
-                                   k_multiple=_q8_k_multiple(values, scales, n, m))
+                                   k_multiple=_q8_k_multiple(values, scales, n, m),
+                                   op="sparse_lora_matmul", n=n,
+                                   dtypes=(x2.dtype, values.dtype), backend=b)
             values, scales = _q8_kernel_operands(values, scales,
                                                  block_kw["block_k"], n, m,
                                                  x2.dtype)

@@ -1,0 +1,250 @@
+"""Pallas TPU kernel: paged-attention decode — KV read directly from the pool.
+
+The paged KV layout (PR 5/8) scatters each slot's logical row across shared
+pool pages through a per-slot page table. The original read path gathered
+those pages back into a dense ``(b, cache_len, kvh, dh)`` logical row every
+decode tick — O(b · cache_len) HBM traffic per step, which is exactly the
+bandwidth the paged layout was supposed to save. This kernel removes the
+gather: KV pages stream **directly from the shared pool into VMEM**, one
+page-block per grid step, with the block index computed from the prefetched
+page table (``pltpu.PrefetchScalarGridSpec`` — the scalar table is resident
+before the body runs, so the BlockSpec ``index_map`` can turn
+``page_table[slot, page]`` into the pool block to DMA). Decode HBM traffic
+becomes O(pages touched per slot): q + table + positions + the touched pages,
+never a materialized logical row.
+
+Grid ``(slot, kv-head-block, kv-page)`` with the page (reduction) axis
+innermost; a running (max, denom, acc) online-softmax scratch is carried
+across the page axis — the same accumulator pattern as
+``kernels/flash_attention.py`` — initialized at page 0 and flushed (divide by
+the denom) at the last page.
+
+Masking reproduces the gathered-row reference *exactly*: the per-slot
+``positions`` row is the sole source of truth (``(kp <= qp) & (kp >= 0)``
+plus the sliding window), so unmapped (-1) table entries — clamped to page 0
+for the DMA, mirroring the gather path's wrap-to-an-arbitrary-page — only
+ever contribute position-masked ``NEG_INF`` scores, and inactive lanes
+(``decode_pos < 0`` ⇒ negative query positions) mask every key and produce
+finite garbage the engine's slot select discards. Masked scores underflow to
+exactly 0 after the exp in both paths.
+
+Numerical parity contract: both read paths keep the softmax weights in f32
+through the weights·V product and round to the activation dtype once, on the
+output (see the matching fallback in ``models/attention.py``), so the only
+divergence left is the fp *association* of the reductions (block-wise online
+softmax vs one row-wise softmax) — f32-resolution noise that almost never
+crosses a bf16 rounding boundary. The serve parity suite pins greedy tokens
+bitwise identical between the two paths across dense / GQA / SWA-rolling /
+mixed-recurrent architectures under streaming schedules. The one documented
+exception is capacity-routed MoE (mixtral): GShard dispatch couples every
+token in the batch through each expert's capacity buffer, so a 1-ulp
+attention difference can reroute a near-tied token and shift its whole
+suffix — those archs are pinned at teacher-forced logits tolerance
+(~1e-5) instead of token equality.
+
+GQA runs natively: q keeps its ``(b, s, kvh, grp, dh)`` shape and each grid
+step contracts a ``(block_h, s·grp, dh) × (block_h, page_size, dh)`` batched
+dot. ``s ≥ 1`` is supported because chunked prefill reuses the decode branch
+(batch-1, ``s = prefill_chunk``).
+
+``block_h`` (kv heads per grid step) is the autotuned knob — more heads per
+step amortize grid overhead against VMEM residency; ``kernels/autotune.py``
+picks it (explicit kwarg > committed cache > roofline heuristic).
+
+Dequant hook: ``kv_scales=(k_scales, v_scales)`` — per-page per-head f32
+absmax scales ``(num_pages, kvh)`` — streams tiny scale blocks through the
+same table-indexed index_map and multiplies them into the loaded page inside
+the kernel. This is the fusion point for q8 KV pages (next ROADMAP item):
+int8 pools plug in without restructuring the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["paged_attention_pallas", "paged_attention_ref"]
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, q_ref, pos_ref, qpos_ref, k_ref, v_ref, *rest,
+            scale: float, window: int, grp: int, np_grid: int,
+            has_scales: bool):
+    if has_scales:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        o_ref, acc_ref, m_ref, l_ref = rest
+        ks_ref = vs_ref = None
+    jb = pl.program_id(2)
+
+    @pl.when(jb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                               # (s, block_h, grp, dh)
+    s, block_h = q.shape[0], q.shape[1]
+    dh = q.shape[-1]
+    page = k_ref.shape[1]
+    # (block_h, s·grp, dh): one batched dot per head-block.
+    q2 = q.transpose(1, 0, 2, 3).reshape(block_h, s * grp, dh)
+    k = k_ref[0].transpose(1, 0, 2)            # (block_h, page, dh)
+    v = v_ref[0].transpose(1, 0, 2)
+    if ks_ref is not None:
+        # q8-KV hook: per-page per-head scales multiply the loaded block.
+        k = k.astype(jnp.float32) * ks_ref[0][:, None, None]
+        v = v.astype(jnp.float32) * vs_ref[0][:, None, None]
+        k = k.astype(q2.dtype)
+        v = v.astype(q2.dtype)
+    sc = jax.lax.dot_general(q2, k, (((2,), (2,)), ((0,), (0,))),
+                             preferred_element_type=jnp.float32)
+    # Mirror the gathered-row reference dtype flow bit-for-bit where it
+    # matters: scores are formed at the operand dtype (bf16 einsum output),
+    # scaled there, then widened to f32 for the masked softmax.
+    sc = (sc.astype(q2.dtype) * scale).astype(jnp.float32)
+
+    kp = pos_ref[0]                            # (page,) logical positions
+    qp = qpos_ref[0]                           # (s,) absolute query positions
+    qp2 = jnp.broadcast_to(qp[:, None, None], (s, grp, page))
+    qp2 = qp2.reshape(s * grp, page)
+    kp2 = jnp.broadcast_to(kp[None, :], (s * grp, page))
+    mask = (kp2 <= qp2) & (kp2 >= 0)
+    if window > 0:
+        mask &= (qp2 - kp2) < window
+    sc = jnp.where(mask[None], sc, NEG_INF)    # (block_h, s·grp, page)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
+    p = jnp.exp(sc - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    # Weights stay f32 through the ·V product (matching the gathered-row
+    # fallback, which also defers the single bf16 rounding to the output):
+    # rounding p to bf16 here would decorrelate the two paths by a bf16 ulp
+    # per element — enough to flip greedy argmax near ties.
+    acc_ref[...] = acc_ref[...] * corr[..., None] + jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(jb == np_grid - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        out = acc_ref[...] / l[..., None]      # (block_h, s·grp, dh)
+        out = out.reshape(block_h, s, grp, dh).transpose(1, 0, 2, 3)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_h", "interpret"))
+def paged_attention_pallas(
+    q: jax.Array,           # (b, s, kvh, grp, dh)
+    pool_k: jax.Array,      # (num_pages, page_size, kvh, dh)
+    pool_v: jax.Array,      # (num_pages, page_size, kvh, dh)
+    page_table: jax.Array,  # (b, max_pages) int32, -1 = unmapped
+    positions: jax.Array,   # (b, max_pages * page_size) int32, -1 = empty
+    qpos: jax.Array,        # (b, s) int32 absolute query positions
+    *,
+    window: int = 0,
+    block_h: int = 1,
+    kv_scales: tuple[jax.Array, jax.Array] | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Masked paged attention over pool pages. → (b, s, kvh, grp, dh).
+
+    ``kv_scales``: optional ``(k_scales, v_scales)`` pair of
+    ``(num_pages, kvh)`` f32 per-page per-head dequant scales (q8-KV hook).
+    """
+    b, s, kvh, grp, dh = q.shape
+    num_pages, page_size = pool_k.shape[:2]
+    max_pages = page_table.shape[1]
+    assert positions.shape == (b, max_pages * page_size), (
+        positions.shape, (b, max_pages * page_size))
+    assert kvh % block_h == 0, (kvh, block_h)
+    nh = kvh // block_h
+    scale = dh ** -0.5
+    tbl = jnp.asarray(page_table, jnp.int32)
+
+    # Unmapped (-1) entries clamp to page 0: finite garbage bytes whose every
+    # score the position mask sends to NEG_INF — the same contract as the
+    # gather path's negative-index wraparound.
+    def kv_map(bi, hi, ji, tbl):
+        return (jnp.maximum(tbl[bi, ji], 0), 0, hi, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, s, block_h, grp, dh),
+                     lambda bi, hi, ji, tbl: (bi, 0, hi, 0, 0)),
+        pl.BlockSpec((1, page_size), lambda bi, hi, ji, tbl: (bi, ji)),
+        pl.BlockSpec((1, s), lambda bi, hi, ji, tbl: (bi, 0)),
+        pl.BlockSpec((1, page_size, block_h, dh), kv_map),
+        pl.BlockSpec((1, page_size, block_h, dh), kv_map),
+    ]
+    args = [q, positions.astype(jnp.int32), qpos.astype(jnp.int32),
+            pool_k, pool_v]
+    if kv_scales is not None:
+        ks, vs = kv_scales
+        assert ks.shape == vs.shape == (num_pages, kvh), (ks.shape, vs.shape)
+        sc_map = lambda bi, hi, ji, tbl: (jnp.maximum(tbl[bi, ji], 0), hi)
+        in_specs += [pl.BlockSpec((1, block_h), sc_map),
+                     pl.BlockSpec((1, block_h), sc_map)]
+        args += [ks.astype(jnp.float32), vs.astype(jnp.float32)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, nh, max_pages),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, s, block_h, grp, dh),
+                               lambda bi, hi, ji, tbl: (bi, 0, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_h, s * grp, dh), jnp.float32),
+            pltpu.VMEM((block_h, s * grp), jnp.float32),
+            pltpu.VMEM((block_h, s * grp), jnp.float32),
+        ],
+    )
+    # Scope applied *inside* the jitted wrapper so the pallas_call equation
+    # itself carries the marker: analysis/memory.py keys its O(pages) byte
+    # accounting on it, and the paged-attn-direct lint rule asserts its
+    # presence in every traced decode tick.
+    with jax.named_scope("serve_paged_attn"):
+        return pl.pallas_call(
+            functools.partial(_kernel, scale=scale, window=window, grp=grp,
+                              np_grid=max_pages,
+                              has_scales=kv_scales is not None),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((b, s, kvh, grp, dh), q.dtype),
+            interpret=interpret,
+        )(tbl, *args)
+
+
+def paged_attention_ref(q, pool_k, pool_v, page_table, positions, qpos, *,
+                        window: int = 0,
+                        kv_scales=None) -> jax.Array:
+    """Gathered-row reference: materialize the logical row, masked softmax.
+
+    This is byte-for-byte the computation ``models/attention.py`` ran before
+    the kernel existed (and still runs on the XLA fallback) — the parity
+    tests pin the kernel against it.
+    """
+    b, s, kvh, grp, dh = q.shape
+    num_pages, ps = pool_k.shape[:2]
+    L = positions.shape[1]
+    if kv_scales is not None:
+        ks, vs = kv_scales
+        pool_k = (pool_k.astype(jnp.float32) * ks[:, None, :, None]).astype(q.dtype)
+        pool_v = (pool_v.astype(jnp.float32) * vs[:, None, :, None]).astype(q.dtype)
+    k_new = pool_k[page_table].reshape(b, L, kvh, dh)
+    v_new = pool_v[page_table].reshape(b, L, kvh, dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k_new.astype(q.dtype)) * dh**-0.5
+    kp = positions[:, None, None, None, :]
+    qp = qpos[:, None, None, :, None]
+    msk = (kp <= qp) & (kp >= 0)
+    if window > 0:
+        msk &= (qp - kp) < window
+    scores = jnp.where(msk, scores.astype(jnp.float32), NEG_INF)
+    attn = jax.nn.softmax(scores, axis=-1)
+    return (jnp.einsum("bhgqk,bkhd->bqhgd", attn,
+                       v_new.astype(jnp.float32)).astype(q.dtype))

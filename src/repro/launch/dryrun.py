@@ -41,6 +41,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import (abstract_caches, abstract_params,
                                 abstract_state, decode_input_specs,
                                 train_input_specs)
+from repro.kernels import autotune
 from repro.models import build_model
 from repro.analysis.hlo import scan_compiled_hlo
 from repro.roofline import RooflineReport, collective_bytes, model_flops
@@ -114,6 +115,7 @@ def _variant_kwargs(variant: str):
 def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str = "base",
              out_dir: str = OUT_DIR) -> dict:
     t_start = time.time()
+    autotune.clear_decisions()    # per-cell block-shape resolution log
     cfg = get_config(arch)
     shape = shape_by_name(shape_name)
     (model_kw, policy, remat, slope_repr, adapter_rank, zero1,
@@ -259,6 +261,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str = "base",
         "memory_analysis": mem,
         "collectives": coll,
         "roofline": rep.to_dict(),
+        # Block shapes the kernels resolved while lowering this cell, next
+        # to the roofline cost they feed: "stale-cache" sources mean the
+        # committed autotune_cache.json no longer fits these dims and the
+        # heuristic silently took over (re-run kernels.autotune --warm).
+        "autotune": [dict(op=d.op, source=d.source, blocks=d.blocks,
+                          dims=d.dims, count=d.count)
+                     for d in autotune.decisions()],
     })
     os.makedirs(out_dir, exist_ok=True)
     fname = f"{arch}__{shape_name}__{mesh_kind}__{variant}.json"
@@ -302,6 +311,10 @@ def main() -> None:
                     gap_note = (f" TRIP-GAP {ha['trip_count_gap']:+.0%} "
                                 f"(raw {ha['flops_raw_single_count']:.3e})"
                                 if ha["trip_gap_exceeds_10pct"] else "")
+                    n_stale = sum(1 for a in res.get("autotune", ())
+                                  if a["source"] == "stale-cache")
+                    if n_stale:
+                        gap_note += f" AUTOTUNE-STALE x{n_stale}"
                     print(f"[dryrun OK ] {tag}: compile {res['compile_s']:.1f}s "
                           f"flops/chip {r['hlo_flops']:.3e} (trip-corrected)"
                           f"{gap_note} "

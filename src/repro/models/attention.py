@@ -11,6 +11,18 @@ Design notes
 * **SWA / local attention** via position-window masking; decode at long
   context uses a **rolling cache** of ``window`` slots (Mistral-style), which
   is what makes mixtral/recurrentgemma long_500k cells feasible.
+* **Paged decode reads KV directly from the shared pool.** On the Pallas
+  backends the decode/chunked-prefill branch dispatches to
+  ``kernels/paged_attention.py`` (under the ``serve_paged_attn`` scope): KV
+  pages stream pool→VMEM through BlockSpec index_maps computed from the
+  prefetched page table, with the online-softmax accumulator carried across
+  the page axis — decode HBM traffic is O(pages touched per slot). On the
+  XLA backend (and for the contiguous layout) the gathered-logical-row
+  read below remains the reference fallback; the per-slot ``positions``
+  table is the sole masking source under every path, which is what keeps
+  greedy tokens bitwise identical across layouts *and* backends. The
+  kernel's ``block_h`` (kv heads per grid step) resolves through
+  ``kernels/autotune.py`` — explicit kwarg > committed cache > heuristic.
 * All projections are built by the SLoPe linear factory — pruning attention
   weights is exactly the paper's "prune Self-Attention modules" setting.
 """
@@ -23,6 +35,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SlopeConfig
+from repro.kernels import autotune, ops
+from repro.kernels.paged_attention import paged_attention_pallas
 from repro.sharding.specs import constrain, policy_has
 from .cache import (CacheLayout, SlotOps, register_cache_layout, tree_gather,
                     tree_scatter, tree_select)
@@ -426,13 +440,16 @@ def make_attention(cfg: ModelConfig, *, sparse: bool, cross: bool = False,
             qpos = decode_pos[:, None] + jnp.arange(s)  # (b, s) absolute positions
             pos_new = jax.vmap(lambda pr, pv, sl: jax.lax.dynamic_update_slice_in_dim(pr, pv, sl, 0)
                                )(cache.positions, qpos.astype(jnp.int32), slot)
+            out = None
             if isinstance(cache, PagedKVCache):
                 # Page-table-indexed path: the s written entries land on the
-                # slot's own pool pages; the read gathers the slot's KV
-                # blocks back through the table into the logical row layout,
-                # so the masked-softmax below is the *same computation* as
-                # the contiguous branch (bitwise — unmapped pages only ever
-                # contribute position-masked NEG_INF scores).
+                # slot's own pool pages. The read then either streams pages
+                # directly from the pool (Pallas kernel, below) or gathers
+                # the slot's KV blocks back through the table into the
+                # logical row layout — either way the masked softmax is the
+                # *same computation* as the contiguous branch (unmapped
+                # pages only ever contribute position-masked NEG_INF
+                # scores).
                 npages, ps = cache.pool_k.shape[:2]
                 start = jnp.clip(slot, 0, cache_len - s)   # dyn-update clamp
                 li = start[:, None] + jnp.arange(s)        # (b, s) logical idx
@@ -455,27 +472,52 @@ def make_attention(cfg: ModelConfig, *, sparse: bool, cross: bool = False,
                 pool_v = cache.pool_v.at[phys, li % ps].set(
                     v.astype(cache.pool_v.dtype), mode="drop")
                 new_cache = PagedKVCache(pool_k, pool_v, cache.page_table, pos_new)
-                # (b, max_pages, page, kvh, dh) -> logical (b, L, kvh, dh);
-                # -1 table entries wrap to an arbitrary page — finite garbage
-                # the position mask zeroes exactly.
-                b_tbl = cache.page_table
-                k_new = pool_k[b_tbl].reshape(b, cache_len, kvh, dh)
-                v_new = pool_v[b_tbl].reshape(b, cache_len, kvh, dh)
+                rb = ops.resolve_backend(cfg.slope.backend)
+                if rb in ("pallas", "pallas_interpret"):
+                    # Direct-pool read: pages stream into VMEM through the
+                    # prefetched page table; decode HBM traffic is O(pages
+                    # touched), never a materialized (b, L, kvh, dh) row.
+                    dims = dict(b=b, s=s, kvh=kvh, grp=grp, dh=dh,
+                                page_size=ps,
+                                max_pages=cache.page_table.shape[1])
+                    blocks = autotune.choose_blocks(
+                        "paged_attention", dims, dtypes=(str(q.dtype),),
+                        backend=rb)
+                    with jax.named_scope("serve_paged_attn"):
+                        out = paged_attention_pallas(
+                            q, pool_k, pool_v, cache.page_table, pos_new,
+                            qpos.astype(jnp.int32), window=window,
+                            interpret=(rb == "pallas_interpret"), **blocks)
+                else:
+                    # XLA fallback: gather the logical row
+                    # (b, max_pages, page, kvh, dh) -> (b, L, kvh, dh);
+                    # -1 table entries wrap to an arbitrary page — finite
+                    # garbage the position mask zeroes exactly.
+                    b_tbl = cache.page_table
+                    k_new = pool_k[b_tbl].reshape(b, cache_len, kvh, dh)
+                    v_new = pool_v[b_tbl].reshape(b, cache_len, kvh, dh)
             else:
                 k_new = jax.vmap(lambda ck, kn, sl: jax.lax.dynamic_update_slice_in_dim(ck, kn, sl, 0)
                                  )(cache.k, k.astype(cache.k.dtype), slot)
                 v_new = jax.vmap(lambda cv, vn, sl: jax.lax.dynamic_update_slice_in_dim(cv, vn, sl, 0)
                                  )(cache.v, v.astype(cache.v.dtype), slot)
                 new_cache = KVCache(k_new, v_new, pos_new)
-            scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k_new.astype(q.dtype)) * dh**-0.5
-            kp = pos_new[:, None, None, None, :]               # (b,1,1,1,cache)
-            qp = qpos[:, None, None, :, None]                  # (b,1,1,s,1)
-            msk = (kp <= qp) & (kp >= 0)
-            if window > 0:
-                msk &= (qp - kp) < window
-            scores = jnp.where(msk, scores.astype(jnp.float32), NEG_INF)
-            attn = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
-            out = jnp.einsum("bhgqk,bkhd->bqhgd", attn, v_new.astype(q.dtype))
+            if out is None:
+                scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k_new.astype(q.dtype)) * dh**-0.5
+                kp = pos_new[:, None, None, None, :]           # (b,1,1,1,cache)
+                qp = qpos[:, None, None, :, None]              # (b,1,1,s,1)
+                msk = (kp <= qp) & (kp >= 0)
+                if window > 0:
+                    msk &= (qp - kp) < window
+                scores = jnp.where(msk, scores.astype(jnp.float32), NEG_INF)
+                # Softmax weights stay f32 through the ·V product (one bf16
+                # rounding, on the output): keeps the gathered-row fallback
+                # and the Pallas direct-pool kernel numerically aligned to
+                # f32 resolution, which is what holds greedy tokens bitwise
+                # identical across the two read paths.
+                attn = jax.nn.softmax(scores, axis=-1)
+                out = jnp.einsum("bhgqk,bkhd->bqhgd", attn,
+                                 v_new.astype(jnp.float32)).astype(q.dtype)
         else:
             kpos = positions if kv_positions is None else kv_positions
             # Cross-attention is position-free; per-request (b, s) decode

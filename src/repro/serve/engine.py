@@ -217,7 +217,16 @@ class _EngineBase:
     (``slots * eff_len / page_size``); a *smaller* pool is the point: it
     converts HBM headroom into admitted concurrency. Models without KV
     caches (pure recurrent) ignore the layout — their O(1) states always
-    serve contiguously."""
+    serve contiguously.
+
+    ``backend`` overrides ``model.cfg.slope.backend`` for serving — the
+    kernel-dispatch knob (``"auto" | "xla" | "pallas" | "pallas_interpret"``)
+    that picks between the Pallas direct-pool paged-attention read and the
+    gathered-logical-row XLA fallback (see ``models/attention.py``). ``None``
+    keeps the model as built; a value rebuilds the decode stack from
+    ``cfg.replace(slope=...)`` before freezing, so one checkpoint can be
+    served under either read path (the parity tests and the seeded budget
+    regression both lean on this)."""
 
     model: Model
     params: dict
@@ -229,8 +238,16 @@ class _EngineBase:
     cache_layout: str = "contiguous"
     page_size: int = 16
     num_pages: int | None = None
+    backend: str | None = None
 
     def __post_init__(self):
+        if self.backend is not None and self.backend != self.model.cfg.slope.backend:
+            import dataclasses as _dc
+
+            from repro.models.model_zoo import build_model
+            cfg = self.model.cfg
+            self.model = build_model(cfg.replace(
+                slope=_dc.replace(cfg.slope, backend=self.backend)))
         self.prefill_chunk = min(self.prefill_chunk, self.cache_len)
         layout = get_cache_layout(self.cache_layout)   # validates the name
         cfg = self.model.cfg

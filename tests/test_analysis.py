@@ -376,8 +376,8 @@ def test_hlo_scan_clean_module_ok():
 
 def test_rule_registry_complete():
     assert available_rules() == ("dtype-drift", "no-dense-materialization",
-                                 "retrace-guard", "sharding-coverage",
-                                 "single-host-sync")
+                                 "paged-attn-direct", "retrace-guard",
+                                 "sharding-coverage", "single-host-sync")
 
 
 def test_unknown_rule_is_loud():
@@ -415,3 +415,27 @@ def test_expected_bwd1_findings_are_waived_not_absent(gpt2_report):
 
 def test_no_stale_allowlist_entries(gpt2_report):
     assert not gpt2_report.stale, [e.match for e in gpt2_report.stale]
+
+
+def test_paged_attn_direct_quiet_on_kernel_path(gpt2_report):
+    # the default (interpret-backend) engine reads pages directly from the
+    # pool: the rule must have nothing to say, waived or not
+    assert not [f for f in gpt2_report.findings
+                if f.rule == "paged-attn-direct"]
+
+
+def test_paged_attn_direct_fires_on_gather_path():
+    """Seeded regression: forcing the XLA gathered-row read path back into
+    the serve engine must trip the paged-attn-direct rule on both counts —
+    the kernel's scope vanishes from the decode tick, and the gathered
+    (b, eff_len, kvh, dh) float rows rematerialize."""
+    from repro.analysis.rules import PagedAttnDirect
+    from repro.analysis.targets import AnalysisContext
+
+    ctx = AnalysisContext("gpt2-small", whats=("serve",),
+                          engine_kwargs={"backend": "xla"})
+    findings = PagedAttnDirect().run(ctx)
+    assert any(f.where == "kernel-missing" for f in findings), findings
+    eff = ctx._graph_engine._eff_len
+    assert any(f"x{eff}x" in f.where for f in findings
+               if f.where != "kernel-missing"), findings

@@ -1,0 +1,144 @@
+"""Block-shape autotuner: divisor fitting, the explicit > cache > heuristic
+resolution order, staleness handling, and the committed cache's freshness.
+
+``fit_block`` is the fixed version of the old ``ops._fit_block``, whose
+degenerate tiling on awkward dims (a prime 131 tiled at block size 1 → a
+131-step grid) is the satellite bug this file pins. ``choose_blocks`` is the
+resolution front door every kernel call site goes through; its decision log
+is what ``repro.analysis --what memory`` and ``launch/dryrun.py`` surface.
+"""
+import pytest
+
+from repro.kernels import autotune
+from repro.kernels.autotune import choose_blocks, fit_block, search, shape_key
+
+
+# ---------------------------------------------------------------------------
+# fit_block: awkward dims no longer degenerate to unit tiles
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dim,target,multiple,expected", [
+    (128, 64, 1, 64),     # happy path: largest divisor <= target
+    (12, 8, 1, 6),        # 6 is fine (>= a quarter of the usable span)
+    (24, 16, 4, 12),      # multiple respected, 12 beats 8
+    # the degenerate cases the old heuristic tiled at size 1 or 2:
+    (131, 64, 1, 131),    # prime: fall up to the whole dim (one grid step)
+    (262, 128, 1, 131),   # 2*prime: smallest conforming divisor above target
+    (17, 16, 1, 17),      # prime just above target
+    (97, 32, 1, 97),      # prime within the 4x headroom of the target
+])
+def test_fit_block(dim, target, multiple, expected):
+    got = fit_block(dim, target, multiple)
+    assert got == expected
+    assert dim % got == 0 and got % multiple == 0    # always a legal tile
+
+
+def test_fit_block_keeps_small_divisor_beyond_vmem_headroom():
+    # 1021 is prime and > 4x the target: an oversized block may genuinely
+    # not fit VMEM, so the slow-but-correct unit tile is kept.
+    assert fit_block(1021, 128) == 1
+
+
+def test_fit_block_rejects_non_multiple_dim():
+    with pytest.raises(ValueError, match="multiple"):
+        fit_block(10, 8, multiple=4)
+
+
+# ---------------------------------------------------------------------------
+# choose_blocks: explicit > cache > heuristic, staleness, decision dedup
+# ---------------------------------------------------------------------------
+
+PA_DIMS = dict(b=2, s=1, kvh=4, grp=1, dh=16, page_size=8, max_pages=4)
+MM_DIMS = dict(b=8, d_out=64, d_in=64, n=2, m=4, k_multiple=4)
+
+
+@pytest.fixture(autouse=True)
+def _clean_log():
+    autotune.clear_decisions()
+    yield
+    autotune.clear_decisions()
+
+
+def _only_decision():
+    ds = autotune.decisions()
+    assert len(ds) == 1
+    return ds[0]
+
+
+def test_explicit_kwargs_always_win(monkeypatch):
+    monkeypatch.setattr(autotune, "load_cache",
+                        lambda: {shape_key("paged_attention", PA_DIMS,
+                                           ("bfloat16",), "pallas"):
+                                 dict(block_h=4)})
+    out = choose_blocks("paged_attention", PA_DIMS, block_kw=dict(block_h=1))
+    assert out == dict(block_h=1)
+    assert _only_decision().source == "explicit"
+
+
+def test_cache_entry_used_when_legal(monkeypatch):
+    key = shape_key("paged_attention", PA_DIMS, ("bfloat16",), "pallas")
+    monkeypatch.setattr(autotune, "load_cache",
+                        lambda: {key: dict(block_h=2)})
+    out = choose_blocks("paged_attention", PA_DIMS)
+    assert out == dict(block_h=2)
+    d = _only_decision()
+    assert (d.source, d.key) == ("cache", key)
+
+
+def test_stale_cache_entry_falls_back_to_heuristic(monkeypatch):
+    # block_h=3 no longer divides kvh=4: the staleness gate must ignore the
+    # entry, resolve via the heuristic, and flag the decision stale-cache so
+    # the analysis report tells the user to re-run --warm.
+    key = shape_key("paged_attention", PA_DIMS, ("bfloat16",), "pallas")
+    monkeypatch.setattr(autotune, "load_cache",
+                        lambda: {key: dict(block_h=3)})
+    out = choose_blocks("paged_attention", PA_DIMS)
+    assert PA_DIMS["kvh"] % out["block_h"] == 0
+    assert _only_decision().source == "stale-cache"
+
+
+def test_heuristic_when_cache_misses(monkeypatch):
+    monkeypatch.setattr(autotune, "load_cache", lambda: {})
+    out = choose_blocks("paged_attention", PA_DIMS)
+    # KV bytes are O(pages) regardless of block_h, so the heuristic takes
+    # the largest head block that fits VMEM: the whole kvh at smoke scale.
+    assert out == dict(block_h=PA_DIMS["kvh"])
+    assert _only_decision().source == "heuristic"
+
+
+def test_partial_explicit_merges_over_resolved_base(monkeypatch):
+    monkeypatch.setattr(autotune, "load_cache", lambda: {})
+    out = choose_blocks("nm_spmm", MM_DIMS, block_kw=dict(block_b=4))
+    assert out["block_b"] == 4                    # caller override kept
+    assert set(out) == {"block_b", "block_o", "block_k"}
+    assert MM_DIMS["d_out"] % out["block_o"] == 0
+    assert out["block_k"] % MM_DIMS["k_multiple"] == 0
+
+
+def test_decision_log_dedups_repeat_resolutions(monkeypatch):
+    monkeypatch.setattr(autotune, "load_cache", lambda: {})
+    for _ in range(3):
+        choose_blocks("paged_attention", PA_DIMS)
+    d = _only_decision()
+    assert d.count == 3
+    choose_blocks("paged_attention", dict(PA_DIMS, b=1))
+    assert len(autotune.decisions()) == 2         # distinct shape, new entry
+
+
+def test_search_returns_legal_candidate():
+    for op, dims in (("paged_attention", PA_DIMS), ("nm_spmm", MM_DIMS)):
+        blocks = search(op, dims)
+        assert autotune._legal(op, blocks, dims), (op, blocks)
+
+
+def test_committed_cache_entries_are_fresh():
+    """Every entry in the checked-in autotune_cache.json must still be legal
+    for the dims in its own key — a committed-then-stale entry means --warm
+    was skipped after a shape change."""
+    cache = autotune.load_cache()
+    assert cache, "committed autotune_cache.json is missing or empty"
+    for key, blocks in cache.items():
+        op, dd, _, _ = key.split("|")
+        dims = {k: int(v) for k, v in (kv.split("=") for kv in dd.split(","))}
+        assert autotune._legal(op, blocks, dims), (key, blocks)

@@ -300,6 +300,32 @@ def test_disabling_cache_donation_fails_budget():
     assert "live at peak:" in msg and "invar:" in msg and "pool_" in msg, msg
 
 
+def test_reintroducing_row_gather_fails_decode_budget():
+    """Seeded regression for the paged-attention kernel: forcing the XLA
+    gathered-row read path (``backend="xla"``) re-materializes the
+    (b, eff_len, kvh, dh) KV rows every decode tick. Against the committed
+    (direct-pool) budget that is a >5% bytes_moved regression — the ratchet
+    must reject it, so the O(pages) decode traffic can't silently revert."""
+    from repro.analysis.targets import AnalysisContext
+
+    ctx = AnalysisContext("gpt2-small", whats=("serve",),
+                          engine_kwargs={"backend": "xla"})
+    data = budget_mod.load_budget("gpt2-small")
+    tol = data.get("tolerance", 0.05)
+    for tr in ctx.trace_serve():
+        if tr.what != "serve-decode":
+            continue
+        cost = measure_trace(tr)
+        # the kernel scope is gone from the gather trace...
+        assert not any("serve_paged_attn" in s for s in cost.by_scope_bytes)
+        key = f"{cost.what}:{cost.repr_label}"
+        diff = budget_mod.compare(key, cost, data["entries"][key], tol)
+        # ...and the ratchet names the regression in bytes terms
+        assert any("bytes_moved" in m for m in diff.failures), diff.failures
+        return
+    pytest.fail("no serve-decode trace produced")
+
+
 def test_dense_equivalent_claims_nonvacuous():
     """The state comparison must charge the sparse side its metadata: the
     dense-equivalent totals have to exceed the stored totals by less than

@@ -1,0 +1,280 @@
+"""Paged-attention decode kernel: direct-pool reads vs the gathered-row
+reference, and engine-level greedy-token parity across read paths.
+
+Two layers of parity, mirroring the kernel's contract
+(``kernels/paged_attention.py`` module docstring):
+
+* **Kernel vs reference** (interpret mode): the Pallas kernel reading KV
+  pages directly from the shared pool must reproduce the gathered-row
+  reference over awkward geometries — GQA, sliding windows, s>1 chunks,
+  head blocking, dequant scales, unmapped (-1) pages, inactive lanes.
+  Both paths keep softmax weights f32 through the ·V product and round
+  once on the output, so active lanes agree to f32-association noise
+  (almost always bitwise in bf16).
+
+* **Engine vs engine** (greedy tokens): a ``backend="pallas_interpret"``
+  engine must emit *bitwise identical* greedy tokens to the
+  ``backend="xla"`` gather-path engine under streaming schedules —
+  staggered admission, shared-prefix adoption, COW forks, eviction/slot
+  reuse — across dense, GQA, SWA-rolling and mixed-recurrent
+  architectures. Capacity-routed MoE (mixtral) is the documented
+  exception: GShard capacity dispatch couples every batch token, so only
+  single-request decode is pinned bitwise there.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.kernels.paged_attention import (paged_attention_pallas,
+                                           paged_attention_ref)
+from repro.models import build_model
+from repro.serve import ServeEngine
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs gathered-row reference (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+def _case(seed, *, b, s, kvh, grp, dh, page_size, max_pages, extra_pages=3,
+          scales=False, inactive=(), dtype=jnp.bfloat16):
+    """Random pool state respecting the engine invariants: valid positions
+    only inside mapped pages, -1 table entries past each slot's context,
+    garbage bytes in unmapped pool pages."""
+    rng = np.random.default_rng(seed)
+    num_pages = b * max_pages + extra_pages
+    L = max_pages * page_size
+    q = jnp.asarray(rng.standard_normal((b, s, kvh, grp, dh)), dtype)
+    pool_k = jnp.asarray(
+        rng.standard_normal((num_pages, page_size, kvh, dh)), dtype)
+    pool_v = jnp.asarray(
+        rng.standard_normal((num_pages, page_size, kvh, dh)), dtype)
+    perm = rng.permutation(num_pages)
+    table = np.full((b, max_pages), -1, np.int32)
+    positions = np.full((b, L), -1, np.int32)
+    qpos = np.zeros((b, s), np.int32)
+    for i in range(b):
+        ctx = int(rng.integers(s, L + 1))        # stored KV entries
+        npg = -(-ctx // page_size)               # pages that ctx occupies
+        table[i, :npg] = perm[i * max_pages:i * max_pages + npg]
+        positions[i, :ctx] = np.arange(ctx)
+        # the queries are the last s stored tokens (decode/chunk semantics)
+        qpos[i] = ctx - s + np.arange(s)
+        if i in inactive:                        # engine: decode_pos < 0
+            qpos[i] = -1
+    kv_scales = None
+    if scales:
+        ks = jnp.asarray(0.5 + rng.random((num_pages, kvh)), jnp.float32)
+        vs = jnp.asarray(0.5 + rng.random((num_pages, kvh)), jnp.float32)
+        kv_scales = (ks, vs)
+    return (q, pool_k, pool_v, jnp.asarray(table), jnp.asarray(positions),
+            jnp.asarray(qpos), kv_scales)
+
+
+KERNEL_CASES = [
+    # (name, kwargs for _case, kwargs for the kernel)
+    ("decode-dense", dict(b=3, s=1, kvh=4, grp=1, dh=16, page_size=8,
+                          max_pages=6), {}),
+    ("decode-gqa", dict(b=3, s=1, kvh=2, grp=2, dh=16, page_size=8,
+                        max_pages=6), {}),
+    ("decode-swa", dict(b=3, s=1, kvh=2, grp=2, dh=16, page_size=8,
+                        max_pages=6), dict(window=16)),
+    ("chunk-s8", dict(b=2, s=8, kvh=4, grp=1, dh=16, page_size=8,
+                      max_pages=4), {}),
+    ("block-h2", dict(b=2, s=1, kvh=4, grp=2, dh=16, page_size=8,
+                      max_pages=4), dict(block_h=2)),
+    ("block-h4", dict(b=2, s=1, kvh=4, grp=1, dh=16, page_size=8,
+                      max_pages=4), dict(block_h=4)),
+    ("q8-scales", dict(b=2, s=1, kvh=4, grp=1, dh=16, page_size=8,
+                       max_pages=4, scales=True), {}),
+    ("small-pages", dict(b=2, s=1, kvh=2, grp=1, dh=32, page_size=4,
+                         max_pages=8), {}),
+    ("inactive-lane", dict(b=3, s=1, kvh=4, grp=1, dh=16, page_size=8,
+                           max_pages=6, inactive=(1,)), {}),
+]
+
+
+@pytest.mark.parametrize("name,ckw,kkw",
+                         KERNEL_CASES, ids=[c[0] for c in KERNEL_CASES])
+def test_kernel_matches_gathered_row_reference(name, ckw, kkw):
+    inactive = ckw.get("inactive", ())
+    q, pk, pv, tbl, pos, qpos, kv_scales = _case(7, **ckw)
+    out = paged_attention_pallas(q, pk, pv, tbl, pos, qpos,
+                                 kv_scales=kv_scales, interpret=True, **kkw)
+    ref = paged_attention_ref(q, pk, pv, tbl, pos, qpos,
+                              kv_scales=kv_scales,
+                              window=kkw.get("window", 0))
+    out_np, ref_np = np.asarray(out), np.asarray(ref)
+    assert np.isfinite(out_np).all()    # inactive lanes: garbage but finite
+    active = [i for i in range(q.shape[0]) if i not in inactive]
+    # f32-weight harmonization leaves only reduction-association noise:
+    # a bf16 ulp at most (the engine-level tests pin the tokens bitwise).
+    np.testing.assert_allclose(out_np[active].astype(np.float32),
+                               ref_np[active].astype(np.float32),
+                               rtol=1.6e-2, atol=1.6e-2)
+
+
+def test_kernel_decode_case_is_bitwise():
+    """The canonical decode geometry (the shape every tick runs) matches the
+    reference bit-for-bit — the contract the budget/bench comparisons and
+    the engine parity matrix rest on."""
+    q, pk, pv, tbl, pos, qpos, _ = _case(
+        3, b=3, s=1, kvh=4, grp=1, dh=16, page_size=8, max_pages=6)
+    out = paged_attention_pallas(q, pk, pv, tbl, pos, qpos, interpret=True)
+    ref = paged_attention_ref(q, pk, pv, tbl, pos, qpos)
+    assert (np.asarray(out) == np.asarray(ref)).all()
+
+
+def test_unmapped_page_bytes_never_leak():
+    """Scribbling over every pool page *not* referenced by the table leaves
+    the kernel output bit-identical: unmapped (-1) entries clamp to page 0
+    for the DMA but the position mask kills every score they produce."""
+    q, pk, pv, tbl, pos, qpos, _ = _case(
+        11, b=2, s=1, kvh=4, grp=1, dh=16, page_size=8, max_pages=4)
+    out = paged_attention_pallas(q, pk, pv, tbl, pos, qpos, interpret=True)
+    mapped = np.unique(np.asarray(tbl)[np.asarray(tbl) >= 0])
+    unmapped = [p for p in range(pk.shape[0]) if p not in mapped]
+    assert unmapped                     # the case must actually exercise it
+    pk2, pv2 = np.asarray(pk).copy(), np.asarray(pv).copy()
+    pk2[unmapped] = 1e4
+    pv2[unmapped] = -1e4
+    out2 = paged_attention_pallas(q, jnp.asarray(pk2, pk.dtype),
+                                  jnp.asarray(pv2, pv.dtype), tbl, pos, qpos,
+                                  interpret=True)
+    assert (np.asarray(out) == np.asarray(out2)).all()
+
+
+# ---------------------------------------------------------------------------
+# Engine-level bitwise greedy-token parity: direct-pool vs gather path
+# ---------------------------------------------------------------------------
+
+
+#: Architectures pinned bitwise (the capacity-MoE mixtral is pinned
+#: single-request only — see test_mixtral_single_request_parity).
+PARITY_ARCHS = ("gpt2-small",         # dense, full attention
+                "qwen2-72b",          # GQA
+                "swa-rolling",        # SWA rolling window + GQA (no MoE)
+                "recurrentgemma-9b")  # mixed recurrent + windowed attention
+
+
+def _parity_cfg(arch):
+    if arch == "swa-rolling":
+        # mixtral's geometry (rolling SWA window == cache_len, GQA) with the
+        # capacity-routed MoE removed: covers the SWA-rolling read path
+        # without the batch-coupled expert dispatch.
+        cfg = get_smoke_config("mixtral-8x22b")
+        return cfg.replace(name="swa-rolling", family="dense",
+                           num_experts=0, experts_per_token=0)
+    return get_smoke_config(arch)
+
+
+def _staggered(eng, prompts, max_new):
+    eng.start()
+    reqs = [eng.submit(prompts[0], max_new), eng.submit(prompts[1], max_new)]
+    n, ticks = 2, 0
+    while eng.step():
+        ticks += 1
+        if ticks in (2, 5, 9) and n < len(prompts):
+            reqs.append(eng.submit(prompts[n], max_new))
+            n += 1
+    while n < len(prompts):
+        reqs.append(eng.submit(prompts[n], max_new))
+        n += 1
+        eng.run()
+    return [r.out for r in reqs]
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_engine_parity_direct_pool_vs_gather(arch):
+    """Greedy tokens from the Pallas direct-pool engine are bitwise equal to
+    the XLA gather-path engine under a streaming schedule with staggered
+    admission, shared-prefix adoption, COW forks and slot reuse — across
+    multiple prompt sets (engines are reused: compile once per backend)."""
+    cfg = _parity_cfg(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    kw = dict(cache_len=64, prefill_chunk=8, max_slots=2, eos=-1,
+              cache_layout="paged", page_size=8, num_pages=16)
+    eng_x = ServeEngine(model, params, backend="xla", **kw)
+    eng_p = ServeEngine(model, params, backend="pallas_interpret", **kw)
+    assert eng_p.model.cfg.slope.backend == "pallas_interpret"
+
+    # Seeded prompt sets: plain mixed lengths, plus a shared 16-token prefix
+    # set (page-aligned) that drives prefix adoption + COW forks.
+    for seed in (0, 1):
+        rng = np.random.default_rng(seed)
+        plain = [list(map(int, rng.integers(2, cfg.vocab_size,
+                                            rng.integers(3, 14))))
+                 for _ in range(5)]
+        shared = list(map(int, rng.integers(2, cfg.vocab_size, 16)))
+        pfx = [shared + list(map(int, rng.integers(2, cfg.vocab_size, n)))
+               for n in (2, 5, 9, 3)]
+        for prompts in (plain, pfx):
+            outs_x = _staggered(eng_x, prompts, 6)
+            outs_p = _staggered(eng_p, prompts, 6)
+            assert outs_p == outs_x, f"{arch} seed={seed}"
+    if eng_p._sharing_ok():
+        # where prefix sharing is sound (all-attention, no rolling window),
+        # the shared-prefix sets must actually exercise the adoption path
+        assert eng_p.stats.prefix_hit_tokens > 0
+        assert eng_x.stats.prefix_hit_tokens == eng_p.stats.prefix_hit_tokens
+
+
+def test_mixtral_single_request_parity():
+    """Capacity-routed MoE: multi-lane decode is inherently batch-coupled
+    (GShard capacity buffers), so mixtral is pinned on *single-request*
+    greedy decode, where both read paths must agree bitwise."""
+    cfg = get_smoke_config("mixtral-8x22b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    kw = dict(cache_len=64, prefill_chunk=8, max_slots=1, eos=-1,
+              cache_layout="paged", page_size=8)
+    eng_x = ServeEngine(model, params, backend="xla", **kw)
+    eng_p = ServeEngine(model, params, backend="pallas_interpret", **kw)
+    for prompt in ([5, 6, 7], [9] * 11):
+        assert (eng_p.generate([prompt], 8) == eng_x.generate([prompt], 8))
+
+
+def test_decode_jaxpr_has_no_gathered_row_intermediate():
+    """Acceptance check from the kernel PR: the traced decode tick under the
+    Pallas backend contains no float (b, cache_len, kvh, dh) intermediate —
+    the gather materialization is gone, not merely renamed."""
+    cfg = get_smoke_config("gpt2-small")
+    model = build_model(cfg.replace(
+        slope=dataclasses.replace(cfg.slope, backend="pallas_interpret")))
+    params = model.init(jax.random.PRNGKey(0))
+    slots = 2
+    eng = ServeEngine(model, params, cache_len=64, prefill_chunk=8,
+                      max_slots=slots, cache_layout="paged", page_size=8)
+    eng.start(slots)
+    i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    closed = jax.make_jaxpr(
+        lambda p, c, t, po, a, te, tk, se, nt:
+            eng._decode_jit(p, c, t, po, a, te, tk, se, nt, None))(
+        eng.params, eng._caches, i32(slots), i32(slots),
+        jax.ShapeDtypeStruct((slots,), jnp.bool_),
+        jax.ShapeDtypeStruct((slots,), jnp.float32),
+        i32(slots), jax.ShapeDtypeStruct((slots,), jnp.uint32), i32(slots))
+    kvh = cfg.num_kv_heads or cfg.num_heads
+    dh = cfg.resolved_head_dim
+    bad = {(b, eng._eff_len, kvh, dh) for b in (1, slots)}
+    hits = []
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            for v in eqn.outvars:
+                av = getattr(v, "aval", None)
+                if (av is not None and tuple(av.shape) in bad
+                        and av.dtype.kind == "f"):
+                    hits.append((eqn.primitive.name, tuple(av.shape)))
+            for p in eqn.params.values():
+                sub = p.jaxpr if hasattr(p, "jaxpr") else p
+                if hasattr(sub, "eqns"):
+                    walk(sub)
+
+    walk(closed.jaxpr)
+    assert not hits, hits
